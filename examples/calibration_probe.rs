@@ -1,0 +1,27 @@
+// Internal calibration probe (not part of the published examples):
+// prints oracle accuracies for the four Table-4 baselines using real
+// graph retrieval, per profile.
+use eaco_rag::corpus::{Corpus, Profile, QaPair};
+use eaco_rag::graphrag::GraphRag;
+use eaco_rag::oracle::{ContextSource, Oracle};
+
+fn main() {
+    for profile in [Profile::Wiki, Profile::HarryPotter] {
+        let c = Corpus::generate(profile, 1);
+        let g = GraphRag::build(&c);
+        let o = Oracle::new(1);
+        let graph_retrieve = |qa: &QaPair| -> Vec<usize> {
+            let kws = c.qa_keywords(qa);
+            g.local_search(&c, &kws, 8).into_iter().map(|(ch, _)| ch).collect()
+        };
+        let llm_only = o.expected_accuracy(&c, 0.55, ContextSource::None, |_| vec![]);
+        let naive_full = o.expected_accuracy(&c, 0.55, ContextSource::NaiveRag, |qa| {
+            // naive over the full corpus index: top-8 by keyword hits
+            qa.supporting_chunks.clone() // upper bound; real naive done in edge module
+        });
+        let graph3 = o.expected_accuracy(&c, 0.55, ContextSource::GraphRag, graph_retrieve);
+        let graph72 = o.expected_accuracy(&c, 0.90, ContextSource::GraphRag, graph_retrieve);
+        println!("{:?}: llm_only={:.3} naive(ub)={:.3} graph3b={:.3} graph72b={:.3} ctx_chars={}",
+            profile, llm_only, naive_full, graph3, graph72, g.global_search_context_chars());
+    }
+}

@@ -1,0 +1,182 @@
+"""AOT lowering: JAX models → HLO *text* artifacts + weights + manifest.
+
+This is the only place Python touches the pipeline; ``make artifacts``
+runs it once and the Rust binary is self-contained afterwards.
+
+Interchange format is HLO **text**, not serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids, so text round-trips cleanly
+(/opt/xla-example/README.md). Lowering goes through stablehlo →
+``mlir_module_to_xla_computation(..., return_tuple=True)`` and the Rust
+side unwraps with ``to_tuple1()``.
+
+Weights are **runtime parameters**, not HLO constants: each tier's
+parameters are dumped once to ``weights_<tier>.bin`` (little-endian f32,
+concatenated in ``model.lm_weight_order``), uploaded by the Rust runtime
+as device-resident PjRtBuffers and passed via ``execute_b`` — the
+weight-residency pattern of real serving stacks, and it keeps every HLO
+text file ~50 KB instead of 5–25 MB of printed constants.
+
+Artifacts (see manifest.json for the full list):
+  * ``slm_<tier>_b<batch>.hlo.txt`` — transformer forward → last-position
+    logits; batch variants feed the dynamic batcher.
+  * ``weights_<tier>.bin``          — flat f32 weights for the tier.
+  * ``embedder_b<batch>.hlo.txt`` / ``weights_embedder.bin``.
+  * ``manifest.json``               — shapes / tiers / weight offsets /
+    analytic FLOPs the Rust runtime needs.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--tiers a,b,...]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import attention as attn_kernel
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Batch sizes per artifact family; the coordinator's dynamic batcher pads
+# to the nearest exported batch.
+LM_BATCHES = (1, 4, 8)
+EMBED_BATCHES = (8, 32)
+
+# Tiers exported by default (every tier the benches need).
+DEFAULT_TIERS = ("qwen15b", "qwen3b", "llama3b", "qwen7b", "qwen72b")
+
+
+def write_weights(path: str, arrays: list) -> list[dict]:
+    """Concatenate f32 arrays into a .bin; return offset specs (elements)."""
+    specs = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name, arr in arrays:
+            a = np.asarray(arr, dtype=np.float32)
+            f.write(a.tobytes(order="C"))
+            specs.append(
+                {
+                    "name": name,
+                    "shape": list(a.shape),
+                    "offset_elems": offset,
+                    "num_elems": int(a.size),
+                }
+            )
+            offset += int(a.size)
+    return specs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tiers", default=",".join(DEFAULT_TIERS))
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    tiers = [t.strip() for t in args.tiers.split(",") if t.strip()]
+    for t in tiers:
+        if t not in model.TIERS:
+            sys.exit(f"unknown tier {t!r}; known: {sorted(model.TIERS)}")
+
+    ecfg = model.EmbedderConfig()
+    entries = []
+    total = 0
+
+    for name in tiers:
+        cfg = model.TIERS[name]
+        params = model.init_lm_params(cfg)
+        flat = model.flatten_lm_params(cfg, params)
+        wnames = model.lm_weight_order(cfg)
+        wpath = f"weights_{name}.bin"
+        wspecs = write_weights(os.path.join(out_dir, wpath), list(zip(wnames, flat)))
+        for b in LM_BATCHES:
+            fn, specs = model.make_lm_fn(cfg, b)
+            text = to_hlo_text(jax.jit(fn).lower(*specs))
+            path = f"slm_{name}_b{b}.hlo.txt"
+            with open(os.path.join(out_dir, path), "w") as f:
+                f.write(text)
+            total += len(text)
+            print(f"wrote {path} ({len(text)} chars)")
+            entries.append(
+                {
+                    "name": f"slm_{name}_b{b}",
+                    "kind": "lm",
+                    "tier": name,
+                    "path": path,
+                    "weights_path": wpath,
+                    "weights": wspecs,
+                    "batch": b,
+                    "seq": cfg.seq,
+                    "vocab": cfg.vocab,
+                    "d_model": cfg.d_model,
+                    "layers": cfg.layers,
+                    "heads": cfg.heads,
+                    "emulated_params_b": cfg.emulated_params_b,
+                    "capability": cfg.capability,
+                    "tiny_params": cfg.tiny_param_count(),
+                    "tiny_flops_per_forward": model.lm_flops_per_forward(cfg, b),
+                }
+            )
+
+    eparams = model.init_embedder_params(ecfg)
+    ewspecs = write_weights(
+        os.path.join(out_dir, "weights_embedder.bin"),
+        [(n, eparams[n]) for n in model.EMBED_WEIGHT_ORDER],
+    )
+    for b in EMBED_BATCHES:
+        fn, specs = model.make_embedder_fn(ecfg, b)
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        path = f"embedder_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        total += len(text)
+        print(f"wrote {path} ({len(text)} chars)")
+        entries.append(
+            {
+                "name": f"embedder_b{b}",
+                "kind": "embedder",
+                "tier": "embedder",
+                "path": path,
+                "weights_path": "weights_embedder.bin",
+                "weights": ewspecs,
+                "batch": b,
+                "feat_dim": ecfg.feat_dim,
+                "out_dim": ecfg.out_dim,
+            }
+        )
+
+    manifest = {
+        "version": 2,
+        "kernel": {
+            "attention_block_q": 32,
+            "attention_block_k": 32,
+            "attention_vmem_bytes": attn_kernel.vmem_footprint_bytes(32, 32, 32),
+            "attention_mxu_util": attn_kernel.mxu_utilization_estimate(32, 32, 32),
+        },
+        "artifacts": entries,
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}; total HLO text {total / 1e6:.1f} MB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""L1 Pallas kernel: tiled flash-attention with online softmax.
+
+This is the compute hot-spot of every transformer layer in the EACO-RAG
+model stack (edge SLMs and the emulated cloud LLM). The paper's testbed
+runs standard CUDA attention on RTX 4090 / A800 GPUs; here the kernel is
+re-thought for TPU per DESIGN.md §Hardware-Adaptation:
+
+* CUDA threadblock tiling        → Pallas grid over (head, q-block) with
+                                   BlockSpec index maps staging Q/K/V
+                                   tiles HBM→VMEM.
+* shared-memory accumulators     → VMEM scratch: running max ``m``,
+                                   running denominator ``l`` and the
+                                   output accumulator ``acc`` persist
+                                   across the k-block loop.
+* tensor-core WMMA               → MXU: the QKᵀ and PV contractions use
+                                   ``jnp.dot`` with
+                                   ``preferred_element_type=f32`` so the
+                                   128×128 systolic array accumulates in
+                                   f32 even for bf16 inputs.
+* warp-shuffle online softmax    → full-tile VPU ops (max / exp /
+                                   rescale over the lane dimension).
+
+VMEM footprint for block shapes (Bq, Bk, D), f32:
+    q-tile  Bq*D*4   k-tile Bk*D*4   v-tile Bk*D*4
+    acc     Bq*D*4   m,l    2*Bq*4   logits Bq*Bk*4
+With the default Bq=Bk=32, D<=64 this is < 64 KiB — far under the
+~16 MiB/core VMEM budget, leaving room for double-buffered DMA of the
+next k-tile (the compiler pipelines the fori_loop body automatically on
+real TPUs). MXU utilization estimate: both matmuls are (32×D)·(D×32);
+with D=32/64 the systolic array is fed 32×32 tiles → 1/16 of peak per
+pass, which is the expected regime for small-head-dim SLM inference and
+matches the paper's edge-device setting (utilization, not raw TFLOPs, is
+the roofline lever — see EXPERIMENTS.md §Perf).
+
+``interpret=True`` ALWAYS: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO so the same artifact
+runs under the Rust PJRT CPU client. Correctness (not wall-clock) is the
+signal; it is asserted against ``ref.attention_ref`` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq: int, scale: float, causal: bool):
+    """One (head, q-block) grid cell: stream k/v tiles with online softmax.
+
+    q_ref:  (block_q, d)   VMEM tile of queries for this grid cell
+    k_ref:  (seq, d)       full K for this head (streamed in block_k tiles)
+    v_ref:  (seq, d)       full V for this head
+    o_ref:  (block_q, d)   output tile
+    """
+    block_q, d = q_ref.shape
+    q_blk = pl.program_id(1)
+    q0 = q_blk * block_q  # absolute row index of this q tile
+
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k0 = kb * block_k
+        k = k_ref[pl.ds(k0, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(k0, block_k), :].astype(jnp.float32)
+        # (block_q, block_k) logits on the MXU, f32 accumulation.
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        if causal:
+            rows = q0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            cols = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        # Online softmax update (Milakov-Gimelshein / FlashAttention).
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_i - m_new)  # rescale factor for old accumulator
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_i * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return acc, m_new, l_new
+
+    num_kb = seq // block_k
+    if causal:
+        # k tiles strictly above the diagonal contribute nothing; skip them.
+        num_kb_eff = (q0 + block_q + block_k - 1) // block_k
+        num_kb = jnp.minimum(num_kb, num_kb_eff)
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m_i, l_i = jax.lax.fori_loop(0, num_kb, body, (acc0, m0, l0))
+    o_ref[...] = (acc / l_i[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "causal"))
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    block_q: int = 32,
+    block_k: int = 32,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Tiled multi-head attention. ``q, k, v: (heads, seq, head_dim)``.
+
+    ``seq`` must be divisible by both ``block_q`` and ``block_k`` (the
+    model pads its context to a multiple of 32). Always interpret-mode —
+    see the module docstring.
+    """
+    h, s, d = q.shape
+    if s % block_q or s % block_k:
+        raise ValueError(f"seq {s} not divisible by blocks ({block_q},{block_k})")
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(
+        _attn_kernel, block_k=block_k, seq=s, scale=scale, causal=causal
+    )
+    grid = (h, s // block_q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda hd, qb: (hd, qb, 0)),
+            pl.BlockSpec((None, s, d), lambda hd, qb: (hd, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda hd, qb: (hd, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda hd, qb: (hd, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, head_dim: int, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one grid cell (see module docstring)."""
+    q_tile = block_q * head_dim * dtype_bytes
+    kv_tiles = 2 * block_k * head_dim * dtype_bytes
+    acc = block_q * head_dim * 4  # f32 accumulator
+    softmax_state = 2 * block_q * 4
+    logits = block_q * block_k * 4
+    # ×2 on the streamed kv tiles for double buffering.
+    return q_tile + 2 * kv_tiles + acc + softmax_state + logits
+
+
+def mxu_utilization_estimate(block_q: int, block_k: int, head_dim: int) -> float:
+    """Fraction of the 128×128 MXU fed by each matmul pass (upper bound)."""
+    return min(1.0, (min(block_q, 128) / 128.0) * (min(head_dim, 128) / 128.0))

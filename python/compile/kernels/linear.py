@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: tiled dense projection (matmul + bias).
+
+Used by the embedder MLP and the transformer output head. The tiling
+story mirrors ``attention.py``: grid over (m-blocks, n-blocks), the K
+reduction streamed through VMEM in ``block_k`` tiles with an f32
+accumulator, contraction on the MXU via ``dot_general`` with
+``preferred_element_type=f32``.
+
+VMEM per grid cell, f32: x-tile ``bm*bk*4``, w-tile ``bk*bn*4`` (×2 for
+double-buffering the streamed reduction), acc ``bm*bn*4`` — with the
+default (32, 128, 128) that is ~100 KiB, well inside VMEM.
+
+interpret=True always (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, block_k: int, kdim: int):
+    """One (m-block, n-block) output tile; stream the K reduction."""
+    bm, _ = x_ref.shape
+    _, bn = w_ref.shape
+
+    def body(kb, acc):
+        k0 = kb * block_k
+        x = x_ref[:, pl.ds(k0, block_k)].astype(jnp.float32)
+        w = w_ref[pl.ds(k0, block_k), :].astype(jnp.float32)
+        return acc + jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    acc0 = jnp.zeros((bm, bn), jnp.float32)
+    acc = jax.lax.fori_loop(0, kdim // block_k, body, acc0)
+    acc = acc + b_ref[...].astype(jnp.float32)[None, :]
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_m: int = 32,
+    block_n: int = 64,
+    block_k: int = 64,
+) -> jnp.ndarray:
+    """Tiled ``x @ w + b``. Shapes ``(m, k) @ (k, n) + (n,)``.
+
+    m, k, n must be divisible by their block sizes (model dims are chosen
+    as multiples of 32 — see model.py).
+    """
+    m, kdim = x.shape
+    kdim2, n = w.shape
+    assert kdim == kdim2, (kdim, kdim2)
+    if m % block_m or n % block_n or kdim % block_k:
+        raise ValueError(f"dims ({m},{kdim},{n}) not divisible by blocks "
+                         f"({block_m},{block_k},{block_n})")
+    kernel = functools.partial(_linear_kernel, block_k=block_k, kdim=kdim)
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, kdim), lambda mb, nb: (mb, 0)),
+            pl.BlockSpec((kdim, block_n), lambda mb, nb: (0, nb)),
+            pl.BlockSpec((block_n,), lambda mb, nb: (nb,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mb, nb: (mb, nb)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)

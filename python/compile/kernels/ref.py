@@ -1,0 +1,63 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground-truth implementations that the L1 kernels
+(`attention.py`, `linear.py`) are validated against in
+``python/tests/test_kernel.py``. They are intentionally written in the
+most direct jnp style (no tiling, no numerics tricks) so that a mismatch
+always indicts the kernel, not the reference.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Multi-head scaled dot-product attention, direct softmax.
+
+    Shapes: q, k, v are ``(heads, seq, head_dim)``; returns the same.
+    """
+    h, s, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, :, :], logits, -jnp.inf)
+    # Softmax in f32 regardless of input dtype for a stable oracle.
+    logits = logits.astype(jnp.float32)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("hqk,hkd->hqd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def linear_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Dense projection oracle: ``x @ w (+ b)`` with f32 accumulation.
+
+    Shapes: x ``(m, k)``, w ``(k, n)``, b ``(n,)`` → ``(m, n)``.
+    """
+    out = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm_ref(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """LayerNorm oracle over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def l2_normalize_ref(x: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    """Row-wise L2 normalization oracle."""
+    n = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True) + eps)
+    return x / n

@@ -1,0 +1,324 @@
+"""L2: the EACO-RAG model stack in JAX (build-time only).
+
+Two model families, both lowered to HLO text by ``aot.py`` and executed
+from the Rust coordinator via PJRT:
+
+* ``TransformerLM`` — a decoder-only transformer. Each *tier* is a tiny
+  network (64–192 d_model) that stands in for a Qwen2.5/Llama3.2 class
+  model of the paper (0.5B–72B). The tier's **emulated parameter count**
+  drives the Rust cost model (Pope et al. TFLOPs) and delay scaling; the
+  tiny network keeps the request path honest — every served token is a
+  real PJRT forward pass. Attention runs on the L1 Pallas flash-attention
+  kernel; the output head on the L1 tiled-linear kernel.
+
+* ``Embedder`` — feature-hashing n-gram embedder (the `all-MiniLM-L6-v2`
+  stand-in, DESIGN.md §1): L2-normalized hashed counts → 2-layer MLP →
+  L2-normalized 64-d sentence vector. The Rust side computes the hashed
+  counts (runtime::tokenizer) and calls this artifact for the query /
+  keyword similarity tests (>50% rule, paper §5).
+
+Weights are generated deterministically from a seed and **closed over as
+constants** at lowering time, so each artifact is fully self-contained
+(Rust feeds only token ids / hashed counts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention
+from .kernels.linear import linear
+
+
+# ---------------------------------------------------------------------------
+# Transformer LM
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TierConfig:
+    """One emulated model tier (see DESIGN.md §1 substitution table)."""
+
+    name: str               # e.g. "qwen3b"
+    layers: int
+    d_model: int            # multiple of 32 (head_dim fixed at 32)
+    d_ff: int               # multiple of 64
+    vocab: int              # multiple of 64
+    seq: int                # fixed context window, multiple of 32
+    emulated_params_b: float  # parameter count (billions) it stands in for
+    capability: float       # oracle capability score in [0,1], paper-calibrated
+    seed: int = 0
+
+    @property
+    def heads(self) -> int:
+        return self.d_model // 32
+
+    @property
+    def head_dim(self) -> int:
+        return 32
+
+    def tiny_param_count(self) -> int:
+        """Actual parameter count of the tiny stand-in network."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        # per block: 2×LN (4d) + qkvo (4d²) + mlp (2df + f + d)
+        per_layer = 4 * d * d + 2 * d * f + 5 * d + f
+        embed = v * d + self.seq * d
+        head = 2 * d + d * v + v  # final LN + output projection
+        return embed + self.layers * per_layer + head
+
+
+# The tier zoo. capability values are the oracle calibration knob
+# (oracle::calibration on the Rust side mirrors these names).
+TIERS: dict[str, TierConfig] = {
+    t.name: t
+    for t in [
+        TierConfig("qwen05b", layers=2, d_model=64,  d_ff=128, vocab=512, seq=64, emulated_params_b=0.5,  capability=0.30),
+        TierConfig("qwen15b", layers=2, d_model=64,  d_ff=192, vocab=512, seq=64, emulated_params_b=1.5,  capability=0.42),
+        TierConfig("qwen3b",  layers=3, d_model=96,  d_ff=256, vocab=512, seq=64, emulated_params_b=3.0,  capability=0.55),
+        TierConfig("llama3b", layers=3, d_model=96,  d_ff=256, vocab=512, seq=64, emulated_params_b=3.0,  capability=0.48, seed=7),
+        TierConfig("qwen7b",  layers=4, d_model=128, d_ff=320, vocab=512, seq=64, emulated_params_b=7.0,  capability=0.64),
+        TierConfig("qwen72b", layers=6, d_model=192, d_ff=448, vocab=512, seq=64, emulated_params_b=72.0, capability=0.90),
+    ]
+}
+
+
+def init_lm_params(cfg: TierConfig) -> dict:
+    """Deterministic parameter pytree for a tier (seeded, scaled init)."""
+    # NOTE: hash() of a str is salted per-process; use a stable digest.
+    name_digest = sum((i + 1) * b for i, b in enumerate(cfg.name.encode())) % 65536
+    key = jax.random.PRNGKey(cfg.seed * 1000003 + name_digest)
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+
+    def take(shape, scale):
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return jax.random.normal(sub, shape, jnp.float32) * scale
+
+    params = {
+        "embed": take((v, d), 0.02),
+        "pos": take((cfg.seq, d), 0.02),
+        "layers": [],
+        "ln_f_g": jnp.ones((d,), jnp.float32),
+        "ln_f_b": jnp.zeros((d,), jnp.float32),
+        "head_w": take((d, v), 1.0 / math.sqrt(d)),
+        "head_b": jnp.zeros((v,), jnp.float32),
+    }
+    for _ in range(cfg.layers):
+        params["layers"].append(
+            {
+                "ln1_g": jnp.ones((d,), jnp.float32),
+                "ln1_b": jnp.zeros((d,), jnp.float32),
+                "wq": take((d, d), 1.0 / math.sqrt(d)),
+                "wk": take((d, d), 1.0 / math.sqrt(d)),
+                "wv": take((d, d), 1.0 / math.sqrt(d)),
+                "wo": take((d, d), 1.0 / math.sqrt(d)),
+                "ln2_g": jnp.ones((d,), jnp.float32),
+                "ln2_b": jnp.zeros((d,), jnp.float32),
+                "w1": take((d, f), 1.0 / math.sqrt(d)),
+                "b1": jnp.zeros((f,), jnp.float32),
+                "w2": take((f, d), 1.0 / math.sqrt(f)),
+                "b2": jnp.zeros((d,), jnp.float32),
+            }
+        )
+    return params
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _block(cfg: TierConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """One pre-LN transformer block over the whole batch ``(b, s, d)``.
+
+    §Perf note: an earlier revision vmapped a per-sequence block; under
+    interpret-mode lowering that serialized the batch (b8 cost 1.46× of
+    8×b1 per row — EXPERIMENTS.md §Perf). Folding the batch into the
+    attention grid's leading dimension (b·heads) and into one big GEMM
+    per projection lets XLA batch the work properly.
+    """
+    b, s, d = x.shape
+    h = _layernorm(x, p["ln1_g"], p["ln1_b"])
+    flat = h.reshape(b * s, d)
+
+    def heads(proj):
+        # (b*s, d) -> (b, s, H, hd) -> (b, H, s, hd) -> (b*H, s, hd)
+        return (
+            proj.reshape(b, s, cfg.heads, cfg.head_dim)
+            .transpose(0, 2, 1, 3)
+            .reshape(b * cfg.heads, s, cfg.head_dim)
+        )
+
+    q = heads(flat @ p["wq"])
+    k = heads(flat @ p["wk"])
+    v = heads(flat @ p["wv"])
+    # L1 Pallas flash-attention kernel (causal); the grid's "head" axis
+    # carries batch·heads so the whole batch runs in one pallas_call.
+    # §Perf: 64×64 blocks (one q-tile per head at seq=64) halve the
+    # interpret-mode grid-cell count vs the 32×32 default while staying
+    # far below the VMEM budget (~100 KiB/cell).
+    attn = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    attn = (
+        attn.reshape(b, cfg.heads, s, cfg.head_dim)
+        .transpose(0, 2, 1, 3)
+        .reshape(b, s, d)
+    )
+    x = x + attn @ p["wo"]
+    h = _layernorm(x, p["ln2_g"], p["ln2_b"])
+    h = jax.nn.gelu(h @ p["w1"] + p["b1"])
+    return x + h @ p["w2"] + p["b2"]
+
+
+def lm_forward(cfg: TierConfig, params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Forward pass: ``tokens (batch, seq) int32`` → last-position logits
+    ``(batch, vocab) f32``.
+
+    The Rust generation loop greedy-decodes by sliding the fixed window,
+    so only the final position's logits are computed (§Perf: the head
+    projection runs on ``(batch, d)`` instead of ``(batch·seq, d)`` —
+    a seq-fold FLOP saving on the decode path).
+    """
+    b, s = tokens.shape
+    assert s == cfg.seq, (s, cfg.seq)
+    x = params["embed"][tokens] + params["pos"][None, :, :]
+    for layer in params["layers"]:
+        x = _block(cfg, layer, x)
+    x = _layernorm(x, params["ln_f_g"], params["ln_f_b"])
+    last = x[:, -1, :]  # (b, d)
+    # L1 tiled-linear kernel for the output head (b × d @ d × vocab).
+    return linear(last, params["head_w"], params["head_b"],
+                  block_m=b, block_n=64, block_k=32)
+
+
+LAYER_WEIGHT_NAMES = (
+    "ln1_g", "ln1_b", "wq", "wk", "wv", "wo",
+    "ln2_g", "ln2_b", "w1", "b1", "w2", "b2",
+)
+
+
+def lm_weight_order(cfg: TierConfig) -> list[str]:
+    """Canonical flat weight order shared with the Rust runtime.
+
+    The artifact's entry computation takes these as leading parameters
+    (tokens last). The Rust side uploads them once as device-resident
+    PjRtBuffers from ``weights_<tier>.bin`` and reuses them per call
+    (``execute_b``) — the real-serving weight-residency pattern, and it
+    keeps the HLO text free of multi-megabyte constants.
+    """
+    names = ["embed", "pos"]
+    for i in range(cfg.layers):
+        names += [f"layers.{i}.{n}" for n in LAYER_WEIGHT_NAMES]
+    names += ["ln_f_g", "ln_f_b", "head_w", "head_b"]
+    return names
+
+
+def flatten_lm_params(cfg: TierConfig, params: dict) -> list[jnp.ndarray]:
+    out = [params["embed"], params["pos"]]
+    for layer in params["layers"]:
+        out += [layer[n] for n in LAYER_WEIGHT_NAMES]
+    out += [params["ln_f_g"], params["ln_f_b"], params["head_w"], params["head_b"]]
+    return out
+
+
+def unflatten_lm_params(cfg: TierConfig, flat: list[jnp.ndarray]) -> dict:
+    it = iter(flat)
+    params = {"embed": next(it), "pos": next(it), "layers": []}
+    for _ in range(cfg.layers):
+        params["layers"].append({n: next(it) for n in LAYER_WEIGHT_NAMES})
+    params["ln_f_g"] = next(it)
+    params["ln_f_b"] = next(it)
+    params["head_w"] = next(it)
+    params["head_b"] = next(it)
+    return params
+
+
+def make_lm_fn(cfg: TierConfig, batch: int):
+    """Returns (fn, example_args): ``fn(*weights, tokens) -> (logits,)``.
+
+    Weights are runtime parameters (see ``lm_weight_order``); only shapes
+    are baked into the artifact.
+    """
+    params = init_lm_params(cfg)
+    flat = flatten_lm_params(cfg, params)
+
+    def fn(*args):
+        *weights, tokens = args
+        p = unflatten_lm_params(cfg, list(weights))
+        return (lm_forward(cfg, p, tokens),)
+
+    specs = tuple(jax.ShapeDtypeStruct(w.shape, w.dtype) for w in flat)
+    specs = specs + (jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32),)
+    return fn, specs
+
+
+def lm_flops_per_forward(cfg: TierConfig, batch: int) -> float:
+    """Analytic FLOPs of one *tiny-network* forward (not the emulated tier)."""
+    d, f, s, v = cfg.d_model, cfg.d_ff, cfg.seq, cfg.vocab
+    per_layer = 2 * s * d * d * 4 + 2 * s * s * d * 2 + 2 * s * d * f * 2
+    head = 2 * s * d * v
+    return float(batch * (cfg.layers * per_layer + head))
+
+
+# ---------------------------------------------------------------------------
+# Embedder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EmbedderConfig:
+    """Feature-hashing sentence embedder (MiniLM stand-in)."""
+
+    feat_dim: int = 256     # hashed n-gram buckets (runtime::tokenizer)
+    hidden: int = 128
+    out_dim: int = 64
+    seed: int = 42
+
+
+def init_embedder_params(cfg: EmbedderConfig) -> dict:
+    key = jax.random.PRNGKey(cfg.seed)
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (cfg.feat_dim, cfg.hidden), jnp.float32)
+        / math.sqrt(cfg.feat_dim),
+        "b1": jnp.zeros((cfg.hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (cfg.hidden, cfg.out_dim), jnp.float32)
+        / math.sqrt(cfg.hidden),
+        "b2": jnp.zeros((cfg.out_dim,), jnp.float32),
+    }
+
+
+def embedder_forward(cfg: EmbedderConfig, params: dict, feats: jnp.ndarray) -> jnp.ndarray:
+    """``feats (batch, feat_dim) f32`` → unit-norm ``(batch, out_dim)``.
+
+    The hashing trick preserves lexical-overlap geometry: two texts
+    sharing n-grams share feature buckets, so cosine similarity tracks
+    keyword overlap — exactly the signal the paper's >50%-match rule and
+    edge-selection overlap ratio need.
+    """
+    x = feats / jnp.sqrt(jnp.sum(feats * feats, axis=-1, keepdims=True) + 1e-8)
+    # L1 tiled-linear kernel for the first (wide) projection.
+    h = linear(x, params["w1"], params["b1"], block_m=8, block_n=64, block_k=64)
+    h = jnp.tanh(h)
+    out = h @ params["w2"] + params["b2"]
+    return out / jnp.sqrt(jnp.sum(out * out, axis=-1, keepdims=True) + 1e-8)
+
+
+EMBED_WEIGHT_ORDER = ("w1", "b1", "w2", "b2")
+
+
+def make_embedder_fn(cfg: EmbedderConfig, batch: int):
+    """``fn(w1, b1, w2, b2, feats) -> (vectors,)`` — weights as params."""
+    params = init_embedder_params(cfg)
+    flat = [params[n] for n in EMBED_WEIGHT_ORDER]
+
+    def fn(*args):
+        w1, b1, w2, b2, feats = args
+        p = {"w1": w1, "b1": b1, "w2": w2, "b2": b2}
+        return (embedder_forward(cfg, p, feats),)
+
+    specs = tuple(jax.ShapeDtypeStruct(w.shape, w.dtype) for w in flat)
+    specs = specs + (jax.ShapeDtypeStruct((batch, cfg.feat_dim), jnp.float32),)
+    return fn, specs

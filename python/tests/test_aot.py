@@ -1,0 +1,102 @@
+"""AOT pipeline tests: lowering, weight dump format, manifest coherence."""
+
+import json
+import os
+import struct
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def tiny_lowered():
+    cfg = model.TIERS["qwen15b"]
+    fn, specs = model.make_lm_fn(cfg, 1)
+    return cfg, aot.to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def test_hlo_text_is_text(tiny_lowered):
+    _, text = tiny_lowered
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_hlo_no_elided_constants(tiny_lowered):
+    """Weights are runtime params; no multi-MB (or elided) constants."""
+    _, text = tiny_lowered
+    assert "constant({...})" not in text, "elided constant would not round-trip"
+
+
+def test_hlo_entry_params_match_weights_plus_tokens(tiny_lowered):
+    cfg, text = tiny_lowered
+    n_weights = len(model.lm_weight_order(cfg))
+    entry = text[text.index("ENTRY"):]
+    body = entry[: entry.index("ROOT")]
+    n_params = body.count(" parameter(")
+    assert n_params == n_weights + 1  # weights then tokens
+
+
+def test_write_weights_layout():
+    arrays = [("a", np.arange(6, dtype=np.float32).reshape(2, 3)),
+              ("b", np.ones(4, dtype=np.float32))]
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "w.bin")
+        specs = aot.write_weights(path, arrays)
+        raw = open(path, "rb").read()
+    assert len(raw) == 10 * 4
+    assert specs[0] == {"name": "a", "shape": [2, 3], "offset_elems": 0, "num_elems": 6}
+    assert specs[1]["offset_elems"] == 6
+    vals = struct.unpack("<10f", raw)
+    assert vals[:6] == (0.0, 1.0, 2.0, 3.0, 4.0, 5.0)
+    assert vals[6:] == (1.0, 1.0, 1.0, 1.0)
+
+
+def test_manifest_against_artifacts_dir():
+    """If `make artifacts` has run, the manifest must be self-consistent."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(art, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    manifest = json.load(open(mpath))
+    assert manifest["version"] >= 2
+    for e in manifest["artifacts"]:
+        assert os.path.exists(os.path.join(art, e["path"])), e["path"]
+        wpath = os.path.join(art, e["weights_path"])
+        assert os.path.exists(wpath), e["weights_path"]
+        total_elems = sum(w["num_elems"] for w in e["weights"])
+        assert os.path.getsize(wpath) == total_elems * 4
+        # offsets are contiguous
+        off = 0
+        for w in e["weights"]:
+            assert w["offset_elems"] == off
+            assert w["num_elems"] == int(np.prod(w["shape"])) if w["shape"] else 1
+            off += w["num_elems"]
+
+
+def test_manifest_lm_entries_cover_default_tiers():
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(art, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    manifest = json.load(open(mpath))
+    lm = {(e["tier"], e["batch"]) for e in manifest["artifacts"] if e["kind"] == "lm"}
+    for tier in aot.DEFAULT_TIERS:
+        for b in aot.LM_BATCHES:
+            assert (tier, b) in lm
+
+
+def test_embedder_lowering_roundtrip_numeric():
+    """Lowered embedder == eager embedder on the same weights."""
+    cfg = model.EmbedderConfig()
+    fn, specs = model.make_embedder_fn(cfg, 8)
+    params = model.init_embedder_params(cfg)
+    flat = [params[n] for n in model.EMBED_WEIGHT_ORDER]
+    feats = jax.random.uniform(jax.random.PRNGKey(3), (8, cfg.feat_dim))
+    (eager,) = fn(*flat, feats)
+    compiled = jax.jit(fn)(*flat, feats)[0]
+    np.testing.assert_allclose(np.asarray(eager), np.asarray(compiled), rtol=1e-5, atol=1e-6)

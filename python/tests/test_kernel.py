@@ -1,0 +1,193 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps the shape/dtype space (as the session guide requires);
+a handful of pinned cases cover the exact configurations the models ship
+with. assert_allclose against ref.py is the core correctness signal.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.attention import (
+    flash_attention,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.linear import linear
+from compile.kernels.ref import attention_ref, linear_ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("heads,seq,dim", [(2, 64, 32), (3, 64, 32), (6, 64, 32), (1, 32, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_attention_pinned_configs(heads, seq, dim, causal):
+    key = jax.random.PRNGKey(heads * 100 + seq + dim + int(causal))
+    ks = jax.random.split(key, 3)
+    q, k, v = (rand(ki, (heads, seq, dim), jnp.float32) for ki in ks)
+    out = flash_attention(q, k, v, causal=causal)
+    ref = attention_ref(q, k, v, causal=causal)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    heads=st.integers(1, 4),
+    seq_blocks=st.integers(1, 4),
+    dim=st.sampled_from([16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref_hypothesis(heads, seq_blocks, dim, causal, seed):
+    seq = 32 * seq_blocks
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q, k, v = (rand(ki, (heads, seq, dim), jnp.float32) for ki in ks)
+    out = flash_attention(q, k, v, causal=causal)
+    ref = attention_ref(q, k, v, causal=causal)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_dtypes(dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q, k, v = (rand(ki, (2, 64, 32), dtype) for ki in ks)
+    out = flash_attention(q, k, v)
+    ref = attention_ref(q, k, v)
+    assert out.dtype == dtype
+    tol = 5e-2 if dtype == jnp.bfloat16 else 3e-5
+    assert_allclose(
+        np.asarray(out, dtype=np.float32), np.asarray(ref, dtype=np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_attention_large_logit_stability():
+    """Online softmax must survive logits that overflow a naive exp."""
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q, k, v = (rand(ki, (2, 64, 32), jnp.float32, scale=30.0) for ki in ks)
+    out = flash_attention(q, k, v)
+    ref = attention_ref(q, k, v)
+    assert np.isfinite(np.asarray(out)).all()
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_attention_causality():
+    """Future tokens must not influence past positions."""
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 4)
+    q, k, v = (rand(ki, (1, 64, 32), jnp.float32) for ki in ks[:3])
+    out1 = flash_attention(q, k, v, causal=True)
+    # Perturb the last 32 key/value rows; first 32 outputs must not move.
+    k2 = k.at[:, 32:, :].add(rand(ks[3], (1, 32, 32), jnp.float32))
+    v2 = v.at[:, 32:, :].add(1.0)
+    out2 = flash_attention(q, k2, v2, causal=True)
+    assert_allclose(np.asarray(out1[:, :32]), np.asarray(out2[:, :32]), rtol=1e-6, atol=1e-6)
+
+
+def test_attention_rejects_bad_blocks():
+    q = jnp.zeros((1, 48, 32), jnp.float32)
+    with pytest.raises(ValueError):
+        flash_attention(q, q, q, block_q=32, block_k=32)
+
+
+def test_attention_uniform_when_identical_keys():
+    """All-identical K rows ⇒ attention = mean of visible V rows."""
+    seq, dim = 32, 32
+    k = jnp.ones((1, seq, dim), jnp.float32)
+    v = jnp.arange(seq, dtype=jnp.float32)[None, :, None] * jnp.ones((1, seq, dim))
+    q = jnp.ones((1, seq, dim), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    expect = jnp.cumsum(jnp.arange(seq, dtype=jnp.float32)) / jnp.arange(1, seq + 1)
+    assert_allclose(np.asarray(out[0, :, 0]), np.asarray(expect), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk",
+    [
+        (64, 96, 512, 32, 64, 32),   # qwen3b output head
+        (64, 192, 512, 32, 64, 32),  # qwen72b output head
+        (8, 256, 128, 8, 64, 64),    # embedder first projection
+        (32, 256, 128, 8, 64, 64),   # embedder batch=32
+    ],
+)
+def test_linear_pinned_configs(m, k, n, bm, bn, bk):
+    key = jax.random.PRNGKey(m + k + n)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = rand(k1, (m, k), jnp.float32)
+    w = rand(k2, (k, n), jnp.float32)
+    b = rand(k3, (n,), jnp.float32)
+    out = linear(x, w, b, block_m=bm, block_n=bn, block_k=bk)
+    assert_allclose(np.asarray(out), np.asarray(linear_ref(x, w, b)), rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    mb=st.integers(1, 4),
+    kb=st.integers(1, 4),
+    nb=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_matches_ref_hypothesis(mb, kb, nb, seed):
+    m, k, n = 8 * mb, 64 * kb, 64 * nb
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = rand(k1, (m, k), jnp.float32)
+    w = rand(k2, (k, n), jnp.float32)
+    b = rand(k3, (n,), jnp.float32)
+    out = linear(x, w, b, block_m=8, block_n=64, block_k=64)
+    assert_allclose(np.asarray(out), np.asarray(linear_ref(x, w, b)), rtol=2e-5, atol=2e-5)
+
+
+def test_linear_rejects_bad_dims():
+    x = jnp.zeros((10, 64), jnp.float32)
+    w = jnp.zeros((64, 64), jnp.float32)
+    b = jnp.zeros((64,), jnp.float32)
+    with pytest.raises(ValueError):
+        linear(x, w, b, block_m=8, block_n=64, block_k=64)
+
+
+def test_linear_zero_bias_zero_input():
+    x = jnp.zeros((8, 64), jnp.float32)
+    w = jnp.ones((64, 64), jnp.float32)
+    b = jnp.zeros((64,), jnp.float32)
+    out = linear(x, w, b, block_m=8, block_n=64, block_k=64)
+    assert_allclose(np.asarray(out), np.zeros((8, 64), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# analytic perf model sanity
+# ---------------------------------------------------------------------------
+
+def test_vmem_footprint_under_budget():
+    # Default ship config must fit VMEM with lots of headroom.
+    assert vmem_footprint_bytes(32, 32, 32) < 64 * 1024
+    # Even an aggressive config stays under a 16 MiB/core budget.
+    assert vmem_footprint_bytes(256, 256, 128) < 16 * 1024 * 1024
+
+
+def test_mxu_estimate_monotone():
+    assert mxu_utilization_estimate(32, 32, 32) < mxu_utilization_estimate(128, 32, 128)
+    assert mxu_utilization_estimate(128, 32, 128) == 1.0

@@ -1,0 +1,152 @@
+"""L2 model tests: shapes, determinism, weight flattening, tier zoo."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return model.TIERS["qwen15b"]
+
+
+def test_tier_zoo_well_formed():
+    for name, cfg in model.TIERS.items():
+        assert cfg.name == name
+        assert cfg.d_model % 32 == 0, name
+        assert cfg.seq % 32 == 0, name
+        assert cfg.vocab % 64 == 0, name
+        assert 0.0 < cfg.capability <= 1.0, name
+        assert cfg.emulated_params_b > 0, name
+
+
+def test_tiers_ordered_by_capability():
+    """Within a family, more emulated params ⇒ more capability."""
+    fam = [model.TIERS[n] for n in ("qwen05b", "qwen15b", "qwen3b", "qwen7b", "qwen72b")]
+    caps = [t.capability for t in fam]
+    assert caps == sorted(caps)
+
+
+def test_llama3b_weaker_than_qwen3b():
+    # Paper §6.4: llama3.2-3B underperforms qwen2.5-3B on EACO-RAG.
+    assert model.TIERS["llama3b"].capability < model.TIERS["qwen3b"].capability
+
+
+def test_lm_forward_shape_and_finite(tiny_cfg):
+    params = model.init_lm_params(tiny_cfg)
+    tokens = jnp.zeros((2, tiny_cfg.seq), jnp.int32)
+    logits = model.lm_forward(tiny_cfg, params, tokens)
+    assert logits.shape == (2, tiny_cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_lm_forward_depends_on_last_token(tiny_cfg):
+    params = model.init_lm_params(tiny_cfg)
+    t1 = jnp.zeros((1, tiny_cfg.seq), jnp.int32)
+    t2 = t1.at[0, -1].set(5)
+    l1 = model.lm_forward(tiny_cfg, params, t1)
+    l2 = model.lm_forward(tiny_cfg, params, t2)
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-4
+
+
+def test_init_deterministic(tiny_cfg):
+    p1 = model.init_lm_params(tiny_cfg)
+    p2 = model.init_lm_params(tiny_cfg)
+    assert_allclose(np.asarray(p1["embed"]), np.asarray(p2["embed"]))
+    assert_allclose(
+        np.asarray(p1["layers"][0]["wq"]), np.asarray(p2["layers"][0]["wq"])
+    )
+
+
+def test_different_seeds_differ():
+    qwen = model.init_lm_params(model.TIERS["qwen3b"])
+    llama = model.init_lm_params(model.TIERS["llama3b"])
+    assert float(jnp.max(jnp.abs(qwen["embed"] - llama["embed"]))) > 1e-3
+
+
+def test_weight_flatten_roundtrip(tiny_cfg):
+    params = model.init_lm_params(tiny_cfg)
+    flat = model.flatten_lm_params(tiny_cfg, params)
+    names = model.lm_weight_order(tiny_cfg)
+    assert len(flat) == len(names)
+    back = model.unflatten_lm_params(tiny_cfg, flat)
+    tokens = jnp.ones((1, tiny_cfg.seq), jnp.int32)
+    assert_allclose(
+        np.asarray(model.lm_forward(tiny_cfg, params, tokens)),
+        np.asarray(model.lm_forward(tiny_cfg, back, tokens)),
+    )
+
+
+def test_weight_order_matches_manifest_names(tiny_cfg):
+    names = model.lm_weight_order(tiny_cfg)
+    assert names[0] == "embed" and names[1] == "pos"
+    assert names[-2] == "head_w" and names[-1] == "head_b"
+    assert f"layers.{tiny_cfg.layers - 1}.w2" in names
+
+
+def test_make_lm_fn_runs(tiny_cfg):
+    fn, specs = model.make_lm_fn(tiny_cfg, 1)
+    args = [
+        jnp.zeros(s.shape, s.dtype)
+        if s.dtype == jnp.int32
+        else jax.random.normal(jax.random.PRNGKey(i), s.shape, s.dtype) * 0.02
+        for i, s in enumerate(specs)
+    ]
+    (out,) = fn(*args)
+    assert out.shape == (1, tiny_cfg.vocab)
+
+
+@pytest.mark.parametrize("name", sorted(model.TIERS))
+def test_tiny_param_count_matches_flat(name):
+    cfg = model.TIERS[name]
+    params = model.init_lm_params(cfg)
+    flat = model.flatten_lm_params(cfg, params)
+    total = sum(int(np.prod(a.shape)) for a in flat)
+    assert total == cfg.tiny_param_count()
+
+
+def test_flops_positive_and_monotone():
+    f3 = model.lm_flops_per_forward(model.TIERS["qwen3b"], 1)
+    f72 = model.lm_flops_per_forward(model.TIERS["qwen72b"], 1)
+    assert 0 < f3 < f72
+    assert model.lm_flops_per_forward(model.TIERS["qwen3b"], 8) == pytest.approx(8 * f3)
+
+
+# ---------------------------------------------------------------------------
+# embedder
+# ---------------------------------------------------------------------------
+
+def test_embedder_unit_norm():
+    cfg = model.EmbedderConfig()
+    params = model.init_embedder_params(cfg)
+    feats = jax.random.uniform(jax.random.PRNGKey(0), (8, cfg.feat_dim))
+    out = model.embedder_forward(cfg, params, feats)
+    assert out.shape == (8, cfg.out_dim)
+    norms = np.linalg.norm(np.asarray(out), axis=1)
+    assert_allclose(norms, np.ones(8), rtol=1e-5)
+
+
+def test_embedder_similarity_tracks_overlap():
+    """Overlapping feature buckets ⇒ higher cosine than disjoint ones."""
+    cfg = model.EmbedderConfig()
+    params = model.init_embedder_params(cfg)
+    a = jnp.zeros((8, cfg.feat_dim)).at[:, :32].set(1.0)
+    b = jnp.zeros((8, cfg.feat_dim)).at[:, 16:48].set(1.0)   # 50% overlap with a
+    c = jnp.zeros((8, cfg.feat_dim)).at[:, 128:160].set(1.0)  # disjoint
+    ea, eb, ec = (model.embedder_forward(cfg, params, x) for x in (a, b, c))
+    sim_ab = float(jnp.sum(ea[0] * eb[0]))
+    sim_ac = float(jnp.sum(ea[0] * ec[0]))
+    assert sim_ab > sim_ac
+
+
+def test_embedder_scale_invariant():
+    cfg = model.EmbedderConfig()
+    params = model.init_embedder_params(cfg)
+    feats = jax.random.uniform(jax.random.PRNGKey(1), (8, cfg.feat_dim))
+    o1 = model.embedder_forward(cfg, params, feats)
+    o2 = model.embedder_forward(cfg, params, feats * 7.5)
+    assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,62 @@
+//! Shared helpers for the paper-reproduction benches (criterion is not
+//! available offline; each bench is `harness = false` and prints a
+//! paper-vs-measured table — see DESIGN.md §5).
+
+use eaco_rag::config::{QosPreset, SystemConfig};
+use eaco_rag::corpus::Profile;
+use eaco_rag::sim::{workload_for, KnowledgeMode, RunStats, SimSystem};
+use eaco_rag::workload::Workload;
+
+/// Standard experiment scale: long enough for the gate to exploit,
+/// short enough for `cargo bench` to stay minutes-scale.
+pub const STEPS: usize = 1200;
+
+pub fn banner(title: &str, paper_ref: &str) {
+    println!("\n================================================================");
+    println!("{title}");
+    println!("reproduces: {paper_ref}");
+    println!("================================================================");
+}
+
+pub fn cfg_for(dataset: Profile, qos: QosPreset) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.dataset = dataset;
+    cfg.qos = qos;
+    cfg.warmup_steps = match dataset {
+        Profile::Wiki => 300,       // paper Table 5: best wiki T0
+        Profile::HarryPotter => 500, // paper Table 5: best hp T0
+    };
+    cfg
+}
+
+/// Run one fixed-strategy baseline.
+pub fn run_baseline(cfg: &SystemConfig, arm_name: &str, steps: usize) -> RunStats {
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Static);
+    let wl = Workload::generate(&sys.corpus, workload_for(cfg, steps), cfg.seed);
+    sys.run_baseline(&wl, SimSystem::baseline_arm(arm_name).unwrap())
+}
+
+/// Run EACO-RAG (adaptive + gate).
+pub fn run_eaco(cfg: &SystemConfig, steps: usize) -> RunStats {
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Adaptive);
+    let wl = Workload::generate(&sys.corpus, workload_for(cfg, steps), cfg.seed);
+    sys.run_eaco(&wl).0
+}
+
+/// Print one comparison row: measured vs the paper's reported value.
+pub fn row(label: &str, measured: &RunStats, paper: &str) {
+    println!(
+        "{label:<28} {:>6.2}%  {:>6.2}s  {:>9.2} TFLOPs   | paper: {paper}",
+        measured.accuracy * 100.0,
+        measured.delay.mean(),
+        measured.resource_cost.mean(),
+    );
+}
+
+pub fn header() {
+    println!(
+        "{:<28} {:>7} {:>8} {:>16}   | paper (acc%, delay s, cost TFLOPs)",
+        "system", "acc", "delay", "cost"
+    );
+    println!("{}", "-".repeat(100));
+}

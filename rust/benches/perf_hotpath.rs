@@ -1,0 +1,201 @@
+//! **§Perf** — hot-path micro-benchmarks for the L3 coordinator plus the
+//! real PJRT execution path (criterion substitute; see DESIGN.md §7).
+//!
+//! Measured here and tracked in EXPERIMENTS.md §Perf:
+//!   * gate decision latency vs GP observation count (target ≪ 1 ms)
+//!   * GP posterior update (incremental Cholesky extend)
+//!   * edge keyword retrieval + overlap scan
+//!   * vector-store top-k scan rate
+//!   * dynamic batcher push/flush throughput
+//!   * PJRT LM forward (b1 vs b8 — batching amortization) and embedder
+//!     (skipped with a notice if artifacts/ is absent)
+
+use std::path::PathBuf;
+
+use eaco_rag::config::SystemConfig;
+use eaco_rag::corpus::{Corpus, Profile};
+use eaco_rag::coordinator::batcher::{DynamicBatcher, GenRequest};
+use eaco_rag::edge::EdgeNode;
+use eaco_rag::gating::safeobo::{Observation, Qos, SafeObo};
+use eaco_rag::gating::{standard_arms, GateContext};
+use eaco_rag::runtime::{FeatureHasher, Runtime, Tokenizer};
+use eaco_rag::util::rng::Rng;
+use eaco_rag::util::stats::bench;
+use eaco_rag::vecstore::VecStore;
+
+fn ctx(rng: &mut Rng) -> GateContext {
+    GateContext {
+        cloud_delay_ms: 250.0 + rng.f64() * 150.0,
+        edge_delay_ms: 15.0 + rng.f64() * 10.0,
+        best_overlap: rng.f64(),
+        best_edge_is_local: rng.chance(0.5),
+        local_overlap: rng.f64(),
+        hops: 1 + rng.below(3),
+        length_tokens: 8 + rng.below(20),
+        entity_count: 2 + rng.below(5),
+    }
+}
+
+fn main() {
+    println!("\n=== §Perf hot-path benchmarks ===\n");
+
+    // --- gate decision latency vs observation count ---
+    for n_obs in [100usize, 300, 500] {
+        let mut gate = SafeObo::new(
+            standard_arms(),
+            Qos { min_accuracy: 0.85, max_delay_s: 5.0 },
+            0,
+            0.5,
+            1,
+        );
+        let mut rng = Rng::new(2);
+        for _ in 0..n_obs {
+            let c = ctx(&mut rng);
+            let arm = rng.below(5);
+            gate.observe(
+                &c,
+                arm,
+                Observation {
+                    resource_cost: rng.f64() * 100.0,
+                    delay_cost: rng.f64() * 5.0,
+                    accuracy: if rng.chance(0.8) { 1.0 } else { 0.0 },
+                    delay_s: rng.f64() * 3.0,
+                },
+            );
+        }
+        let mut rng2 = Rng::new(3);
+        let r = bench(&format!("gate.decide @ {n_obs} obs"), 200, || {
+            let c = ctx(&mut rng2);
+            std::hint::black_box(gate.decide(&c));
+        });
+        println!("{r}");
+    }
+
+    // --- GP posterior update (incremental) ---
+    {
+        let mut gate = SafeObo::new(
+            standard_arms(),
+            Qos { min_accuracy: 0.85, max_delay_s: 5.0 },
+            0,
+            0.5,
+            1,
+        );
+        let mut rng = Rng::new(4);
+        let r = bench("gate.observe (incremental Cholesky)", 400, || {
+            let c = ctx(&mut rng);
+            let arm = rng.below(5);
+            gate.observe(
+                &c,
+                arm,
+                Observation {
+                    resource_cost: 10.0,
+                    delay_cost: 0.5,
+                    accuracy: 1.0,
+                    delay_s: 0.5,
+                },
+            );
+        });
+        println!("{r}");
+    }
+
+    // --- edge retrieval ---
+    {
+        let corpus = Corpus::generate(Profile::Wiki, 1);
+        let cfg = SystemConfig::default();
+        let mut edge = EdgeNode::new(0, cfg.edge_capacity);
+        let all: Vec<usize> = (0..corpus.chunks.len().min(1000)).collect();
+        edge.apply_update(&corpus, &all);
+        let mut rng = Rng::new(5);
+        let qas: Vec<_> = corpus.qa.iter().collect();
+        let r = bench("edge.retrieve top-6 (1000-chunk store)", 2000, || {
+            let qa = qas[rng.below(qas.len())];
+            let kws = corpus.qa_keywords(qa);
+            std::hint::black_box(edge.retrieve(&kws, 6));
+        });
+        println!("{r}");
+        let r = bench("edge.overlap_ratio", 2000, || {
+            let qa = qas[rng.below(qas.len())];
+            let kws = corpus.qa_keywords(qa);
+            std::hint::black_box(edge.overlap_ratio(&kws));
+        });
+        println!("{r}");
+    }
+
+    // --- vector store scan ---
+    {
+        let mut vs = VecStore::new(64);
+        let mut rng = Rng::new(6);
+        for i in 0..2000 {
+            let v: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+            vs.insert(i, &v);
+        }
+        let q: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let r = bench("vecstore.top_k(8) over 2000×64", 500, || {
+            std::hint::black_box(vs.top_k(&q, 8));
+        });
+        println!("{r}");
+        let bytes = 2000.0 * 64.0 * 4.0;
+        println!(
+            "  -> effective scan rate {:.2} GB/s",
+            bytes / r.mean_ns
+        );
+    }
+
+    // --- batcher throughput ---
+    {
+        let mut b = DynamicBatcher::new(8, 50.0);
+        let mut i = 0usize;
+        let r = bench("batcher.push (amortized flush@8)", 20_000, || {
+            i += 1;
+            std::hint::black_box(b.push(GenRequest {
+                request_id: i,
+                tier: "qwen3b".into(),
+                prompt: String::new(),
+                max_new: 4,
+                enqueued_ms: i as f64,
+            }));
+        });
+        println!("{r}");
+    }
+
+    // --- real PJRT path ---
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("\n(artifacts/ missing — PJRT section skipped; run `make artifacts`)");
+        return;
+    }
+    let mut rt = Runtime::open(&dir).expect("runtime");
+    for name in ["slm_qwen3b_b1", "slm_qwen3b_b8", "slm_qwen72b_b8", "embedder_b8"] {
+        rt.load(name).expect(name);
+    }
+    let tok = Tokenizer::new(512, 64);
+    let row = tok.encode("what spell unlocks the door");
+    let r = bench("PJRT lm forward qwen3b b1", 200, || {
+        std::hint::black_box(rt.lm_logits("slm_qwen3b_b1", &row).unwrap());
+    });
+    println!("{r}");
+    let mut batch8 = Vec::new();
+    for _ in 0..8 {
+        batch8.extend(row.iter().copied());
+    }
+    let r8 = bench("PJRT lm forward qwen3b b8", 200, || {
+        std::hint::black_box(rt.lm_logits("slm_qwen3b_b8", &batch8).unwrap());
+    });
+    println!("{r8}");
+    println!(
+        "  -> batching amortization: b8 per-row cost is {:.2}x of b1",
+        r8.mean_ns / 8.0 / r.mean_ns
+    );
+    let r72 = bench("PJRT lm forward qwen72b b8", 100, || {
+        std::hint::black_box(rt.lm_logits("slm_qwen72b_b8", &batch8).unwrap());
+    });
+    println!("{r72}");
+    let h = FeatureHasher::new(256);
+    let feats: Vec<Vec<f32>> = (0..8)
+        .map(|i| h.features(&format!("sample text number {i}")))
+        .collect();
+    let re = bench("PJRT embedder b8", 200, || {
+        std::hint::black_box(rt.embed("embedder_b8", &feats).unwrap());
+    });
+    println!("{re}");
+}

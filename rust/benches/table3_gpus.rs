@@ -1,0 +1,42 @@
+//! **Table 3** — FP64 peak TFLOPS of the server GPUs used to unify time
+//! and resource costs (paper §4.1). These are constants; the bench
+//! verifies the cost model reproduces them exactly and shows the
+//! resulting per-second time-cost scaling.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::banner;
+use eaco_rag::cost::{CostModel, Gpu};
+
+fn main() {
+    banner(
+        "Table 3 — GPU FP64 peak TFLOPS (time-cost scaling constants)",
+        "EACO-RAG paper §4.1, Table 3",
+    );
+    let paper = [
+        (Gpu::Rtx4090, 1.29),
+        (Gpu::TeslaP100, 4.70),
+        (Gpu::TeslaV100, 7.80),
+        (Gpu::A100, 9.70),
+        (Gpu::H100, 60.00),
+    ];
+    let model = CostModel::default();
+    println!(
+        "{:<28} {:>10} {:>10} {:>22}",
+        "GPU", "measured", "paper", "time-cost of 1 s delay"
+    );
+    println!("{}", "-".repeat(74));
+    for (gpu, expected) in paper {
+        let got = gpu.peak_tflops();
+        assert_eq!(got, expected, "{}", gpu.name());
+        println!(
+            "{:<28} {:>10.2} {:>10.2} {:>18.2} TFLOP",
+            gpu.name(),
+            got,
+            expected,
+            model.time_cost(1.0, gpu)
+        );
+    }
+    println!("\nall five constants exact — cost unification identical to the paper");
+}

@@ -1,0 +1,73 @@
+//! **Table 4** — the headline result: accuracy / delay / cost of the four
+//! baselines plus EACO-RAG (cost-efficient & delay-oriented) on both
+//! datasets. Reproduction criterion (DESIGN.md §5): orderings and the
+//! large EACO cost reduction at near-cloud accuracy, not absolute values
+//! (our substrate is a simulator on a synthetic corpus).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use eaco_rag::config::QosPreset;
+use eaco_rag::corpus::Profile;
+
+fn main() {
+    banner(
+        "Table 4 — overall performance comparison",
+        "EACO-RAG paper §6.2, Table 4",
+    );
+
+    for (profile, paper_rows) in [
+        (
+            Profile::Wiki,
+            [
+                ("3b LLM-only", "28.72, 0.30, 0.60"),
+                ("3b LLM+Naive RAG", "61.57, 0.88, 23.10"),
+                ("3b LLM+GraphRAG", "76.01, 3.01, 60.02"),
+                ("72b LLM+GraphRAG", "94.39, 0.97, 711.43"),
+                ("EACO-RAG (Cost-Efficient)", "94.92, 1.27, 109.40"),
+                ("EACO-RAG (Delay-Oriented)", "94.17, 0.75, 247.03"),
+            ],
+        ),
+        (
+            Profile::HarryPotter,
+            [
+                ("3b LLM-only", "31.69, 0.31, 0.65"),
+                ("3b LLM+Naive RAG", "52.54, 1.00, 23.62"),
+                ("3b LLM+GraphRAG", "63.47, 2.82, 58.99"),
+                ("72b LLM+GraphRAG", "77.12, 1.03, 739.79"),
+                ("EACO-RAG (Cost-Efficient)", "78.00, 1.74, 139.43"),
+                ("EACO-RAG (Delay-Oriented)", "76.28, 0.79, 496.19"),
+            ],
+        ),
+    ] {
+        println!("\n--- dataset: {} ---", profile.name());
+        header();
+        let cfg = cfg_for(profile, QosPreset::CostEfficient);
+
+        let arms = ["llm-only", "naive-rag", "graph-slm", "graph-llm"];
+        let mut cloud_cost = 0.0;
+        for (i, arm) in arms.iter().enumerate() {
+            let stats = run_baseline(&cfg, arm, STEPS);
+            if *arm == "graph-llm" {
+                cloud_cost = stats.resource_cost.mean();
+            }
+            row(paper_rows[i].0, &stats, paper_rows[i].1);
+        }
+
+        let eaco_cost = run_eaco(&cfg_for(profile, QosPreset::CostEfficient), STEPS);
+        row(paper_rows[4].0, &eaco_cost, paper_rows[4].1);
+        let eaco_delay = run_eaco(&cfg_for(profile, QosPreset::DelayOriented), STEPS);
+        row(paper_rows[5].0, &eaco_delay, paper_rows[5].1);
+
+        let cut_cost = 100.0 * (1.0 - eaco_cost.resource_cost.mean() / cloud_cost);
+        let cut_delay = 100.0 * (1.0 - eaco_delay.resource_cost.mean() / cloud_cost);
+        println!(
+            "\ncost reduction vs 72B+GraphRAG: cost-efficient {:.1}% (paper: {}), delay-oriented {:.1}% (paper: {})",
+            cut_cost,
+            if profile == Profile::Wiki { "84.6%" } else { "81.2%" },
+            cut_delay,
+            if profile == Profile::Wiki { "65.3%" } else { "32.9%" },
+        );
+    }
+}

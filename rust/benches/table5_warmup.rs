@@ -1,0 +1,47 @@
+//! **Table 5** — effect of warm-up steps T₀ on EACO-RAG's gating
+//! decisions (paper §6.3). Shape: more warm-up ⇒ better-trained GPs ⇒
+//! fewer unnecessary cloud escalations ⇒ lower cost at equal or better
+//! accuracy; the specialized HP domain needs more warm-up than wiki.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use eaco_rag::config::QosPreset;
+use eaco_rag::corpus::Profile;
+
+fn main() {
+    banner(
+        "Table 5 — impact of warm-up steps T0",
+        "EACO-RAG paper §6.3, Table 5",
+    );
+    for (profile, t0s, paper) in [
+        (
+            Profile::Wiki,
+            [300usize, 200, 100],
+            ["94.92, 1.27, 109.40", "89.66, 1.26, 140.06", "87.22, 1.49, 346.29"],
+        ),
+        (
+            Profile::HarryPotter,
+            [500, 300, 100],
+            ["78.00, 1.74, 139.43", "77.35, 1.12, 402.19", "74.44, 1.31, 511.60"],
+        ),
+    ] {
+        println!("\n--- dataset: {} ---", profile.name());
+        header();
+        let mut costs = Vec::new();
+        for (i, &t0) in t0s.iter().enumerate() {
+            let mut cfg = cfg_for(profile, QosPreset::CostEfficient);
+            cfg.warmup_steps = t0;
+            let stats = run_eaco(&cfg, STEPS);
+            costs.push(stats.resource_cost.mean());
+            row(&format!("EACO-RAG-{t0}"), &stats, paper[i]);
+        }
+        // Shape: the largest warm-up should not be the most expensive.
+        let max_cost = costs.iter().cloned().fold(0.0f64, f64::max);
+        println!(
+            "shape check: cost(T0={}) = {:.1} <= max over smaller T0 ({:.1})",
+            t0s[0], costs[0], max_cost
+        );
+    }
+}

@@ -1,0 +1,38 @@
+//! **Table 6** — EACO-RAG with different edge SLMs on Wiki QA (paper
+//! §6.4). Shape: a stronger edge model (7B) resolves more queries
+//! locally and can *reduce* total cost despite its higher per-call
+//! expense; a weaker one (1.5B) escalates more; llama3.2-3B (pruned/
+//! distilled ⇒ lower capability) underperforms qwen2.5-3B.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use eaco_rag::config::QosPreset;
+use eaco_rag::corpus::Profile;
+
+fn main() {
+    banner(
+        "Table 6 — EACO-RAG with various edge SLMs (Wiki QA)",
+        "EACO-RAG paper §6.4, Table 6",
+    );
+    header();
+    let mut acc = std::collections::BTreeMap::new();
+    for (tier, label, paper) in [
+        ("qwen7b", "Qwen2.5 7B", "94.57, 1.48, 93.83"),
+        ("qwen3b", "Qwen2.5 3B", "94.92, 1.27, 109.40"),
+        ("llama3b", "llama3.2 3B", "93.35, 1.07, 272.72"),
+        ("qwen15b", "Qwen2.5 1.5B", "91.42, 0.95, 167.67"),
+    ] {
+        let mut cfg = cfg_for(Profile::Wiki, QosPreset::CostEfficient);
+        cfg.edge_tier = tier.to_string();
+        let stats = run_eaco(&cfg, STEPS);
+        acc.insert(tier, stats.accuracy);
+        row(label, &stats, paper);
+    }
+    println!(
+        "\nshape check: llama3.2-3B ({:.1}%) below Qwen2.5-3B ({:.1}%) — paper §6.4's training-recipe gap",
+        acc["llama3b"] * 100.0,
+        acc["qwen3b"] * 100.0
+    );
+}

@@ -1,0 +1,267 @@
+//! Cloud node: GraphRAG retrieval + adaptive knowledge distributor
+//! (paper §3.3, §5).
+//!
+//! The cloud "periodically collects and processes queries from users
+//! across various edge nodes, maintaining a knowledge graph that
+//! organizes nodes and communities based on evolving information
+//! trends". Implemented here as:
+//!
+//! * **Graph retrieval** — `retrieve_graph` serves the gate's CloudGraph
+//!   arm: GraphRAG local search plus the global community-report scan
+//!   (the token-heavy part, Table 1).
+//! * **Adaptive knowledge distribution** — `record_query` accumulates
+//!   per-edge query keywords; once `update_trigger` (prototype: 20) new
+//!   QA pairs arrive for an edge, the distributor extracts their
+//!   keywords, ranks communities (`top_k`), and ships up to
+//!   `distribute_max_chunks` (prototype: 500) member chunks to the edge.
+
+use crate::corpus::{ChunkId, Corpus, QaId};
+use crate::graphrag::GraphRag;
+use crate::index::KeywordIndex;
+
+/// A knowledge push for one edge node.
+#[derive(Clone, Debug)]
+pub struct UpdatePlan {
+    pub edge_id: usize,
+    pub chunks: Vec<ChunkId>,
+    pub communities: Vec<usize>,
+}
+
+/// Cloud configuration knobs (paper §5 prototype values by default).
+#[derive(Clone, Copy, Debug)]
+pub struct CloudSpec {
+    pub update_trigger: usize,
+    pub distribute_max_chunks: usize,
+    pub top_k_communities: usize,
+}
+
+impl Default for CloudSpec {
+    fn default() -> Self {
+        CloudSpec {
+            update_trigger: 20,
+            distribute_max_chunks: 500,
+            top_k_communities: 5,
+        }
+    }
+}
+
+/// The cloud tier.
+pub struct CloudNode {
+    pub graph: GraphRag,
+    pub spec: CloudSpec,
+    /// Full-corpus keyword index (the centralized-RAG baseline path).
+    pub full_index: KeywordIndex,
+    /// Recent QA ids per edge since its last update.
+    pending: Vec<Vec<QaId>>,
+    pub updates_sent: usize,
+}
+
+impl CloudNode {
+    pub fn new(corpus: &Corpus, num_edges: usize, spec: CloudSpec) -> CloudNode {
+        let graph = GraphRag::build(corpus);
+        let mut full_index = KeywordIndex::new();
+        for ch in &corpus.chunks {
+            full_index.add_chunk(ch.id, &ch.keywords);
+        }
+        CloudNode {
+            graph,
+            spec,
+            full_index,
+            pending: vec![Vec::new(); num_edges],
+            updates_sent: 0,
+        }
+    }
+
+    /// GraphRAG retrieval for a query: top-k community chunks. Returns
+    /// `(chunks, context_chars)` where `context_chars` includes the
+    /// global community-report scan — the paper's ~9k-token input.
+    pub fn retrieve_graph(
+        &self,
+        corpus: &Corpus,
+        query_keywords: &[&str],
+        k: usize,
+    ) -> (Vec<ChunkId>, usize) {
+        let hits = self.graph.local_search(corpus, query_keywords, k);
+        let chunks: Vec<ChunkId> = hits.into_iter().map(|(c, _)| c).collect();
+        let chunk_chars: usize = chunks.iter().map(|&c| corpus.chunks[c].text.len()).sum();
+        let context_chars = chunk_chars + self.graph.global_search_context_chars();
+        (chunks, context_chars)
+    }
+
+    /// Centralized naive retrieval over the full corpus (baseline).
+    pub fn retrieve_naive(
+        &self,
+        corpus: &Corpus,
+        query_keywords: &[&str],
+        k: usize,
+    ) -> (Vec<ChunkId>, usize) {
+        let chunks: Vec<ChunkId> = self
+            .full_index
+            .retrieve(query_keywords, k)
+            .into_iter()
+            .map(|(c, _)| c)
+            .collect();
+        let chars = chunks.iter().map(|&c| corpus.chunks[c].text.len()).sum();
+        (chunks, chars)
+    }
+
+    /// Record a served query; if the edge has accumulated
+    /// `update_trigger` new QA pairs, emit an [`UpdatePlan`] for it
+    /// (paper §5: "triggering updates when the cloud accumulates 20 new
+    /// QA pairs").
+    pub fn record_query(
+        &mut self,
+        corpus: &Corpus,
+        edge_id: usize,
+        qa_id: QaId,
+    ) -> Option<UpdatePlan> {
+        self.pending[edge_id].push(qa_id);
+        if self.pending[edge_id].len() < self.spec.update_trigger {
+            return None;
+        }
+        let recent: Vec<QaId> = std::mem::take(&mut self.pending[edge_id]);
+        Some(self.plan_update(corpus, edge_id, &recent))
+    }
+
+    /// Build an update plan from a set of recent queries: extract their
+    /// keywords, pick top-k communities, ship member chunks (bounded).
+    pub fn plan_update(
+        &mut self,
+        corpus: &Corpus,
+        edge_id: usize,
+        recent_qa: &[QaId],
+    ) -> UpdatePlan {
+        // Keywords of recent queries (entity names, deduped).
+        let mut kws: Vec<&str> = Vec::new();
+        for &qid in recent_qa {
+            for kw in corpus.qa_keywords(&corpus.qa[qid]) {
+                if !kws.contains(&kw) {
+                    kws.push(kw);
+                }
+            }
+        }
+        let communities = self.graph.top_communities(&kws, self.spec.top_k_communities);
+        let mut chunks: Vec<ChunkId> = Vec::new();
+        'outer: for &cid in &communities {
+            for &ch in &self.graph.communities[cid].chunks {
+                if !chunks.contains(&ch) {
+                    chunks.push(ch);
+                    if chunks.len() >= self.spec.distribute_max_chunks {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        self.updates_sent += 1;
+        UpdatePlan {
+            edge_id,
+            chunks,
+            communities,
+        }
+    }
+
+    /// Pending queue length for an edge (observability).
+    pub fn pending_for(&self, edge_id: usize) -> usize {
+        self.pending[edge_id].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::Profile;
+
+    fn setup() -> (Corpus, CloudNode) {
+        let c = Corpus::generate(Profile::Wiki, 2);
+        let cloud = CloudNode::new(&c, 3, CloudSpec::default());
+        (c, cloud)
+    }
+
+    #[test]
+    fn graph_retrieval_token_heavy() {
+        let (c, cloud) = setup();
+        let qa = &c.qa[0];
+        let kws = c.qa_keywords(qa);
+        let (chunks, chars) = cloud.retrieve_graph(&c, &kws, 8);
+        assert!(!chunks.is_empty());
+        let (_, naive_chars) = cloud.retrieve_naive(&c, &kws, 8);
+        assert!(
+            chars > naive_chars * 3 / 2,
+            "graph context {chars} not ≫ naive {naive_chars}"
+        );
+    }
+
+    #[test]
+    fn update_triggers_at_threshold() {
+        let (c, mut cloud) = setup();
+        for i in 0..19 {
+            assert!(cloud.record_query(&c, 1, i).is_none());
+        }
+        assert_eq!(cloud.pending_for(1), 19);
+        let plan = cloud.record_query(&c, 1, 19).expect("20th query triggers");
+        assert_eq!(plan.edge_id, 1);
+        assert!(!plan.chunks.is_empty());
+        assert_eq!(cloud.pending_for(1), 0, "queue drained");
+    }
+
+    #[test]
+    fn triggers_are_per_edge() {
+        let (c, mut cloud) = setup();
+        for i in 0..19 {
+            cloud.record_query(&c, 0, i);
+            cloud.record_query(&c, 1, i + 100);
+        }
+        assert!(cloud.record_query(&c, 0, 50).is_some());
+        assert_eq!(cloud.pending_for(1), 19, "edge 1 untouched");
+    }
+
+    #[test]
+    fn distributed_chunks_match_query_topics() {
+        let (c, mut cloud) = setup();
+        // Pick 20 queries from one topic; the plan should carry chunks
+        // covering those queries' support.
+        let topic_qas: Vec<QaId> = c.qa_by_topic(c.qa[0].topic).into_iter().take(20).collect();
+        let plan = cloud.plan_update(&c, 0, &topic_qas);
+        let mut covered = 0;
+        for &qid in &topic_qas {
+            if c.qa[qid]
+                .supporting_chunks
+                .iter()
+                .any(|s| plan.chunks.contains(s))
+            {
+                covered += 1;
+            }
+        }
+        assert!(
+            covered * 2 >= topic_qas.len(),
+            "only {covered}/{} queries covered",
+            topic_qas.len()
+        );
+    }
+
+    #[test]
+    fn distribution_bounded() {
+        let (c, mut cloud) = setup();
+        let all: Vec<QaId> = (0..c.qa.len()).collect();
+        let plan = cloud.plan_update(&c, 0, &all);
+        assert!(plan.chunks.len() <= cloud.spec.distribute_max_chunks);
+        assert!(plan.communities.len() <= cloud.spec.top_k_communities);
+        // No duplicates.
+        let mut d = plan.chunks.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), plan.chunks.len());
+    }
+
+    #[test]
+    fn naive_retrieval_over_full_corpus() {
+        let (c, cloud) = setup();
+        let qa = &c.qa[42];
+        let kws = c.qa_keywords(qa);
+        let (chunks, _) = cloud.retrieve_naive(&c, &kws, 8);
+        assert!(
+            qa.supporting_chunks.iter().any(|s| chunks.contains(s)),
+            "full-index naive retrieval should find support"
+        );
+    }
+}

@@ -1,0 +1,213 @@
+//! Dynamic batcher: groups generation requests per model tier so the
+//! PJRT executor runs the largest exported batch variant instead of
+//! per-request forwards (continuous batching at the granularity the
+//! AOT artifacts allow: b ∈ {1, 4, 8}).
+//!
+//! Policy: a tier's queue flushes when it reaches `max_batch` or when a
+//! request has waited longer than `max_wait` virtual milliseconds
+//! (deadline batching, the vLLM-style latency/throughput knob).
+
+use std::collections::VecDeque;
+
+/// A queued generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub request_id: usize,
+    pub tier: String,
+    pub prompt: String,
+    pub max_new: usize,
+    /// Virtual enqueue timestamp (ms).
+    pub enqueued_ms: f64,
+}
+
+/// A flushed batch, ready for the PJRT executor.
+#[derive(Clone, Debug)]
+pub struct GenBatch {
+    pub tier: String,
+    pub requests: Vec<GenRequest>,
+}
+
+/// Per-tier queues with size/deadline flush.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    pub max_batch: usize,
+    pub max_wait_ms: f64,
+    queues: Vec<(String, VecDeque<GenRequest>)>,
+    pub flushed_batches: usize,
+    pub flushed_requests: usize,
+}
+
+impl DynamicBatcher {
+    pub fn new(max_batch: usize, max_wait_ms: f64) -> DynamicBatcher {
+        DynamicBatcher {
+            max_batch: max_batch.max(1),
+            max_wait_ms,
+            queues: Vec::new(),
+            flushed_batches: 0,
+            flushed_requests: 0,
+        }
+    }
+
+    fn queue_mut(&mut self, tier: &str) -> &mut VecDeque<GenRequest> {
+        if let Some(pos) = self.queues.iter().position(|(t, _)| t == tier) {
+            &mut self.queues[pos].1
+        } else {
+            self.queues.push((tier.to_string(), VecDeque::new()));
+            &mut self.queues.last_mut().unwrap().1
+        }
+    }
+
+    /// Total queued requests across tiers.
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    /// Enqueue; returns a batch if the tier hit `max_batch`.
+    pub fn push(&mut self, req: GenRequest) -> Option<GenBatch> {
+        let max = self.max_batch;
+        let q = self.queue_mut(&req.tier);
+        let tier = req.tier.clone();
+        q.push_back(req);
+        if q.len() >= max {
+            return self.flush_tier(&tier);
+        }
+        None
+    }
+
+    /// Flush any queue whose head has waited past the deadline at `now`.
+    pub fn poll_deadline(&mut self, now_ms: f64) -> Vec<GenBatch> {
+        let expired: Vec<String> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| {
+                q.front()
+                    .map(|r| now_ms - r.enqueued_ms >= self.max_wait_ms)
+                    .unwrap_or(false)
+            })
+            .map(|(t, _)| t.clone())
+            .collect();
+        expired
+            .iter()
+            .filter_map(|t| self.flush_tier(t))
+            .collect()
+    }
+
+    /// Force-flush one tier.
+    pub fn flush_tier(&mut self, tier: &str) -> Option<GenBatch> {
+        let max = self.max_batch;
+        let q = self.queue_mut(tier);
+        if q.is_empty() {
+            return None;
+        }
+        let take = q.len().min(max);
+        let requests: Vec<GenRequest> = q.drain(..take).collect();
+        self.flushed_batches += 1;
+        self.flushed_requests += requests.len();
+        Some(GenBatch {
+            tier: tier.to_string(),
+            requests,
+        })
+    }
+
+    /// Force-flush everything (end of stream).
+    pub fn drain(&mut self) -> Vec<GenBatch> {
+        let tiers: Vec<String> = self.queues.iter().map(|(t, _)| t.clone()).collect();
+        let mut out = Vec::new();
+        for t in tiers {
+            while let Some(b) = self.flush_tier(&t) {
+                out.push(b);
+            }
+        }
+        out
+    }
+
+    /// Mean requests per flushed batch (batching efficiency metric).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.flushed_batches == 0 {
+            0.0
+        } else {
+            self.flushed_requests as f64 / self.flushed_batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, tier: &str, t: f64) -> GenRequest {
+        GenRequest {
+            request_id: id,
+            tier: tier.to_string(),
+            prompt: format!("q{id}"),
+            max_new: 4,
+            enqueued_ms: t,
+        }
+    }
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let mut b = DynamicBatcher::new(4, 100.0);
+        for i in 0..3 {
+            assert!(b.push(req(i, "qwen3b", 0.0)).is_none());
+        }
+        let batch = b.push(req(3, "qwen3b", 0.0)).expect("flush at 4");
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn tiers_batch_independently() {
+        let mut b = DynamicBatcher::new(2, 100.0);
+        assert!(b.push(req(0, "qwen3b", 0.0)).is_none());
+        assert!(b.push(req(1, "qwen72b", 0.0)).is_none());
+        let f = b.push(req(2, "qwen3b", 0.0)).expect("3b flushes");
+        assert_eq!(f.tier, "qwen3b");
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut b = DynamicBatcher::new(8, 50.0);
+        b.push(req(0, "qwen3b", 0.0));
+        b.push(req(1, "qwen3b", 10.0));
+        assert!(b.poll_deadline(40.0).is_empty());
+        let batches = b.poll_deadline(55.0);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests.len(), 2);
+    }
+
+    #[test]
+    fn drain_flushes_everything_in_chunks() {
+        let mut b = DynamicBatcher::new(4, 1000.0);
+        for i in 0..10 {
+            b.push(req(i, "qwen3b", 0.0));
+        }
+        // 10 pushed: two auto-flushes at 4 leave 2 queued.
+        assert_eq!(b.pending(), 2);
+        let rest = b.drain();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].requests.len(), 2);
+        assert_eq!(b.flushed_requests, 10);
+    }
+
+    #[test]
+    fn preserves_fifo_order() {
+        let mut b = DynamicBatcher::new(3, 100.0);
+        b.push(req(7, "t", 0.0));
+        b.push(req(8, "t", 0.0));
+        let batch = b.push(req(9, "t", 0.0)).unwrap();
+        let ids: Vec<usize> = batch.requests.iter().map(|r| r.request_id).collect();
+        assert_eq!(ids, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn mean_batch_size_tracks() {
+        let mut b = DynamicBatcher::new(2, 100.0);
+        b.push(req(0, "t", 0.0));
+        b.push(req(1, "t", 0.0));
+        b.push(req(2, "t", 0.0));
+        b.drain();
+        assert!((b.mean_batch_size() - 1.5).abs() < 1e-9);
+    }
+}

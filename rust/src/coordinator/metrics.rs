@@ -1,0 +1,186 @@
+//! Serving metrics: per-request records + aggregate report.
+
+use crate::util::json::{num, obj, s, Json};
+use crate::util::stats::{percentile, Running};
+
+/// One served request's record.
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    pub request_id: usize,
+    pub edge_id: usize,
+    pub arm: String,
+    pub correct: bool,
+    /// Virtual end-to-end delay (paper's h_t, seconds).
+    pub virtual_delay_s: f64,
+    /// Real wall-clock spent in PJRT execution (seconds).
+    pub real_exec_s: f64,
+    pub in_tokens: f64,
+    pub out_tokens: f64,
+    pub resource_tflops: f64,
+    pub total_cost: f64,
+    pub batch_size: usize,
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub records: Vec<RequestRecord>,
+    pub wall_start: Option<std::time::Instant>,
+    pub wall_elapsed_s: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            records: Vec::new(),
+            wall_start: Some(std::time::Instant::now()),
+            wall_elapsed_s: 0.0,
+        }
+    }
+
+    pub fn push(&mut self, r: RequestRecord) {
+        self.records.push(r);
+    }
+
+    pub fn finish(&mut self) {
+        if let Some(t0) = self.wall_start {
+            self.wall_elapsed_s = t0.elapsed().as_secs_f64();
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().filter(|r| r.correct).count() as f64 / self.records.len() as f64
+    }
+
+    pub fn throughput_qps(&self) -> f64 {
+        if self.wall_elapsed_s == 0.0 {
+            0.0
+        } else {
+            self.records.len() as f64 / self.wall_elapsed_s
+        }
+    }
+
+    fn series(&self, f: impl Fn(&RequestRecord) -> f64) -> Vec<f64> {
+        self.records.iter().map(f).collect()
+    }
+
+    pub fn summary(&self) -> String {
+        let vd = self.series(|r| r.virtual_delay_s);
+        let re = self.series(|r| r.real_exec_s * 1000.0);
+        let cost = {
+            let mut c = Running::new();
+            for r in &self.records {
+                c.push(r.resource_tflops);
+            }
+            c
+        };
+        format!(
+            "requests {}  acc {:.2}%  virt-delay p50 {:.2}s p99 {:.2}s  real-exec p50 {:.1}ms p99 {:.1}ms  cost {:.1}±{:.1} TFLOPs  wall {:.2}s  thpt {:.1} q/s",
+            self.records.len(),
+            self.accuracy() * 100.0,
+            percentile(&vd, 50.0),
+            percentile(&vd, 99.0),
+            percentile(&re, 50.0),
+            percentile(&re, 99.0),
+            cost.mean(),
+            cost.std(),
+            self.wall_elapsed_s,
+            self.throughput_qps(),
+        )
+    }
+
+    /// Arm usage histogram.
+    pub fn arm_histogram(&self) -> Vec<(String, usize)> {
+        let mut hist: Vec<(String, usize)> = Vec::new();
+        for r in &self.records {
+            if let Some(e) = hist.iter_mut().find(|(a, _)| *a == r.arm) {
+                e.1 += 1;
+            } else {
+                hist.push((r.arm.clone(), 1));
+            }
+        }
+        hist.sort_by(|a, b| b.1.cmp(&a.1));
+        hist
+    }
+
+    /// JSON report (for EXPERIMENTS.md appendices / tooling).
+    pub fn to_json(&self) -> Json {
+        let vd = self.series(|r| r.virtual_delay_s);
+        let re = self.series(|r| r.real_exec_s);
+        obj(vec![
+            ("requests", num(self.records.len() as f64)),
+            ("accuracy", num(self.accuracy())),
+            ("virtual_delay_p50_s", num(percentile(&vd, 50.0))),
+            ("virtual_delay_p99_s", num(percentile(&vd, 99.0))),
+            ("real_exec_p50_s", num(percentile(&re, 50.0))),
+            ("real_exec_p99_s", num(percentile(&re, 99.0))),
+            ("wall_s", num(self.wall_elapsed_s)),
+            ("throughput_qps", num(self.throughput_qps())),
+            (
+                "arms",
+                Json::Arr(
+                    self.arm_histogram()
+                        .into_iter()
+                        .map(|(a, n)| obj(vec![("arm", s(&a)), ("count", num(n as f64))]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: usize, arm: &str, correct: bool) -> RequestRecord {
+        RequestRecord {
+            request_id: id,
+            edge_id: 0,
+            arm: arm.to_string(),
+            correct,
+            virtual_delay_s: 0.5 + id as f64 * 0.1,
+            real_exec_s: 0.01,
+            in_tokens: 100.0,
+            out_tokens: 20.0,
+            resource_tflops: 23.0,
+            total_cost: 25.0,
+            batch_size: 4,
+        }
+    }
+
+    #[test]
+    fn accuracy_and_histogram() {
+        let mut m = Metrics::new();
+        m.push(rec(0, "local-rag+slm", true));
+        m.push(rec(1, "local-rag+slm", false));
+        m.push(rec(2, "cloud-graph+llm", true));
+        m.finish();
+        assert!((m.accuracy() - 2.0 / 3.0).abs() < 1e-9);
+        let hist = m.arm_histogram();
+        assert_eq!(hist[0].0, "local-rag+slm");
+        assert_eq!(hist[0].1, 2);
+    }
+
+    #[test]
+    fn json_report_parses() {
+        let mut m = Metrics::new();
+        m.push(rec(0, "a", true));
+        m.finish();
+        let j = m.to_json().to_string();
+        let back = crate::util::json::parse(&j).unwrap();
+        assert_eq!(back.get("requests").as_usize(), Some(1));
+        assert_eq!(back.get("accuracy").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let mut m = Metrics::new();
+        m.finish();
+        assert_eq!(m.accuracy(), 0.0);
+        let _ = m.summary();
+    }
+}

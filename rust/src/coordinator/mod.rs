@@ -1,0 +1,311 @@
+//! The serving coordinator: EACO-RAG's L3 request path on real compute.
+//!
+//! Where [`crate::sim`] replays the paper's experiments under virtual
+//! time, this module serves the same pipeline against the **real PJRT
+//! runtime**: every generation is an actual batched forward pass of the
+//! AOT-compiled transformer artifacts. Layout:
+//!
+//! * [`batcher`] — dynamic per-tier batching (size + deadline flush).
+//! * [`metrics`] — per-request records, latency percentiles, throughput.
+//! * [`Coordinator`] — the leader loop: context assembly → SafeOBO gate
+//!   → retrieval (edge/cloud stores) → batched generation on a dedicated
+//!   executor thread that owns the PJRT client → oracle grading → gate
+//!   feedback → adaptive knowledge updates.
+//!
+//! Python never appears here: the executor thread loads `artifacts/`
+//! once and serves from memory.
+
+pub mod batcher;
+pub mod metrics;
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::SystemConfig;
+use crate::gating::safeobo::{Observation, Qos, SafeObo};
+use crate::gating::{standard_arms, GenLoc};
+use crate::runtime::{ExecTiming, Runtime};
+use crate::sim::{KnowledgeMode, SimSystem};
+use crate::workload::Workload;
+use batcher::{DynamicBatcher, GenBatch, GenRequest};
+use metrics::{Metrics, RequestRecord};
+
+/// A finished generation batch from the executor.
+struct ExecResult {
+    request_ids: Vec<usize>,
+    generated: Vec<Vec<i32>>,
+    timing: ExecTiming,
+    batch_size: usize,
+}
+
+/// The PJRT executor thread: owns the runtime, consumes batches.
+struct Executor {
+    tx: mpsc::Sender<Option<GenBatch>>,
+    rx: mpsc::Receiver<Result<ExecResult>>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Executor {
+    fn spawn(artifacts: &Path, preload_tiers: Vec<String>, max_new: usize) -> Result<Executor> {
+        let (tx, batch_rx) = mpsc::channel::<Option<GenBatch>>();
+        let (result_tx, rx) = mpsc::channel::<Result<ExecResult>>();
+        let dir = artifacts.to_path_buf();
+        let handle = thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || {
+                let mut rt = match Runtime::open(&dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = result_tx.send(Err(e));
+                        return;
+                    }
+                };
+                // Preload (compile + weight upload) before serving.
+                for tier in &preload_tiers {
+                    for b in [1usize, 4, 8] {
+                        if let Some(a) = rt.manifest.lm_for(tier, b) {
+                            let name = a.name.clone();
+                            if let Err(e) = rt.load(&name) {
+                                let _ = result_tx.send(Err(e));
+                                return;
+                            }
+                        }
+                    }
+                }
+                while let Ok(Some(batch)) = batch_rx.recv() {
+                    let prompts: Vec<String> =
+                        batch.requests.iter().map(|r| r.prompt.clone()).collect();
+                    let ids: Vec<usize> =
+                        batch.requests.iter().map(|r| r.request_id).collect();
+                    let n = prompts.len();
+                    let out = rt
+                        .generate(&batch.tier, &prompts, max_new)
+                        .map(|(generated, timing)| ExecResult {
+                            request_ids: ids,
+                            generated,
+                            timing,
+                            batch_size: n,
+                        });
+                    if result_tx.send(out).is_err() {
+                        return;
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawning executor: {e}"))?;
+        Ok(Executor {
+            tx,
+            rx,
+            handle: Some(handle),
+        })
+    }
+
+    fn submit(&self, batch: GenBatch) -> Result<()> {
+        self.tx
+            .send(Some(batch))
+            .map_err(|_| anyhow!("executor thread died"))
+    }
+
+    fn recv(&self) -> Result<ExecResult> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died"))?
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        let _ = self.tx.send(None);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Pending bookkeeping for an in-flight request.
+struct Pending {
+    edge_id: usize,
+    arm_name: String,
+    correct: bool,
+    virtual_delay_s: f64,
+    in_tokens: f64,
+    out_tokens: f64,
+    resource_tflops: f64,
+    total_cost: f64,
+}
+
+/// The serving coordinator (leader).
+pub struct Coordinator {
+    pub cfg: SystemConfig,
+    pub sim: SimSystem,
+    pub gate: SafeObo,
+    pub batcher: DynamicBatcher,
+    pub metrics: Metrics,
+    executor: Executor,
+    /// Max real tokens decoded per request (each one a real PJRT pass).
+    pub gen_tokens: usize,
+}
+
+impl Coordinator {
+    /// Build a coordinator: spins up the PJRT executor thread and
+    /// preloads both tiers' artifacts.
+    pub fn new(cfg: SystemConfig, artifacts: &Path, gen_tokens: usize) -> Result<Coordinator> {
+        let sim = SimSystem::new(cfg.clone(), KnowledgeMode::Adaptive);
+        let (min_acc, max_delay) = cfg.qos.constraints_for(cfg.dataset);
+        let gate = SafeObo::new(
+            standard_arms(),
+            Qos {
+                min_accuracy: min_acc,
+                max_delay_s: max_delay,
+            },
+            cfg.warmup_steps,
+            cfg.beta,
+            cfg.seed,
+        );
+        let executor = Executor::spawn(
+            artifacts,
+            vec![cfg.edge_tier.clone(), cfg.cloud_tier.clone()],
+            gen_tokens,
+        )?;
+        Ok(Coordinator {
+            batcher: DynamicBatcher::new(8, 250.0),
+            metrics: Metrics::new(),
+            sim,
+            gate,
+            cfg,
+            executor,
+            gen_tokens,
+        })
+    }
+
+    /// Serve a whole workload: the leader event loop. Returns the number
+    /// of requests served.
+    pub fn run(&mut self, workload: &Workload) -> Result<usize> {
+        let mut now_ms = 0.0f64;
+        let mut pending: Vec<Option<Pending>> = Vec::new();
+        let mut inflight_batches = 0usize;
+
+        for ev in workload.events.clone() {
+            now_ms += ev.gap_ms;
+
+            // 1. Context + gate decision.
+            let ctx = self.sim.gate_context(ev.qa_id, ev.edge_id, ev.step);
+            let decision = self.gate.decide(&ctx);
+            let arm = self.gate.arms[decision.arm_idx];
+
+            // 2. Retrieval + virtual outcome + grading + adaptive update.
+            let (outcome, correct) = self.sim.serve(ev.qa_id, ev.edge_id, ev.step, arm);
+            self.gate.observe(
+                &ctx,
+                decision.arm_idx,
+                Observation {
+                    resource_cost: outcome.resource_cost,
+                    delay_cost: outcome.delay_cost,
+                    accuracy: if correct { 1.0 } else { 0.0 },
+                    delay_s: outcome.delay_s,
+                },
+            );
+
+            // 3. Build the real prompt: question + retrieved context.
+            let qa = &self.sim.corpus.qa[ev.qa_id];
+            let mut prompt = qa.question.clone();
+            for &c in outcome.retrieved.iter().take(4) {
+                prompt.push(' ');
+                prompt.push_str(&self.sim.corpus.chunks[c].text);
+            }
+            let tier = match arm.gen {
+                GenLoc::EdgeSlm => self.cfg.edge_tier.clone(),
+                GenLoc::CloudLlm => self.cfg.cloud_tier.clone(),
+            };
+
+            let request_id = pending.len();
+            pending.push(Some(Pending {
+                edge_id: ev.edge_id,
+                arm_name: arm.name().to_string(),
+                correct,
+                virtual_delay_s: outcome.delay_s,
+                in_tokens: outcome.tokens.input,
+                out_tokens: outcome.tokens.output,
+                resource_tflops: outcome.resource_cost,
+                total_cost: outcome.total_cost,
+            }));
+
+            // 4. Batch + submit.
+            if let Some(batch) = self.batcher.push(GenRequest {
+                request_id,
+                tier,
+                prompt,
+                max_new: self.gen_tokens,
+                enqueued_ms: now_ms,
+            }) {
+                self.executor.submit(batch)?;
+                inflight_batches += 1;
+            }
+            for batch in self.batcher.poll_deadline(now_ms) {
+                self.executor.submit(batch)?;
+                inflight_batches += 1;
+            }
+            // Opportunistically reap finished batches.
+            while inflight_batches > 0 {
+                match self.try_reap(&mut pending)? {
+                    true => inflight_batches -= 1,
+                    false => break,
+                }
+            }
+        }
+
+        // 5. Drain.
+        for batch in self.batcher.drain() {
+            self.executor.submit(batch)?;
+            inflight_batches += 1;
+        }
+        while inflight_batches > 0 {
+            self.reap_blocking(&mut pending)?;
+            inflight_batches -= 1;
+        }
+        self.metrics.finish();
+        Ok(self.metrics.records.len())
+    }
+
+    fn try_reap(&mut self, pending: &mut [Option<Pending>]) -> Result<bool> {
+        match self.executor.rx.try_recv() {
+            Ok(result) => {
+                self.record(result?, pending);
+                Ok(true)
+            }
+            Err(mpsc::TryRecvError::Empty) => Ok(false),
+            Err(mpsc::TryRecvError::Disconnected) => Err(anyhow!("executor died")),
+        }
+    }
+
+    fn reap_blocking(&mut self, pending: &mut [Option<Pending>]) -> Result<()> {
+        let result = self.executor.recv()?;
+        self.record(result, pending);
+        Ok(())
+    }
+
+    fn record(&mut self, result: ExecResult, pending: &mut [Option<Pending>]) {
+        let per_req_exec_s = (result.timing.execute_us as f64 / 1e6)
+            / result.batch_size.max(1) as f64;
+        for (i, &rid) in result.request_ids.iter().enumerate() {
+            debug_assert!(!result.generated[i].is_empty());
+            if let Some(p) = pending[rid].take() {
+                self.metrics.push(RequestRecord {
+                    request_id: rid,
+                    edge_id: p.edge_id,
+                    arm: p.arm_name,
+                    correct: p.correct,
+                    virtual_delay_s: p.virtual_delay_s,
+                    real_exec_s: per_req_exec_s,
+                    in_tokens: p.in_tokens,
+                    out_tokens: p.out_tokens,
+                    resource_tflops: p.resource_tflops,
+                    total_cost: p.total_cost,
+                    batch_size: result.batch_size,
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,571 @@
+//! Synthetic corpora + QA datasets (paper §6.1 substitute).
+//!
+//! The paper evaluates on (a) **Wiki QA** — 139 popular Wikipedia pages
+//! from Natural Questions + TriviaQA/HotpotQA pairs, 571 QA total — and
+//! (b) **Harry Potter QA** — 1,180 pairs over the seven books. Neither
+//! corpus is available offline, so this module synthesizes statistical
+//! stand-ins (DESIGN.md §1): topic/entity/fact graphs whose *retrieval
+//! geometry* (topic skew, entity overlap, hop structure, chunk coverage)
+//! drives every downstream mechanism — keyword indexing, GraphRAG
+//! communities, adaptive edge updates, and the answer oracle.
+//!
+//! Ground truth is mechanical: a QA pair is answerable from a context iff
+//! the context contains its supporting chunks. That is exactly the
+//! property RAG accuracy depends on, so every accuracy trend the paper
+//! reports emerges from the mechanism rather than being hard-coded.
+
+use crate::util::rng::Rng;
+
+pub type EntityId = usize;
+pub type FactId = usize;
+pub type ChunkId = usize;
+pub type TopicId = usize;
+pub type QaId = usize;
+
+/// Which paper dataset the corpus emulates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Profile {
+    /// General-domain: broad, shallow, mostly single-hop (Wiki QA).
+    Wiki,
+    /// Specialized: narrow, entity-dense, more multi-hop (Harry Potter QA).
+    HarryPotter,
+}
+
+impl Profile {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Profile::Wiki => "wiki",
+            Profile::HarryPotter => "hp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Profile> {
+        match s {
+            "wiki" => Some(Profile::Wiki),
+            "hp" | "harrypotter" => Some(Profile::HarryPotter),
+            _ => None,
+        }
+    }
+}
+
+/// Generation parameters for one profile.
+#[derive(Clone, Debug)]
+pub struct CorpusSpec {
+    pub profile: Profile,
+    pub topics: usize,          // thematic groups (wiki: page clusters; hp: books)
+    pub pages: usize,           // documents (paper: 139 pages / 7 books)
+    pub entities_per_topic: usize,
+    pub facts_per_page: usize,
+    pub chunks_per_page: usize,
+    pub qa_pairs: usize,        // paper: 571 / 1,180
+    pub multi_hop_share: f64,   // share of 2–3 hop questions
+    pub topic_zipf: f64,        // base popularity skew across topics
+    pub cross_topic_entity_share: f64, // entities mentioned outside home topic
+    pub seed_label: &'static str,
+}
+
+impl CorpusSpec {
+    pub fn for_profile(profile: Profile) -> CorpusSpec {
+        match profile {
+            Profile::Wiki => CorpusSpec {
+                profile,
+                topics: 20,
+                pages: 139,
+                entities_per_topic: 14,
+                facts_per_page: 12,
+                chunks_per_page: 8,
+                qa_pairs: 571,
+                multi_hop_share: 0.25,
+                topic_zipf: 0.9,
+                cross_topic_entity_share: 0.10,
+                seed_label: "corpus-wiki",
+            },
+            Profile::HarryPotter => CorpusSpec {
+                profile,
+                topics: 7, // the seven books
+                pages: 7 * 24,
+                entities_per_topic: 30,
+                facts_per_page: 14,
+                chunks_per_page: 9,
+                qa_pairs: 1180,
+                multi_hop_share: 0.45,
+                topic_zipf: 0.6,
+                cross_topic_entity_share: 0.30, // recurring characters span books
+                seed_label: "corpus-hp",
+            },
+        }
+    }
+}
+
+/// A named entity (person/place/spell/...).
+#[derive(Clone, Debug)]
+pub struct Entity {
+    pub id: EntityId,
+    pub name: String,
+    pub topic: TopicId,
+}
+
+/// A (subject, relation, object) fact; the atomic knowledge unit.
+#[derive(Clone, Debug)]
+pub struct Fact {
+    pub id: FactId,
+    pub subject: EntityId,
+    pub relation: String,
+    pub object: EntityId,
+    pub topic: TopicId,
+    pub page: usize,
+}
+
+/// A retrievable text chunk holding one or more facts.
+#[derive(Clone, Debug)]
+pub struct Chunk {
+    pub id: ChunkId,
+    pub topic: TopicId,
+    pub page: usize,
+    pub text: String,
+    pub facts: Vec<FactId>,
+    /// Keyword set: entity names + relation words. This is what the
+    /// inverted index and the edge overlap-ratio computations consume.
+    pub keywords: Vec<String>,
+}
+
+/// A question/answer pair with mechanical ground truth.
+#[derive(Clone, Debug)]
+pub struct QaPair {
+    pub id: QaId,
+    pub question: String,
+    pub answer: String,
+    /// Reasoning depth: 1 = single-hop, 2–3 = multi-hop chains.
+    pub hops: usize,
+    pub entities: Vec<EntityId>,
+    pub supporting_facts: Vec<FactId>,
+    /// Chunks that (together) contain all supporting facts.
+    pub supporting_chunks: Vec<ChunkId>,
+    pub topic: TopicId,
+    /// Approximate token length of the question (context feature q_t).
+    pub length_tokens: usize,
+}
+
+/// The synthesized corpus.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub spec: CorpusSpec,
+    pub entities: Vec<Entity>,
+    pub facts: Vec<Fact>,
+    pub chunks: Vec<Chunk>,
+    pub qa: Vec<QaPair>,
+    /// Base topic popularity (zipf-ranked), used by `workload`.
+    pub topic_popularity: Vec<f64>,
+}
+
+// ---------------------------------------------------------------------------
+// name synthesis
+// ---------------------------------------------------------------------------
+
+const SYLLABLES: &[&str] = &[
+    "al", "ba", "cor", "da", "el", "fen", "gor", "ha", "il", "jor", "ka", "lu",
+    "mor", "na", "or", "pra", "qui", "ra", "sol", "tur", "ul", "vor", "wen", "xan",
+    "yor", "zel",
+];
+
+const RELATIONS: &[&str] = &[
+    "founded", "defeated", "married", "invented", "discovered", "rules",
+    "teaches", "guards", "wrote", "owns", "located_in", "allied_with",
+    "succeeded", "created", "betrayed", "mentored",
+];
+
+fn synth_name(rng: &mut Rng, syllables: usize) -> String {
+    let mut s = String::new();
+    for _ in 0..syllables {
+        s.push_str(SYLLABLES[rng.below(SYLLABLES.len())]);
+    }
+    // Capitalize to look like a proper noun.
+    let mut c = s.chars();
+    match c.next() {
+        Some(f) => f.to_uppercase().collect::<String>() + c.as_str(),
+        None => s,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// generation
+// ---------------------------------------------------------------------------
+
+impl Corpus {
+    /// Deterministically synthesize a corpus for a profile.
+    pub fn generate(profile: Profile, seed: u64) -> Corpus {
+        let spec = CorpusSpec::for_profile(profile);
+        let mut rng = Rng::new(seed).fork(spec.seed_label);
+
+        // --- entities, grouped by topic, with unique names ---
+        let mut entities = Vec::new();
+        let mut used = std::collections::HashSet::new();
+        for t in 0..spec.topics {
+            for _ in 0..spec.entities_per_topic {
+                let mut name;
+                loop {
+                    let syl = 2 + rng.below(2);
+                    name = synth_name(&mut rng, syl);
+                    if used.insert(name.clone()) {
+                        break;
+                    }
+                }
+                entities.push(Entity {
+                    id: entities.len(),
+                    name,
+                    topic: t,
+                });
+            }
+        }
+
+        // Entities available to each topic: home entities + a few borrowed
+        // cross-topic ones (recurring characters / shared concepts).
+        let per_topic_pool: Vec<Vec<EntityId>> = (0..spec.topics)
+            .map(|t| {
+                let mut pool: Vec<EntityId> = entities
+                    .iter()
+                    .filter(|e| e.topic == t)
+                    .map(|e| e.id)
+                    .collect();
+                let borrow =
+                    (spec.entities_per_topic as f64 * spec.cross_topic_entity_share) as usize;
+                for _ in 0..borrow {
+                    pool.push(rng.below(entities.len()));
+                }
+                pool
+            })
+            .collect();
+
+        // --- facts & pages ---
+        // Pages are spread over topics round-robin so each topic has
+        // pages/topics documents.
+        let mut facts: Vec<Fact> = Vec::new();
+        for page in 0..spec.pages {
+            let topic = page % spec.topics;
+            let pool = &per_topic_pool[topic];
+            for _ in 0..spec.facts_per_page {
+                let subject = *rng.choose(pool);
+                let mut object = *rng.choose(pool);
+                while object == subject {
+                    object = *rng.choose(pool);
+                }
+                facts.push(Fact {
+                    id: facts.len(),
+                    subject,
+                    relation: RELATIONS[rng.below(RELATIONS.len())].to_string(),
+                    object,
+                    topic,
+                    page,
+                });
+            }
+        }
+
+        // --- chunks: partition each page's facts, 1–3 facts per chunk ---
+        let mut chunks: Vec<Chunk> = Vec::new();
+        for page in 0..spec.pages {
+            let topic = page % spec.topics;
+            let page_facts: Vec<FactId> = facts
+                .iter()
+                .filter(|f| f.page == page)
+                .map(|f| f.id)
+                .collect();
+            // Partition *all* page facts into chunks (1–3 facts each) so
+            // every fact is retrievable; `chunks_per_page` is the expected
+            // count (facts_per_page / 2), not a hard cap.
+            let mut cursor = 0;
+            while cursor < page_facts.len() {
+                let take = (1 + rng.below(3)).min(page_facts.len() - cursor);
+                let fids: Vec<FactId> = page_facts[cursor..cursor + take].to_vec();
+                cursor += take;
+                let (text, keywords) = render_chunk(&entities, &facts, &fids, &mut rng);
+                chunks.push(Chunk {
+                    id: chunks.len(),
+                    topic,
+                    page,
+                    text,
+                    facts: fids,
+                    keywords,
+                });
+            }
+        }
+
+        // fact -> chunks lookup for QA support sets
+        let mut fact_chunks: Vec<Vec<ChunkId>> = vec![Vec::new(); facts.len()];
+        for ch in &chunks {
+            for &f in &ch.facts {
+                fact_chunks[f].push(ch.id);
+            }
+        }
+
+        // entity -> outgoing facts (for multi-hop chains)
+        let mut out_facts: Vec<Vec<FactId>> = vec![Vec::new(); entities.len()];
+        for f in &facts {
+            out_facts[f.subject].push(f.id);
+        }
+
+        // --- QA pairs ---
+        let mut qa: Vec<QaPair> = Vec::new();
+        let mut attempts = 0;
+        while qa.len() < spec.qa_pairs && attempts < spec.qa_pairs * 50 {
+            attempts += 1;
+            let multi = rng.chance(spec.multi_hop_share);
+            if multi {
+                if let Some(pair) = gen_multi_hop(&entities, &facts, &out_facts, &fact_chunks, qa.len(), &mut rng)
+                {
+                    qa.push(pair);
+                }
+            } else {
+                let f = &facts[rng.below(facts.len())];
+                qa.push(gen_single_hop(&entities, f, &fact_chunks, qa.len(), &mut rng));
+            }
+        }
+
+        // --- base topic popularity: zipf over a shuffled topic order ---
+        let mut order: Vec<usize> = (0..spec.topics).collect();
+        rng.shuffle(&mut order);
+        let mut topic_popularity = vec![0.0; spec.topics];
+        let h: f64 = (1..=spec.topics)
+            .map(|k| (k as f64).powf(-spec.topic_zipf))
+            .sum();
+        for (rank, &t) in order.iter().enumerate() {
+            topic_popularity[t] = ((rank + 1) as f64).powf(-spec.topic_zipf) / h;
+        }
+
+        Corpus {
+            spec,
+            entities,
+            facts,
+            chunks,
+            qa,
+            topic_popularity,
+        }
+    }
+
+    /// All QA ids whose topic is `t`.
+    pub fn qa_by_topic(&self, t: TopicId) -> Vec<QaId> {
+        self.qa.iter().filter(|q| q.topic == t).map(|q| q.id).collect()
+    }
+
+    /// Keywords of a QA pair: its entity names (what the embedder and
+    /// overlap-ratio machinery match against chunk keywords).
+    pub fn qa_keywords(&self, qa: &QaPair) -> Vec<&str> {
+        qa.entities.iter().map(|&e| self.entities[e].name.as_str()).collect()
+    }
+}
+
+fn render_chunk(
+    entities: &[Entity],
+    facts: &[Fact],
+    fids: &[FactId],
+    rng: &mut Rng,
+) -> (String, Vec<String>) {
+    let mut text = String::new();
+    let mut keywords: Vec<String> = Vec::new();
+    for &fid in fids {
+        let f = &facts[fid];
+        let s = &entities[f.subject].name;
+        let o = &entities[f.object].name;
+        text.push_str(&format!("{} {} {}. ", s, f.relation, o));
+        for w in [s.as_str(), f.relation.as_str(), o.as_str()] {
+            if !keywords.iter().any(|k| k == w) {
+                keywords.push(w.to_string());
+            }
+        }
+    }
+    // Filler prose emulates realistic chunk length (the paper's naive
+    // RAG feeds ~3.6k tokens of context for ~6 chunks ⇒ ~2.4 kB/chunk)
+    // without adding keywords.
+    let filler_words = 380 + rng.below(160);
+    for _ in 0..filler_words {
+        text.push_str(SYLLABLES[rng.below(SYLLABLES.len())]);
+        text.push_str(SYLLABLES[rng.below(SYLLABLES.len())]);
+        text.push(' ');
+    }
+    (text, keywords)
+}
+
+fn gen_single_hop(
+    entities: &[Entity],
+    f: &Fact,
+    fact_chunks: &[Vec<ChunkId>],
+    id: QaId,
+    rng: &mut Rng,
+) -> QaPair {
+    let s = &entities[f.subject].name;
+    let o = &entities[f.object].name;
+    let question = format!("Who or what did {} {}?", s, f.relation);
+    QaPair {
+        id,
+        question,
+        answer: o.clone(),
+        hops: 1,
+        entities: vec![f.subject, f.object],
+        supporting_facts: vec![f.id],
+        supporting_chunks: fact_chunks[f.id].clone(),
+        topic: f.topic,
+        length_tokens: 8 + rng.below(10),
+    }
+}
+
+fn gen_multi_hop(
+    entities: &[Entity],
+    facts: &[Fact],
+    out_facts: &[Vec<FactId>],
+    fact_chunks: &[Vec<ChunkId>],
+    id: QaId,
+    rng: &mut Rng,
+) -> Option<QaPair> {
+    // Chain: f1 = (A r1 B), f2 = (B r2 C) [, f3 = (C r3 D)].
+    let f1 = &facts[rng.below(facts.len())];
+    let mid = f1.object;
+    let candidates = &out_facts[mid];
+    if candidates.is_empty() {
+        return None;
+    }
+    let f2 = &facts[*rng.choose(candidates)];
+    if f2.id == f1.id || f2.object == f1.subject {
+        return None;
+    }
+    let want3 = rng.chance(0.3);
+    let mut chain = vec![f1.id, f2.id];
+    let mut terminal = f2.object;
+    if want3 {
+        let c3 = &out_facts[f2.object];
+        if !c3.is_empty() {
+            let f3 = &facts[*rng.choose(c3)];
+            if f3.id != f1.id && f3.id != f2.id && f3.object != f1.subject {
+                chain.push(f3.id);
+                terminal = f3.object;
+            }
+        }
+    }
+    let hops = chain.len();
+    let a = &entities[f1.subject].name;
+    let question = format!(
+        "Through {} and what follows, who or what is ultimately reached from {}?",
+        facts[chain[0]].relation, a
+    );
+    let mut ents: Vec<EntityId> = Vec::new();
+    let mut chunks: Vec<ChunkId> = Vec::new();
+    for &fid in &chain {
+        let f = &facts[fid];
+        for e in [f.subject, f.object] {
+            if !ents.contains(&e) {
+                ents.push(e);
+            }
+        }
+        for &c in &fact_chunks[fid] {
+            if !chunks.contains(&c) {
+                chunks.push(c);
+            }
+        }
+    }
+    Some(QaPair {
+        id,
+        question,
+        answer: entities[terminal].name.clone(),
+        hops,
+        entities: ents,
+        supporting_facts: chain,
+        supporting_chunks: chunks,
+        topic: f1.topic,
+        length_tokens: 14 + rng.below(14),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wiki_matches_paper_scale() {
+        let c = Corpus::generate(Profile::Wiki, 1);
+        assert_eq!(c.spec.pages, 139);
+        assert_eq!(c.qa.len(), 571);
+        assert!(c.chunks.len() > 500);
+    }
+
+    #[test]
+    fn hp_matches_paper_scale() {
+        let c = Corpus::generate(Profile::HarryPotter, 1);
+        assert_eq!(c.qa.len(), 1180);
+        assert_eq!(c.spec.topics, 7);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Corpus::generate(Profile::Wiki, 42);
+        let b = Corpus::generate(Profile::Wiki, 42);
+        assert_eq!(a.entities.len(), b.entities.len());
+        assert_eq!(a.qa[10].question, b.qa[10].question);
+        assert_eq!(a.chunks[5].text, b.chunks[5].text);
+    }
+
+    #[test]
+    fn seeds_change_content() {
+        let a = Corpus::generate(Profile::Wiki, 1);
+        let b = Corpus::generate(Profile::Wiki, 2);
+        assert_ne!(a.qa[0].question, b.qa[0].question);
+    }
+
+    #[test]
+    fn qa_support_is_consistent() {
+        let c = Corpus::generate(Profile::Wiki, 7);
+        for qa in &c.qa {
+            assert!(!qa.supporting_facts.is_empty());
+            assert!(!qa.supporting_chunks.is_empty(), "qa {} lacks chunks", qa.id);
+            // Every supporting fact is present in at least one supporting chunk.
+            for &fid in &qa.supporting_facts {
+                assert!(
+                    qa.supporting_chunks
+                        .iter()
+                        .any(|&cid| c.chunks[cid].facts.contains(&fid)),
+                    "fact {fid} of qa {} not covered",
+                    qa.id
+                );
+            }
+            assert!(qa.hops >= 1 && qa.hops <= 3);
+            assert!(qa.entities.len() >= 2);
+        }
+    }
+
+    #[test]
+    fn hp_has_more_multi_hop_than_wiki() {
+        let wiki = Corpus::generate(Profile::Wiki, 3);
+        let hp = Corpus::generate(Profile::HarryPotter, 3);
+        let share = |c: &Corpus| {
+            c.qa.iter().filter(|q| q.hops > 1).count() as f64 / c.qa.len() as f64
+        };
+        assert!(share(&hp) > share(&wiki) + 0.1);
+    }
+
+    #[test]
+    fn chunk_keywords_cover_fact_entities() {
+        let c = Corpus::generate(Profile::HarryPotter, 5);
+        for ch in c.chunks.iter().take(200) {
+            for &fid in &ch.facts {
+                let f = &c.facts[fid];
+                assert!(ch.keywords.contains(&c.entities[f.subject].name));
+                assert!(ch.keywords.contains(&c.entities[f.object].name));
+            }
+        }
+    }
+
+    #[test]
+    fn topic_popularity_is_distribution() {
+        let c = Corpus::generate(Profile::Wiki, 9);
+        let sum: f64 = c.topic_popularity.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!(c.topic_popularity.iter().all(|&p| p > 0.0));
+    }
+
+    #[test]
+    fn entity_names_unique() {
+        let c = Corpus::generate(Profile::Wiki, 11);
+        let mut names: Vec<&str> = c.entities.iter().map(|e| e.name.as_str()).collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(before, names.len());
+    }
+}

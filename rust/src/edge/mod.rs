@@ -1,0 +1,229 @@
+//! Edge node: FIFO chunk store + adaptive knowledge update (paper §3.3, §5).
+//!
+//! Each edge maintains "a dynamic local dataset of popular topics"
+//! (Fig. 1): a capacity-bounded chunk store (prototype: 1,000 chunks)
+//! updated FIFO as the cloud distributes fresh community chunks, plus a
+//! keyword index for naive retrieval and overlap-ratio scoring. The edge
+//! also exposes the signals the collaborative gate consumes: its current
+//! overlap ratio against a query and its store occupancy.
+
+use std::collections::VecDeque;
+
+use crate::corpus::{ChunkId, Corpus};
+use crate::index::KeywordIndex;
+
+/// Counters for observability / tests.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EdgeStats {
+    pub inserted: usize,
+    pub evicted: usize,
+    pub updates: usize,
+    pub retrievals: usize,
+}
+
+/// One edge node's knowledge state.
+pub struct EdgeNode {
+    pub id: usize,
+    capacity: usize,
+    /// FIFO order of resident chunks (front = oldest).
+    fifo: VecDeque<ChunkId>,
+    /// Keyword index over resident chunks.
+    pub index: KeywordIndex,
+    pub stats: EdgeStats,
+}
+
+impl EdgeNode {
+    pub fn new(id: usize, capacity: usize) -> EdgeNode {
+        EdgeNode {
+            id,
+            capacity,
+            fifo: VecDeque::new(),
+            index: KeywordIndex::new(),
+            stats: EdgeStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.fifo.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fifo.is_empty()
+    }
+
+    pub fn contains(&self, chunk: ChunkId) -> bool {
+        self.index.contains_chunk(chunk)
+    }
+
+    pub fn resident_chunks(&self) -> impl Iterator<Item = ChunkId> + '_ {
+        self.fifo.iter().copied()
+    }
+
+    /// Adaptive knowledge update: insert distributed chunks, evicting the
+    /// oldest residents when over capacity (paper §5 FIFO policy).
+    /// Re-inserted chunks are refreshed (moved to the back of the queue).
+    pub fn apply_update(&mut self, corpus: &Corpus, chunks: &[ChunkId]) {
+        self.stats.updates += 1;
+        for &cid in chunks {
+            if self.contains(cid) {
+                // Refresh recency.
+                self.fifo.retain(|&c| c != cid);
+                self.fifo.push_back(cid);
+                continue;
+            }
+            self.fifo.push_back(cid);
+            self.index.add_chunk(cid, &corpus.chunks[cid].keywords);
+            self.stats.inserted += 1;
+            while self.fifo.len() > self.capacity {
+                if let Some(old) = self.fifo.pop_front() {
+                    self.index.remove_chunk(old);
+                    self.stats.evicted += 1;
+                }
+            }
+        }
+    }
+
+    /// Naive local RAG: top-k resident chunks by distinct keyword hits.
+    pub fn retrieve(&mut self, query_keywords: &[&str], k: usize) -> Vec<ChunkId> {
+        self.stats.retrievals += 1;
+        self.index
+            .retrieve(query_keywords, k)
+            .into_iter()
+            .map(|(c, _)| c)
+            .collect()
+    }
+
+    /// The paper's edge-selection signal: share of query keywords this
+    /// edge's dataset covers.
+    pub fn overlap_ratio(&self, query_keywords: &[&str]) -> f64 {
+        self.index.overlap_ratio(query_keywords)
+    }
+
+    /// Total text volume of the top-k retrieval (for token accounting).
+    pub fn retrieval_context_chars(&self, corpus: &Corpus, chunks: &[ChunkId]) -> usize {
+        chunks.iter().map(|&c| corpus.chunks[c].text.len()).sum()
+    }
+}
+
+/// Pick the best collaborating edge for a query: highest overlap ratio,
+/// preferring the local edge on ties (paper §3.3 "selects retrieval
+/// sources from local, edge, or cloud datasets"). Returns
+/// `(edge_id, overlap)`.
+pub fn best_edge_for(
+    edges: &[EdgeNode],
+    local_edge: usize,
+    query_keywords: &[&str],
+) -> (usize, f64) {
+    let mut best = (local_edge, edges[local_edge].overlap_ratio(query_keywords));
+    for e in edges {
+        let r = e.overlap_ratio(query_keywords);
+        if r > best.1 + 1e-12 {
+            best = (e.id, r);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::Profile;
+
+    fn setup() -> (Corpus, EdgeNode) {
+        let c = Corpus::generate(Profile::Wiki, 2);
+        let e = EdgeNode::new(0, 50);
+        (c, e)
+    }
+
+    #[test]
+    fn fifo_eviction_at_capacity() {
+        let (c, mut e) = setup();
+        let chunks: Vec<ChunkId> = (0..60).collect();
+        e.apply_update(&c, &chunks);
+        assert_eq!(e.len(), 50);
+        assert!(!e.contains(0), "oldest evicted");
+        assert!(e.contains(59), "newest resident");
+        assert_eq!(e.stats.evicted, 10);
+    }
+
+    #[test]
+    fn reinsert_refreshes_recency() {
+        let (c, mut e) = setup();
+        e.apply_update(&c, &(0..50).collect::<Vec<_>>());
+        // Touch chunk 0 again, then push one more; chunk 1 (not 0) evicts.
+        e.apply_update(&c, &[0]);
+        e.apply_update(&c, &[50]);
+        assert!(e.contains(0));
+        assert!(!e.contains(1));
+    }
+
+    #[test]
+    fn retrieve_finds_resident_support() {
+        let (c, mut e) = setup();
+        let qa = &c.qa[0];
+        e.apply_update(&c, &qa.supporting_chunks);
+        let kws = c.qa_keywords(qa);
+        let got = e.retrieve(&kws, 6);
+        assert!(
+            qa.supporting_chunks.iter().any(|s| got.contains(s)),
+            "support not retrieved"
+        );
+    }
+
+    #[test]
+    fn overlap_ratio_tracks_content() {
+        let (c, mut e) = setup();
+        let qa = &c.qa[0];
+        let kws = c.qa_keywords(qa);
+        assert_eq!(e.overlap_ratio(&kws), 0.0);
+        e.apply_update(&c, &qa.supporting_chunks);
+        assert!(e.overlap_ratio(&kws) > 0.5);
+    }
+
+    #[test]
+    fn best_edge_prefers_higher_overlap() {
+        let c = Corpus::generate(Profile::Wiki, 2);
+        let mut e0 = EdgeNode::new(0, 100);
+        let mut e1 = EdgeNode::new(1, 100);
+        let qa = &c.qa[5];
+        e1.apply_update(&c, &qa.supporting_chunks);
+        // e0 gets unrelated chunks.
+        let unrelated: Vec<ChunkId> = c
+            .chunks
+            .iter()
+            .filter(|ch| ch.topic != qa.topic)
+            .take(20)
+            .map(|ch| ch.id)
+            .collect();
+        e0.apply_update(&c, &unrelated);
+        let edges = vec![e0, e1];
+        let kws = c.qa_keywords(qa);
+        let (best, overlap) = best_edge_for(&edges, 0, &kws);
+        assert_eq!(best, 1);
+        assert!(overlap > 0.5);
+    }
+
+    #[test]
+    fn best_edge_ties_stay_local() {
+        let c = Corpus::generate(Profile::Wiki, 2);
+        let e0 = EdgeNode::new(0, 10);
+        let e1 = EdgeNode::new(1, 10);
+        let edges = vec![e0, e1];
+        let (best, overlap) = best_edge_for(&edges, 0, &["nothing"]);
+        assert_eq!(best, 0);
+        assert_eq!(overlap, 0.0);
+    }
+
+    #[test]
+    fn update_stats_counted() {
+        let (c, mut e) = setup();
+        e.apply_update(&c, &[1, 2, 3]);
+        e.apply_update(&c, &[4]);
+        assert_eq!(e.stats.updates, 2);
+        assert_eq!(e.stats.inserted, 4);
+    }
+}

@@ -1,0 +1,278 @@
+//! Gaussian-process regression for the collaborative gate (paper §4.2).
+//!
+//! Each estimated function (cost, accuracy, delay) is modeled as
+//! `GP(μ(x), k(x, x'))` with an RBF kernel plus observation noise,
+//! following Williams & Rasmussen. Posterior updates are **incremental**:
+//! adding an observation extends the Cholesky factor in O(n²) (see
+//! `linalg::Cholesky::extend`) instead of refactorizing in O(n³) — this
+//! is what keeps the gate's per-query decision cost ≪ 1 ms (§Perf).
+//!
+//! A sliding observation window bounds memory and compute: when the
+//! window overflows, the oldest third is dropped and the factor rebuilt
+//! once (amortized O(n²) per step).
+
+use crate::linalg::{dot, Cholesky, Mat};
+
+/// RBF kernel with signal variance `sf2`, length scale `ls`, noise.
+#[derive(Clone, Copy, Debug)]
+pub struct Kernel {
+    pub sf2: f64,
+    pub length_scale: f64,
+    pub noise: f64,
+}
+
+impl Default for Kernel {
+    fn default() -> Self {
+        Kernel {
+            sf2: 1.0,
+            length_scale: 0.8,
+            noise: 0.05,
+        }
+    }
+}
+
+impl Kernel {
+    #[inline]
+    pub fn k(&self, a: &[f64], b: &[f64]) -> f64 {
+        let mut d2 = 0.0;
+        for i in 0..a.len() {
+            let d = a[i] - b[i];
+            d2 += d * d;
+        }
+        self.sf2 * (-d2 / (2.0 * self.length_scale * self.length_scale)).exp()
+    }
+}
+
+/// A GP posterior over scalar observations.
+pub struct Gp {
+    pub kernel: Kernel,
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+    /// Prior mean (observations are centered on it).
+    pub prior_mean: f64,
+    chol: Option<Cholesky>,
+    alpha: Vec<f64>,
+    /// Max observations before the sliding window trims.
+    pub max_obs: usize,
+}
+
+impl Gp {
+    pub fn new(kernel: Kernel, prior_mean: f64, max_obs: usize) -> Gp {
+        Gp {
+            kernel,
+            xs: Vec::new(),
+            ys: Vec::new(),
+            prior_mean,
+            chol: None,
+            alpha: Vec::new(),
+            max_obs: max_obs.max(8),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Add an observation; O(n²) incremental Cholesky growth.
+    pub fn observe(&mut self, x: Vec<f64>, y: f64) {
+        if self.xs.len() >= self.max_obs {
+            // Drop the oldest third, rebuild once.
+            let drop = self.max_obs / 3;
+            self.xs.drain(..drop);
+            self.ys.drain(..drop);
+            self.chol = None;
+        }
+        self.xs.push(x);
+        self.ys.push(y);
+        match &mut self.chol {
+            Some(ch) => {
+                let n = self.xs.len() - 1;
+                let newx = &self.xs[n];
+                let col: Vec<f64> = (0..n).map(|i| self.kernel.k(&self.xs[i], newx)).collect();
+                let diag = self.kernel.k(newx, newx) + self.kernel.noise;
+                if !ch.extend(&col, diag) {
+                    self.chol = None; // numeric trouble: rebuild below
+                }
+            }
+            None => {}
+        }
+        if self.chol.is_none() {
+            self.rebuild();
+        }
+        self.refresh_alpha();
+    }
+
+    fn rebuild(&mut self) {
+        let n = self.xs.len();
+        let mut k = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.kernel.k(&self.xs[i], &self.xs[j]);
+                k[(i, j)] = v;
+                k[(j, i)] = v;
+            }
+            k[(i, i)] += self.kernel.noise;
+        }
+        self.chol = Cholesky::new(&k);
+        if self.chol.is_none() {
+            // Jitter retry (rare; keeps the gate alive on degeneracy).
+            for i in 0..n {
+                k[(i, i)] += 1e-6;
+            }
+            self.chol = Cholesky::new(&k);
+        }
+    }
+
+    fn refresh_alpha(&mut self) {
+        if let Some(ch) = &self.chol {
+            let centered: Vec<f64> = self.ys.iter().map(|y| y - self.prior_mean).collect();
+            self.alpha = ch.solve(&centered);
+        }
+    }
+
+    /// Posterior mean and standard deviation at `x`.
+    pub fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let n = self.xs.len();
+        let prior_sd = (self.kernel.sf2 + self.kernel.noise).sqrt();
+        if n == 0 {
+            return (self.prior_mean, prior_sd);
+        }
+        let ch = match &self.chol {
+            Some(c) => c,
+            None => return (self.prior_mean, prior_sd),
+        };
+        let kstar: Vec<f64> = (0..n).map(|i| self.kernel.k(&self.xs[i], x)).collect();
+        let mu = self.prior_mean + dot(&kstar, &self.alpha);
+        let v = ch.solve_lower(&kstar);
+        // Latent-function variance (no observation noise): repeated
+        // observations at the same x genuinely shrink the bound — this is
+        // what lets the SafeOBO safe set tighten (Eq. 3).
+        let var = (self.kernel.k(x, x) - dot(&v, &v)).max(1e-12);
+        (mu, var.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn f(x: f64) -> f64 {
+        (2.0 * x).sin()
+    }
+
+    #[test]
+    fn fits_smooth_function() {
+        let mut gp = Gp::new(
+            Kernel {
+                sf2: 1.0,
+                length_scale: 0.5,
+                noise: 1e-4,
+            },
+            0.0,
+            500,
+        );
+        for i in 0..40 {
+            let x = i as f64 / 40.0 * 3.0;
+            gp.observe(vec![x], f(x));
+        }
+        for i in 0..10 {
+            let x = 0.15 + i as f64 / 10.0 * 2.5;
+            let (mu, sd) = gp.predict(&[x]);
+            assert!((mu - f(x)).abs() < 0.1, "x={x}: {mu} vs {}", f(x));
+            assert!(sd < 0.2);
+        }
+    }
+
+    #[test]
+    fn uncertainty_grows_off_data() {
+        let mut gp = Gp::new(Kernel::default(), 0.0, 500);
+        for i in 0..20 {
+            gp.observe(vec![i as f64 * 0.1], 1.0);
+        }
+        let (_, sd_near) = gp.predict(&[1.0]);
+        let (_, sd_far) = gp.predict(&[50.0]);
+        assert!(sd_far > sd_near * 2.0, "near {sd_near} far {sd_far}");
+    }
+
+    #[test]
+    fn prior_mean_respected_far_away() {
+        let mut gp = Gp::new(Kernel::default(), 5.0, 500);
+        gp.observe(vec![0.0], 7.0);
+        let (mu_far, _) = gp.predict(&[100.0]);
+        assert!((mu_far - 5.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn empty_predicts_prior() {
+        let gp = Gp::new(Kernel::default(), 2.5, 100);
+        let (mu, sd) = gp.predict(&[0.3, 0.4]);
+        assert_eq!(mu, 2.5);
+        assert!(sd > 0.9);
+    }
+
+    #[test]
+    fn incremental_matches_batch() {
+        // Observing one-by-one must match a fresh GP with all points.
+        let mut rng = Rng::new(3);
+        let pts: Vec<(Vec<f64>, f64)> = (0..30)
+            .map(|_| {
+                let x = vec![rng.f64() * 2.0, rng.f64() * 2.0];
+                let y = x[0] - x[1] + 0.1 * rng.normal();
+                (x, y)
+            })
+            .collect();
+        let mut inc = Gp::new(Kernel::default(), 0.0, 500);
+        for (x, y) in &pts {
+            inc.observe(x.clone(), *y);
+        }
+        let mut batch = Gp::new(Kernel::default(), 0.0, 500);
+        for (x, y) in &pts {
+            batch.xs.push(x.clone());
+            batch.ys.push(*y);
+        }
+        batch.rebuild();
+        batch.refresh_alpha();
+        for probe in [[0.5, 0.5], [1.5, 0.2], [0.1, 1.9]] {
+            let (m1, s1) = inc.predict(&probe);
+            let (m2, s2) = batch.predict(&probe);
+            assert!((m1 - m2).abs() < 1e-8, "{m1} vs {m2}");
+            assert!((s1 - s2).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn window_trims_and_survives() {
+        let mut gp = Gp::new(Kernel::default(), 0.0, 30);
+        for i in 0..100 {
+            gp.observe(vec![(i % 10) as f64], (i % 3) as f64);
+        }
+        assert!(gp.len() <= 30);
+        let (mu, sd) = gp.predict(&[5.0]);
+        assert!(mu.is_finite() && sd.is_finite());
+    }
+
+    #[test]
+    fn noisy_observations_smoothed() {
+        let mut rng = Rng::new(5);
+        let mut gp = Gp::new(
+            Kernel {
+                sf2: 1.0,
+                length_scale: 1.0,
+                noise: 0.25,
+            },
+            0.0,
+            500,
+        );
+        // Bernoulli-style 0/1 observations of p=0.7 at the same x.
+        for _ in 0..200 {
+            gp.observe(vec![1.0], if rng.chance(0.7) { 1.0 } else { 0.0 });
+        }
+        let (mu, _) = gp.predict(&[1.0]);
+        assert!((mu - 0.7).abs() < 0.1, "mu {mu}");
+    }
+}

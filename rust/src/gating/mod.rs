@@ -1,0 +1,221 @@
+//! The collaborative gating mechanism (paper §3.3 + §4).
+//!
+//! The gate observes a query's **context** `c_t = [d_t, s_t, q_t]`
+//! (network delays, best edge overlap, query complexity) and picks a
+//! **control policy** `x_t = [r_t, g_t]` — retrieval source × generation
+//! location — to minimize total cost under QoS constraints. Submodules:
+//!
+//! * [`gp`] — Gaussian-process posteriors over cost/accuracy/delay.
+//! * [`safeobo`] — Algorithm 1: Safe Online Bayesian Optimization with a
+//!   random warm-up phase followed by safe-set-constrained exploitation.
+
+pub mod gp;
+pub mod safeobo;
+
+/// Retrieval source `r_t` (paper §4.1: "none, edge-assisted naive
+/// retrieval, or cloud knowledge graph-based retrieval" — we split
+/// edge-assisted into local vs collaborating-edge, matching §3.3 and
+/// Fig. 1's local/edge/cloud levels).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Retrieval {
+    /// No retrieval: parametric knowledge only.
+    None,
+    /// Naive RAG over the local edge's chunk store.
+    LocalNaive,
+    /// Naive RAG over the best collaborating edge's store.
+    EdgeAssisted,
+    /// Cloud knowledge-graph retrieval (GraphRAG).
+    CloudGraph,
+}
+
+/// Generation location `g_t`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GenLoc {
+    /// Local SLM on the edge GPU.
+    EdgeSlm,
+    /// Large model in the cloud.
+    CloudLlm,
+}
+
+/// One gate arm: a (retrieval, generation) pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Arm {
+    pub retrieval: Retrieval,
+    pub gen: GenLoc,
+}
+
+impl Arm {
+    pub fn name(&self) -> &'static str {
+        match (self.retrieval, self.gen) {
+            (Retrieval::None, GenLoc::EdgeSlm) => "slm-only",
+            (Retrieval::LocalNaive, GenLoc::EdgeSlm) => "local-rag+slm",
+            (Retrieval::EdgeAssisted, GenLoc::EdgeSlm) => "edge-assist+slm",
+            (Retrieval::CloudGraph, GenLoc::EdgeSlm) => "cloud-graph+slm",
+            (Retrieval::CloudGraph, GenLoc::CloudLlm) => "cloud-graph+llm",
+            (Retrieval::None, GenLoc::CloudLlm) => "llm-only",
+            (Retrieval::LocalNaive, GenLoc::CloudLlm) => "local-rag+llm",
+            (Retrieval::EdgeAssisted, GenLoc::CloudLlm) => "edge-assist+llm",
+        }
+    }
+}
+
+/// The deployed arm set (paper §8: "the collaborative gating mechanism
+/// only selects among four retrieval and inference strategies" — plus
+/// the pure-local strategy that Table 4's LLM-only baseline uses; the
+/// extended arms of §8's future work are available behind
+/// [`extended_arms`]).
+pub fn standard_arms() -> Vec<Arm> {
+    vec![
+        Arm { retrieval: Retrieval::None, gen: GenLoc::EdgeSlm },
+        Arm { retrieval: Retrieval::LocalNaive, gen: GenLoc::EdgeSlm },
+        Arm { retrieval: Retrieval::EdgeAssisted, gen: GenLoc::EdgeSlm },
+        Arm { retrieval: Retrieval::CloudGraph, gen: GenLoc::EdgeSlm },
+        Arm { retrieval: Retrieval::CloudGraph, gen: GenLoc::CloudLlm },
+    ]
+}
+
+/// Extended arm set (paper §8: "a broader range of adaptive strategies
+/// may emerge"): adds cloud generation over edge retrieval and
+/// retrieval-free cloud generation.
+pub fn extended_arms() -> Vec<Arm> {
+    let mut arms = standard_arms();
+    arms.push(Arm { retrieval: Retrieval::None, gen: GenLoc::CloudLlm });
+    arms.push(Arm { retrieval: Retrieval::EdgeAssisted, gen: GenLoc::CloudLlm });
+    arms
+}
+
+/// The gate's observed context `c_t` (paper §4.1).
+#[derive(Clone, Debug)]
+pub struct GateContext {
+    /// d_t: observed network delays (ms).
+    pub cloud_delay_ms: f64,
+    pub edge_delay_ms: f64,
+    /// s_t: highest keyword-overlap ratio across edge datasets, and
+    /// whether the best edge is the local one.
+    pub best_overlap: f64,
+    pub best_edge_is_local: bool,
+    pub local_overlap: f64,
+    /// q_t: query complexity — reasoning depth, length, entity count.
+    pub hops: usize,
+    pub length_tokens: usize,
+    pub entity_count: usize,
+}
+
+impl GateContext {
+    /// Normalized feature vector (all components roughly in [0, 1]).
+    pub fn features(&self) -> Vec<f64> {
+        vec![
+            (self.cloud_delay_ms / 500.0).min(2.0),
+            (self.edge_delay_ms / 100.0).min(2.0),
+            self.best_overlap,
+            if self.best_edge_is_local { 1.0 } else { 0.0 },
+            self.local_overlap,
+            (self.hops as f64 - 1.0) / 2.0,
+            (self.length_tokens as f64 / 30.0).min(2.0),
+            (self.entity_count as f64 / 6.0).min(2.0),
+        ]
+    }
+
+    /// Accuracy-relevant subspace: retrieval coverage + query
+    /// complexity. Keeping the GP input low-dimensional is what makes
+    /// T₀ ≈ 300 warm-up samples enough to certify arms (Table 5).
+    pub fn acc_features(&self) -> Vec<f64> {
+        vec![
+            self.best_overlap,
+            self.local_overlap,
+            if self.best_edge_is_local { 1.0 } else { 0.0 },
+            (self.hops as f64 - 1.0) / 2.0,
+            (self.entity_count as f64 / 6.0).min(2.0),
+        ]
+    }
+
+    /// Delay-relevant subspace: network state + answer-length drivers.
+    pub fn delay_features(&self) -> Vec<f64> {
+        vec![
+            (self.cloud_delay_ms / 500.0).min(2.0),
+            (self.edge_delay_ms / 100.0).min(2.0),
+            (self.length_tokens as f64 / 30.0).min(2.0),
+            (self.hops as f64 - 1.0) / 2.0,
+        ]
+    }
+
+    /// Cost-relevant subspace.
+    pub fn cost_features(&self) -> Vec<f64> {
+        vec![
+            (self.cloud_delay_ms / 500.0).min(2.0),
+            self.best_overlap,
+            (self.hops as f64 - 1.0) / 2.0,
+            (self.length_tokens as f64 / 30.0).min(2.0),
+        ]
+    }
+}
+
+/// Feature vector for a (context, arm) pair: context features ++ arm
+/// one-hot over the gate's arm set.
+pub fn arm_features(ctx: &GateContext, arm_idx: usize, num_arms: usize) -> Vec<f64> {
+    let mut f = ctx.features();
+    for i in 0..num_arms {
+        f.push(if i == arm_idx { 1.0 } else { 0.0 });
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> GateContext {
+        GateContext {
+            cloud_delay_ms: 300.0,
+            edge_delay_ms: 20.0,
+            best_overlap: 0.8,
+            best_edge_is_local: true,
+            local_overlap: 0.8,
+            hops: 1,
+            length_tokens: 15,
+            entity_count: 3,
+        }
+    }
+
+    #[test]
+    fn standard_arm_set_matches_paper() {
+        let arms = standard_arms();
+        assert_eq!(arms.len(), 5);
+        // The two Table-4 EACO extremes must be present.
+        assert!(arms.iter().any(|a| a.name() == "slm-only"));
+        assert!(arms.iter().any(|a| a.name() == "cloud-graph+llm"));
+    }
+
+    #[test]
+    fn extended_arms_superset() {
+        let ext = extended_arms();
+        for a in standard_arms() {
+            assert!(ext.contains(&a));
+        }
+        assert!(ext.len() > standard_arms().len());
+    }
+
+    #[test]
+    fn features_bounded() {
+        let f = ctx().features();
+        assert_eq!(f.len(), 8);
+        assert!(f.iter().all(|&x| (0.0..=2.0).contains(&x)), "{f:?}");
+    }
+
+    #[test]
+    fn arm_features_one_hot() {
+        let f = arm_features(&ctx(), 2, 5);
+        assert_eq!(f.len(), 8 + 5);
+        assert_eq!(f[8 + 2], 1.0);
+        assert_eq!(f[8..].iter().sum::<f64>(), 1.0);
+    }
+
+    #[test]
+    fn arm_names_unique() {
+        let names: Vec<&str> = extended_arms().iter().map(|a| a.name()).collect();
+        let mut d = names.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), names.len());
+    }
+}

@@ -1,0 +1,411 @@
+//! Algorithm 1: Collaborative Gating SafeOBO.
+//!
+//! Faithful implementation of the paper's algorithm:
+//!
+//! * **Warm-up (t ≤ T₀)** — observe context, select a *random* arm,
+//!   observe (response time, accuracy, resource cost, delay cost),
+//!   update the three GP posteriors y⁽⁰⁾ (total cost), y⁽¹⁾ (accuracy),
+//!   y⁽²⁾ (response time).
+//! * **Exploitation (t > T₀)** — estimate the safe set (Eq. 3)
+//!   `S_t = S₀ ∪ {x : μ⁽¹⁾ − βσ⁽¹⁾ ≥ QoSᵖ_min ∧ μ⁽²⁾ + βσ⁽²⁾ ≤ QoSʰ_max}`
+//!   then pick `x_t = argmin_{x∈S_t} μ⁽⁰⁾ − β_t σ⁽⁰⁾` (Eq. 4, an
+//!   optimistic lower confidence bound on cost).
+//!
+//! `S₀` is the seed safe set: the most conservative arm (cloud GraphRAG
+//! + cloud LLM) is always admissible, mirroring the paper's assumption
+//! that a known-safe fallback exists.
+
+use super::gp::{Gp, Kernel};
+use super::{Arm, GateContext};
+use crate::util::rng::Rng;
+
+/// QoS constraints (paper Eq. 2).
+#[derive(Clone, Copy, Debug)]
+pub struct Qos {
+    /// QoSᵖ_min: minimum acceptable accuracy (probability).
+    pub min_accuracy: f64,
+    /// QoSʰ_max: maximum acceptable response time (seconds).
+    pub max_delay_s: f64,
+}
+
+/// One observation fed back to the gate after serving a query.
+#[derive(Clone, Copy, Debug)]
+pub struct Observation {
+    /// u_r: resource cost (TFLOPs).
+    pub resource_cost: f64,
+    /// u_d: time cost (delay · GPU TFLOPS).
+    pub delay_cost: f64,
+    /// ρ_t: graded accuracy (0/1 from the judge).
+    pub accuracy: f64,
+    /// h_t: end-to-end response time (seconds).
+    pub delay_s: f64,
+}
+
+/// Decision record (for tracing / Table 7 style output).
+#[derive(Clone, Debug)]
+pub struct Decision {
+    pub arm_idx: usize,
+    pub explored: bool,
+    pub safe_set: Vec<usize>,
+    /// (μ_cost, σ_cost) per arm at decision time (empty during warm-up).
+    pub cost_posterior: Vec<(f64, f64)>,
+}
+
+/// Per-arm GP triplet (cost y⁽⁰⁾, accuracy y⁽¹⁾, delay y⁽²⁾).
+///
+/// One independent triplet per arm avoids two failure modes of a single
+/// shared GP over (context ⊕ one-hot arm): cross-arm bleed through the
+/// kernel, and sliding-window eviction of rarely-picked arms' history
+/// once the exploitation phase concentrates on a favourite.
+struct ArmGps {
+    cost: Gp,
+    acc: Gp,
+    delay: Gp,
+}
+
+impl ArmGps {
+    fn new(window: usize) -> ArmGps {
+        ArmGps {
+            cost: Gp::new(
+                Kernel { sf2: 0.5, length_scale: 0.7, noise: 0.02 },
+                1.0, // pessimistic prior cost (normalized)
+                window,
+            ),
+            acc: Gp::new(
+                Kernel { sf2: 0.2, length_scale: 0.7, noise: 0.10 },
+                0.5,
+                window,
+            ),
+            delay: Gp::new(
+                Kernel { sf2: 0.5, length_scale: 0.7, noise: 0.05 },
+                2.0, // pessimistic prior delay (s)
+                window,
+            ),
+        }
+    }
+}
+
+/// The SafeOBO gate.
+pub struct SafeObo {
+    pub arms: Vec<Arm>,
+    pub qos: Qos,
+    /// Exploration parameter β (Eq. 3/4).
+    pub beta: f64,
+    /// Warm-up length T₀.
+    pub t0: usize,
+    /// δ₁, δ₂ (Eq. 1).
+    pub delta1: f64,
+    pub delta2: f64,
+    /// Cost normalization scale (keeps the GP O(1)).
+    pub cost_scale: f64,
+    /// Seed safe arm indices (S₀).
+    pub seed_safe: Vec<usize>,
+    gps: Vec<ArmGps>,
+    step: usize,
+    rng: Rng,
+}
+
+impl SafeObo {
+    pub fn new(arms: Vec<Arm>, qos: Qos, t0: usize, beta: f64, seed: u64) -> SafeObo {
+        let num_arms = arms.len();
+        // Conservative fallback: last arm (cloud-graph+llm) is seed-safe.
+        let seed_safe = vec![num_arms - 1];
+        let window = 500;
+        SafeObo {
+            arms,
+            qos,
+            beta,
+            t0,
+            delta1: 1.0,
+            delta2: 1.0,
+            cost_scale: 500.0,
+            seed_safe,
+            gps: (0..num_arms).map(|_| ArmGps::new(window)).collect(),
+            step: 0,
+            rng: Rng::new(seed).fork("safeobo"),
+        }
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    pub fn in_warmup(&self) -> bool {
+        self.step < self.t0
+    }
+
+    /// Algorithm 1 decision step.
+    pub fn decide(&mut self, ctx: &GateContext) -> Decision {
+        let n = self.arms.len();
+        if self.in_warmup() {
+            // Warm-up: random arm (line 5).
+            let arm = self.rng.below(n);
+            return Decision {
+                arm_idx: arm,
+                explored: true,
+                safe_set: (0..n).collect(),
+                cost_posterior: Vec::new(),
+            };
+        }
+
+        // Safe-set estimation (Eq. 3, line 17). Each GP family sees its
+        // own low-dimensional feature subspace (see GateContext).
+        let za = ctx.acc_features();
+        let zd = ctx.delay_features();
+        let zc = ctx.cost_features();
+        let mut safe: Vec<usize> = Vec::new();
+        let mut posteriors = Vec::with_capacity(n);
+        for a in 0..n {
+            let (mu_acc, sd_acc) = self.gps[a].acc.predict(&za);
+            let (mu_del, sd_del) = self.gps[a].delay.predict(&zd);
+            let (mu_cost, sd_cost) = self.gps[a].cost.predict(&zc);
+            posteriors.push((mu_cost, sd_cost));
+            let acc_ok = mu_acc - self.beta * sd_acc >= self.qos.min_accuracy;
+            let delay_ok = mu_del + self.beta * sd_del <= self.qos.max_delay_s;
+            if acc_ok && delay_ok {
+                safe.push(a);
+            }
+        }
+        // S_t = S₀ ∪ {…}.
+        for &s in &self.seed_safe {
+            if !safe.contains(&s) {
+                safe.push(s);
+            }
+        }
+        safe.sort_unstable();
+
+        // Acquisition (Eq. 4, line 19): optimistic cost LCB over S_t.
+        let mut best = safe[0];
+        let mut best_score = f64::INFINITY;
+        for &a in &safe {
+            let (mu, sd) = posteriors[a];
+            let score = mu - self.beta * sd;
+            if score < best_score {
+                best_score = score;
+                best = a;
+            }
+        }
+        Decision {
+            arm_idx: best,
+            explored: false,
+            safe_set: safe,
+            cost_posterior: posteriors,
+        }
+    }
+
+    /// Posterior update (lines 8–11 / 21–25).
+    pub fn observe(&mut self, ctx: &GateContext, arm_idx: usize, obs: Observation) {
+        let total_cost = self.delta1 * obs.resource_cost + self.delta2 * obs.delay_cost;
+        let g = &mut self.gps[arm_idx];
+        g.cost.observe(ctx.cost_features(), total_cost / self.cost_scale);
+        g.acc.observe(ctx.acc_features(), obs.accuracy);
+        g.delay.observe(ctx.delay_features(), obs.delay_s);
+        self.step += 1;
+    }
+
+    /// Full posterior (mean, sd) triple for one arm: accuracy, delay,
+    /// cost (unnormalized). Used for tracing and Table-7 style output.
+    pub fn predict_arm_full(
+        &self,
+        ctx: &GateContext,
+        arm_idx: usize,
+    ) -> ((f64, f64), (f64, f64), (f64, f64)) {
+        let g = &self.gps[arm_idx];
+        let acc = g.acc.predict(&ctx.acc_features());
+        let delay = g.delay.predict(&ctx.delay_features());
+        let (cm, cs) = g.cost.predict(&ctx.cost_features());
+        (acc, delay, (cm * self.cost_scale, cs * self.cost_scale))
+    }
+
+    /// Posterior accuracy/delay/cost prediction for one arm (tracing).
+    pub fn predict_arm(&self, ctx: &GateContext, arm_idx: usize) -> (f64, f64, f64) {
+        let g = &self.gps[arm_idx];
+        let (acc, _) = g.acc.predict(&ctx.acc_features());
+        let (delay, _) = g.delay.predict(&ctx.delay_features());
+        let (cost, _) = g.cost.predict(&ctx.cost_features());
+        (acc, delay, cost * self.cost_scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gating::standard_arms;
+
+    fn ctx(overlap: f64, hops: usize) -> GateContext {
+        GateContext {
+            cloud_delay_ms: 300.0,
+            edge_delay_ms: 20.0,
+            best_overlap: overlap,
+            best_edge_is_local: true,
+            local_overlap: overlap,
+            hops,
+            length_tokens: 12,
+            entity_count: 3,
+        }
+    }
+
+    /// Synthetic environment: arm 1 (local rag) is cheap and accurate on
+    /// high-overlap queries; arm 4 (cloud) always accurate but expensive.
+    fn env(arm: usize, c: &GateContext) -> Observation {
+        let accurate = match arm {
+            0 => c.best_overlap > 0.95 && c.hops == 1, // slm-only rarely enough
+            1 | 2 => c.best_overlap > 0.6 && c.hops <= 2,
+            _ => true,
+        };
+        let (rc, dc, delay) = match arm {
+            0 => (0.6, 0.03, 0.3),
+            1 => (23.0, 0.6, 0.9),
+            2 => (23.0, 0.9, 1.0),
+            3 => (60.0, 3.0, 2.8),
+            _ => (711.0, 9.7, 1.0),
+        };
+        Observation {
+            resource_cost: rc,
+            delay_cost: dc,
+            accuracy: if accurate { 1.0 } else { 0.0 },
+            delay_s: delay,
+        }
+    }
+
+    fn train(gate: &mut SafeObo, steps: usize) {
+        let mut r = Rng::new(9);
+        for _ in 0..steps {
+            let c = ctx(
+                if r.chance(0.7) { 0.9 } else { 0.2 },
+                if r.chance(0.7) { 1 } else { 2 },
+            );
+            let d = gate.decide(&c);
+            let o = env(d.arm_idx, &c);
+            gate.observe(&c, d.arm_idx, o);
+        }
+    }
+
+    #[test]
+    fn warmup_is_random_then_stops() {
+        let mut gate = SafeObo::new(
+            standard_arms(),
+            Qos { min_accuracy: 0.85, max_delay_s: 5.0 },
+            50,
+            2.0,
+            1,
+        );
+        let mut arms_seen = std::collections::HashSet::new();
+        for _ in 0..50 {
+            let c = ctx(0.5, 1);
+            let d = gate.decide(&c);
+            assert!(d.explored);
+            arms_seen.insert(d.arm_idx);
+            gate.observe(&c, d.arm_idx, env(d.arm_idx, &c));
+        }
+        assert!(arms_seen.len() >= 4, "warm-up should explore most arms");
+        assert!(!gate.in_warmup());
+        assert!(!gate.decide(&ctx(0.5, 1)).explored);
+    }
+
+    #[test]
+    fn exploitation_picks_cheap_safe_arm_on_easy_queries() {
+        let mut gate = SafeObo::new(
+            standard_arms(),
+            Qos { min_accuracy: 0.80, max_delay_s: 5.0 },
+            200,
+            1.5,
+            2,
+        );
+        train(&mut gate, 400);
+        // Easy query, good local coverage: should avoid the cloud arm.
+        let mut cheap = 0;
+        for _ in 0..20 {
+            let c = ctx(0.9, 1);
+            let d = gate.decide(&c);
+            if matches!(d.arm_idx, 1 | 2) {
+                cheap += 1;
+            }
+            gate.observe(&c, d.arm_idx, env(d.arm_idx, &c));
+        }
+        assert!(cheap >= 15, "picked cheap arms only {cheap}/20");
+    }
+
+    #[test]
+    fn exploitation_escalates_hard_queries() {
+        let mut gate = SafeObo::new(
+            standard_arms(),
+            Qos { min_accuracy: 0.80, max_delay_s: 5.0 },
+            200,
+            1.5,
+            3,
+        );
+        train(&mut gate, 400);
+        let mut cloud = 0;
+        for _ in 0..20 {
+            let c = ctx(0.1, 3); // no edge coverage, multi-hop
+            let d = gate.decide(&c);
+            if d.arm_idx >= 3 {
+                cloud += 1;
+            }
+            gate.observe(&c, d.arm_idx, env(d.arm_idx, &c));
+        }
+        assert!(cloud >= 15, "escalated only {cloud}/20");
+    }
+
+    #[test]
+    fn delay_constraint_prunes_slow_arms() {
+        // Under a strict 1 s budget, arm 3 (cloud-graph+slm, 2.8 s) must
+        // leave the safe set after warm-up.
+        let mut gate = SafeObo::new(
+            standard_arms(),
+            Qos { min_accuracy: 0.80, max_delay_s: 1.0 },
+            200,
+            1.5,
+            4,
+        );
+        train(&mut gate, 500);
+        let mut picked3 = 0;
+        for _ in 0..30 {
+            let c = ctx(0.2, 2);
+            let d = gate.decide(&c);
+            if d.arm_idx == 3 {
+                picked3 += 1;
+            }
+            gate.observe(&c, d.arm_idx, env(d.arm_idx, &c));
+        }
+        assert!(picked3 <= 2, "slow arm picked {picked3} times under 1s QoS");
+    }
+
+    #[test]
+    fn safe_set_always_contains_seed() {
+        let mut gate = SafeObo::new(
+            standard_arms(),
+            Qos { min_accuracy: 0.99, max_delay_s: 0.01 }, // impossible QoS
+            10,
+            3.0,
+            5,
+        );
+        train(&mut gate, 30);
+        let d = gate.decide(&ctx(0.5, 2));
+        assert!(d.safe_set.contains(&4), "seed-safe arm missing: {:?}", d.safe_set);
+    }
+
+    #[test]
+    fn decisions_deterministic_for_seed() {
+        let make = || {
+            let mut g = SafeObo::new(
+                standard_arms(),
+                Qos { min_accuracy: 0.8, max_delay_s: 5.0 },
+                100,
+                2.0,
+                7,
+            );
+            let mut picks = Vec::new();
+            let mut r = Rng::new(1);
+            for _ in 0..150 {
+                let c = ctx(r.f64(), 1 + r.below(3));
+                let d = g.decide(&c);
+                picks.push(d.arm_idx);
+                g.observe(&c, d.arm_idx, env(d.arm_idx, &c));
+            }
+            picks
+        };
+        assert_eq!(make(), make());
+    }
+}

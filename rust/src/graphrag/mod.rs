@@ -1,0 +1,385 @@
+//! GraphRAG substrate (paper §3.2): entity graph, communities, search.
+//!
+//! The paper's cloud tier runs Microsoft-style GraphRAG: "nodes represent
+//! discrete knowledge units, edges capture relationships, and communities
+//! group semantically related concepts". We reproduce the structure the
+//! paper relies on:
+//!
+//! * **Graph build** — nodes are corpus entities; an edge connects two
+//!   entities co-mentioned by a fact, weighted by co-mention count.
+//! * **Community detection** — deterministic label propagation (a
+//!   lightweight stand-in for Leiden): every node adopts the most common
+//!   label among weighted neighbours, smallest-label tie-break, iterated
+//!   to a fixed point.
+//! * **Local search** — query entities → their communities → member
+//!   chunks ranked by keyword hits. Multi-hop friendly: intra-community
+//!   chunks cover fact chains even when the query only names the head
+//!   entity.
+//! * **Global search** — community summaries ranked against the query
+//!   (the expensive, token-heavy path that drives Table 1's ~9k input
+//!   tokens).
+//! * **Top-k community extraction** — the adaptive-update feed: given
+//!   recent query keywords, return the communities with the most keyword
+//!   matches plus their chunks (paper §5: "top-k communities containing
+//!   the highest number of similar keywords or nodes").
+
+use std::collections::HashMap;
+
+use crate::corpus::{ChunkId, Corpus, EntityId};
+use crate::index::normalize;
+
+/// A detected community.
+#[derive(Clone, Debug)]
+pub struct Community {
+    pub id: usize,
+    pub entities: Vec<EntityId>,
+    pub chunks: Vec<ChunkId>,
+    /// Summary keyword set (entity names), the "community report".
+    pub keywords: Vec<String>,
+}
+
+/// The knowledge graph over a corpus.
+pub struct GraphRag {
+    /// adjacency: entity -> (entity, weight)
+    pub adj: Vec<Vec<(EntityId, f64)>>,
+    /// entity -> community index (into `communities`)
+    pub membership: Vec<usize>,
+    pub communities: Vec<Community>,
+    /// normalized keyword -> entity ids with that name
+    keyword_entities: HashMap<String, Vec<EntityId>>,
+}
+
+impl GraphRag {
+    /// Build the graph + communities from a corpus.
+    pub fn build(corpus: &Corpus) -> GraphRag {
+        let n = corpus.entities.len();
+        let mut weights: HashMap<(EntityId, EntityId), f64> = HashMap::new();
+        for f in &corpus.facts {
+            let (a, b) = if f.subject < f.object {
+                (f.subject, f.object)
+            } else {
+                (f.object, f.subject)
+            };
+            *weights.entry((a, b)).or_insert(0.0) += 1.0;
+        }
+        let mut adj: Vec<Vec<(EntityId, f64)>> = vec![Vec::new(); n];
+        for (&(a, b), &w) in &weights {
+            adj[a].push((b, w));
+            adj[b].push((a, w));
+        }
+        for l in adj.iter_mut() {
+            l.sort_by_key(|&(e, _)| e); // determinism
+        }
+
+        let labels = label_propagation(&adj, 20);
+
+        // Assemble communities (ordered by label for determinism) and
+        // remap membership to community indices.
+        let mut by_label: HashMap<usize, Vec<EntityId>> = HashMap::new();
+        for (e, &label) in labels.iter().enumerate() {
+            by_label.entry(label).or_default().push(e);
+        }
+        let mut label_list: Vec<usize> = by_label.keys().copied().collect();
+        label_list.sort_unstable();
+
+        let mut communities: Vec<Community> = label_list
+            .iter()
+            .enumerate()
+            .map(|(cid, &label)| {
+                let entities = by_label[&label].clone();
+                let keywords = entities
+                    .iter()
+                    .map(|&e| corpus.entities[e].name.clone())
+                    .collect();
+                Community {
+                    id: cid,
+                    entities,
+                    chunks: Vec::new(),
+                    keywords,
+                }
+            })
+            .collect();
+        let label_to_cid: HashMap<usize, usize> = label_list
+            .iter()
+            .enumerate()
+            .map(|(cid, &label)| (label, cid))
+            .collect();
+        let membership: Vec<usize> = labels.iter().map(|l| label_to_cid[l]).collect();
+
+        // A chunk joins every community containing one of its fact
+        // entities (chunks can bridge communities).
+        for ch in &corpus.chunks {
+            let mut seen = Vec::new();
+            for &fid in &ch.facts {
+                let f = &corpus.facts[fid];
+                for e in [f.subject, f.object] {
+                    let cid = membership[e];
+                    if !seen.contains(&cid) {
+                        seen.push(cid);
+                        communities[cid].chunks.push(ch.id);
+                    }
+                }
+            }
+        }
+
+        let mut keyword_entities: HashMap<String, Vec<EntityId>> = HashMap::new();
+        for e in &corpus.entities {
+            keyword_entities
+                .entry(normalize(&e.name))
+                .or_default()
+                .push(e.id);
+        }
+
+        GraphRag {
+            adj,
+            membership,
+            communities,
+            keyword_entities,
+        }
+    }
+
+    /// Entities matching a keyword (exact normalized match).
+    pub fn entities_for_keyword(&self, kw: &str) -> &[EntityId] {
+        self.keyword_entities
+            .get(&normalize(kw))
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Community index of an entity.
+    pub fn community_of(&self, e: EntityId) -> usize {
+        self.membership[e]
+    }
+
+    /// **Local search**: query keywords → communities → member chunks
+    /// ranked by (distinct query keyword hits, then chunk id). Returns
+    /// (chunk id, score). This is the retrieval the cloud serves for the
+    /// gate's `CloudGraph` arm.
+    pub fn local_search(
+        &self,
+        corpus: &Corpus,
+        query_keywords: &[&str],
+        k: usize,
+    ) -> Vec<(ChunkId, usize)> {
+        let mut comm_hit: Vec<usize> = Vec::new();
+        for kw in query_keywords {
+            for &e in self.entities_for_keyword(kw) {
+                let cid = self.community_of(e);
+                if !comm_hit.contains(&cid) {
+                    comm_hit.push(cid);
+                }
+            }
+        }
+        let mut scores: HashMap<ChunkId, usize> = HashMap::new();
+        let norm_kws: Vec<String> = query_keywords.iter().map(|k| normalize(k)).collect();
+        for &cid in &comm_hit {
+            for &ch in &self.communities[cid].chunks {
+                let chunk = &corpus.chunks[ch];
+                let hits = chunk
+                    .keywords
+                    .iter()
+                    .filter(|kw| norm_kws.contains(&normalize(kw)))
+                    .count();
+                // Community membership grants a base score of 1 so fact
+                // chains surface even without direct keyword overlap.
+                let entry = scores.entry(ch).or_insert(0);
+                *entry = (*entry).max(hits.max(1));
+            }
+        }
+        let mut ranked: Vec<(ChunkId, usize)> = scores.into_iter().collect();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        ranked.truncate(k);
+        ranked
+    }
+
+    /// **Global search** context size: GraphRAG's map-reduce over
+    /// community reports consumes tokens proportional to the number of
+    /// communities scanned; returns the char volume of summaries read.
+    /// This is what makes the cloud path token-heavy (Table 1).
+    pub fn global_search_context_chars(&self) -> usize {
+        // Community reports are verbose: a header, one described line per
+        // entity (~name + 32 chars), and a reference per member chunk.
+        self.communities
+            .iter()
+            .map(|c| {
+                128 + c
+                    .keywords
+                    .iter()
+                    .map(|k| k.len() + 32)
+                    .sum::<usize>()
+                    + 8 * c.chunks.len()
+            })
+            .sum()
+    }
+
+    /// **Top-k community extraction** for adaptive updates (paper §5):
+    /// rank communities by the number of query keywords matching their
+    /// entity names; return community ids, best first.
+    pub fn top_communities(&self, query_keywords: &[&str], k: usize) -> Vec<usize> {
+        let norm_kws: Vec<String> = query_keywords.iter().map(|q| normalize(q)).collect();
+        let mut scored: Vec<(usize, usize)> = self
+            .communities
+            .iter()
+            .map(|c| {
+                let hits = c
+                    .keywords
+                    .iter()
+                    .filter(|kw| norm_kws.contains(&normalize(kw)))
+                    .count();
+                (c.id, hits)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        scored.into_iter().take(k).map(|(id, _)| id).collect()
+    }
+}
+
+/// Deterministic synchronous label propagation.
+fn label_propagation(adj: &[Vec<(EntityId, f64)>], max_iters: usize) -> Vec<usize> {
+    let n = adj.len();
+    let mut labels: Vec<usize> = (0..n).collect();
+    for _ in 0..max_iters {
+        let mut changed = false;
+        let snapshot = labels.clone();
+        for v in 0..n {
+            if adj[v].is_empty() {
+                continue;
+            }
+            let mut tally: HashMap<usize, f64> = HashMap::new();
+            for &(u, w) in &adj[v] {
+                *tally.entry(snapshot[u]).or_insert(0.0) += w;
+            }
+            let mut entries: Vec<(usize, f64)> = tally.into_iter().collect();
+            // Highest weight wins; smallest label breaks ties.
+            entries.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+            if let Some(&(label, _)) = entries.first() {
+                if label != labels[v] {
+                    labels[v] = label;
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    labels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::Profile;
+
+    fn graph() -> (Corpus, GraphRag) {
+        let c = Corpus::generate(Profile::HarryPotter, 3);
+        let g = GraphRag::build(&c);
+        (c, g)
+    }
+
+    #[test]
+    fn communities_partition_entities() {
+        let (c, g) = graph();
+        let total: usize = g.communities.iter().map(|cm| cm.entities.len()).sum();
+        assert_eq!(total, c.entities.len());
+        assert!(g.communities.len() > 1, "expected multiple communities");
+        assert!(
+            g.communities.len() < c.entities.len(),
+            "labels should coalesce"
+        );
+    }
+
+    #[test]
+    fn membership_consistent_with_communities() {
+        let (c, g) = graph();
+        for e in 0..c.entities.len() {
+            let cid = g.community_of(e);
+            assert!(g.communities[cid].entities.contains(&e));
+        }
+    }
+
+    #[test]
+    fn communities_group_related_entities() {
+        let (c, g) = graph();
+        let mut internal = 0usize;
+        let mut external = 0usize;
+        for f in &c.facts {
+            if g.membership[f.subject] == g.membership[f.object] {
+                internal += 1;
+            } else {
+                external += 1;
+            }
+        }
+        assert!(
+            internal > external,
+            "internal {internal} <= external {external}"
+        );
+    }
+
+    #[test]
+    fn local_search_finds_supporting_chunks() {
+        let (c, g) = graph();
+        let mut found = 0;
+        let sample: Vec<_> = c.qa.iter().take(100).collect();
+        for qa in &sample {
+            let kws = c.qa_keywords(qa);
+            let hits = g.local_search(&c, &kws, 8);
+            if qa
+                .supporting_chunks
+                .iter()
+                .any(|sc| hits.iter().any(|&(ch, _)| ch == *sc))
+            {
+                found += 1;
+            }
+        }
+        // GraphRAG should retrieve support for the large majority.
+        assert!(found >= 75, "found {found}/100");
+    }
+
+    #[test]
+    fn local_search_deterministic_and_bounded() {
+        let (c, g) = graph();
+        let kws = c.qa_keywords(&c.qa[0]);
+        let a = g.local_search(&c, &kws, 5);
+        let b = g.local_search(&c, &kws, 5);
+        assert_eq!(a, b);
+        assert!(a.len() <= 5);
+    }
+
+    #[test]
+    fn top_communities_match_keywords() {
+        let (c, g) = graph();
+        let qa = &c.qa[10];
+        let kws = c.qa_keywords(qa);
+        let top = g.top_communities(&kws, 3);
+        assert!(!top.is_empty());
+        let best = &g.communities[top[0]];
+        assert!(
+            qa.entities.iter().any(|e| best.entities.contains(e)),
+            "top community misses all query entities"
+        );
+    }
+
+    #[test]
+    fn global_context_is_large() {
+        let (_, g) = graph();
+        assert!(g.global_search_context_chars() > 2000);
+    }
+
+    #[test]
+    fn entities_for_keyword_normalized() {
+        let (c, g) = graph();
+        let name = &c.entities[0].name;
+        assert!(!g.entities_for_keyword(&name.to_lowercase()).is_empty());
+        assert!(!g.entities_for_keyword(&name.to_uppercase()).is_empty());
+    }
+
+    #[test]
+    fn build_deterministic() {
+        let c = Corpus::generate(Profile::Wiki, 4);
+        let g1 = GraphRag::build(&c);
+        let g2 = GraphRag::build(&c);
+        assert_eq!(g1.membership, g2.membership);
+        assert_eq!(g1.communities.len(), g2.communities.len());
+    }
+}

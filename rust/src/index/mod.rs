@@ -1,0 +1,187 @@
+//! Inverted keyword index + overlap-ratio scoring (paper §5).
+//!
+//! The paper's edge-assisted retrieval picks the target edge dataset by
+//! the *overlap ratio* — "the proportion of query keywords present in the
+//! target dataset". This module provides the keyword machinery both the
+//! edge chunk stores and the cloud distributor use: an inverted index
+//! from keyword → chunk ids, plus set-overlap scoring.
+
+use std::collections::{HashMap, HashSet};
+
+/// Inverted index over an (externally owned) chunk collection.
+#[derive(Clone, Debug, Default)]
+pub struct KeywordIndex {
+    /// keyword -> chunk ids containing it (insertion order preserved).
+    postings: HashMap<String, Vec<usize>>,
+    /// all indexed chunk ids, for len/contains queries.
+    chunk_keywords: HashMap<usize, Vec<String>>,
+}
+
+impl KeywordIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of indexed chunks.
+    pub fn len(&self) -> usize {
+        self.chunk_keywords.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunk_keywords.is_empty()
+    }
+
+    pub fn contains_chunk(&self, chunk_id: usize) -> bool {
+        self.chunk_keywords.contains_key(&chunk_id)
+    }
+
+    /// Index a chunk's keywords (idempotent per chunk id: re-adding
+    /// replaces the previous keyword set).
+    pub fn add_chunk(&mut self, chunk_id: usize, keywords: &[String]) {
+        if self.chunk_keywords.contains_key(&chunk_id) {
+            self.remove_chunk(chunk_id);
+        }
+        for kw in keywords {
+            let norm = normalize(kw);
+            self.postings.entry(norm).or_default().push(chunk_id);
+        }
+        self.chunk_keywords
+            .insert(chunk_id, keywords.iter().map(|k| normalize(k)).collect());
+    }
+
+    /// Remove a chunk (FIFO eviction path of the edge store).
+    pub fn remove_chunk(&mut self, chunk_id: usize) {
+        if let Some(kws) = self.chunk_keywords.remove(&chunk_id) {
+            for kw in kws {
+                if let Some(v) = self.postings.get_mut(&kw) {
+                    v.retain(|&c| c != chunk_id);
+                    if v.is_empty() {
+                        self.postings.remove(&kw);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Does any indexed chunk mention this keyword?
+    pub fn has_keyword(&self, kw: &str) -> bool {
+        self.postings.contains_key(&normalize(kw))
+    }
+
+    /// Overlap ratio: |query keywords found in the index| / |query keywords|.
+    /// This is the paper's edge-selection score.
+    pub fn overlap_ratio(&self, query_keywords: &[&str]) -> f64 {
+        if query_keywords.is_empty() {
+            return 0.0;
+        }
+        let hits = query_keywords
+            .iter()
+            .filter(|kw| self.has_keyword(kw))
+            .count();
+        hits as f64 / query_keywords.len() as f64
+    }
+
+    /// Retrieve top-k chunks ranked by the number of distinct query
+    /// keywords they contain (ties broken by chunk id for determinism).
+    pub fn retrieve(&self, query_keywords: &[&str], k: usize) -> Vec<(usize, usize)> {
+        let mut scores: HashMap<usize, usize> = HashMap::new();
+        let mut seen_kw: HashSet<String> = HashSet::new();
+        for kw in query_keywords {
+            let norm = normalize(kw);
+            if !seen_kw.insert(norm.clone()) {
+                continue; // count each distinct keyword once
+            }
+            if let Some(chunks) = self.postings.get(&norm) {
+                for &c in chunks {
+                    *scores.entry(c).or_insert(0) += 1;
+                }
+            }
+        }
+        let mut ranked: Vec<(usize, usize)> = scores.into_iter().collect();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        ranked.truncate(k);
+        ranked
+    }
+
+    /// All distinct keywords currently indexed.
+    pub fn keywords(&self) -> impl Iterator<Item = &str> {
+        self.postings.keys().map(|s| s.as_str())
+    }
+}
+
+/// Keyword normalization: lowercase, trim punctuation.
+pub fn normalize(kw: &str) -> String {
+    kw.trim_matches(|c: char| !c.is_alphanumeric() && c != '_')
+        .to_lowercase()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kws(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn overlap_ratio_basic() {
+        let mut ix = KeywordIndex::new();
+        ix.add_chunk(0, &kws(&["Alohomora", "spell", "door"]));
+        assert_eq!(ix.overlap_ratio(&["alohomora", "spell"]), 1.0);
+        assert_eq!(ix.overlap_ratio(&["alohomora", "dragon"]), 0.5);
+        assert_eq!(ix.overlap_ratio(&["dragon"]), 0.0);
+        assert_eq!(ix.overlap_ratio(&[]), 0.0);
+    }
+
+    #[test]
+    fn retrieve_ranks_by_keyword_hits() {
+        let mut ix = KeywordIndex::new();
+        ix.add_chunk(0, &kws(&["a", "b"]));
+        ix.add_chunk(1, &kws(&["a", "b", "c"]));
+        ix.add_chunk(2, &kws(&["c"]));
+        let r = ix.retrieve(&["a", "b", "c"], 2);
+        assert_eq!(r[0], (1, 3));
+        assert_eq!(r[1], (0, 2));
+    }
+
+    #[test]
+    fn retrieve_dedups_query_keywords() {
+        let mut ix = KeywordIndex::new();
+        ix.add_chunk(0, &kws(&["a"]));
+        ix.add_chunk(1, &kws(&["a", "b"]));
+        let r = ix.retrieve(&["a", "a", "a", "b"], 2);
+        assert_eq!(r[0], (1, 2)); // not inflated by repeated "a"
+        assert_eq!(r[1], (0, 1));
+    }
+
+    #[test]
+    fn remove_chunk_cleans_postings() {
+        let mut ix = KeywordIndex::new();
+        ix.add_chunk(0, &kws(&["x", "y"]));
+        ix.add_chunk(1, &kws(&["x"]));
+        ix.remove_chunk(0);
+        assert!(!ix.contains_chunk(0));
+        assert!(ix.has_keyword("x"));
+        assert!(!ix.has_keyword("y"));
+        assert_eq!(ix.len(), 1);
+    }
+
+    #[test]
+    fn re_adding_replaces() {
+        let mut ix = KeywordIndex::new();
+        ix.add_chunk(0, &kws(&["old"]));
+        ix.add_chunk(0, &kws(&["new"]));
+        assert!(!ix.has_keyword("old"));
+        assert!(ix.has_keyword("new"));
+        assert_eq!(ix.len(), 1);
+    }
+
+    #[test]
+    fn normalization_case_insensitive() {
+        let mut ix = KeywordIndex::new();
+        ix.add_chunk(0, &kws(&["Hermione."]));
+        assert!(ix.has_keyword("hermione"));
+        assert!(ix.has_keyword("HERMIONE"));
+        assert_eq!(ix.overlap_ratio(&["Hermione"]), 1.0);
+    }
+}

@@ -1,0 +1,58 @@
+//! # EACO-RAG — Edge-Assisted and Collaborative RAG
+//!
+//! Full-system reproduction of *"EACO-RAG: Towards Distributed Tiered LLM
+//! Deployment using Edge-Assisted and Collaborative RAG with Adaptive
+//! Knowledge Update"* (Li et al., cs.DC 2024) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The crate is the **L3 coordinator**: it owns the serving event loop,
+//! the distributed edge/cloud topology, the adaptive knowledge-update
+//! machinery, and the collaborative gating mechanism (Safe Online
+//! Bayesian Optimization). Model compute (L2 JAX transformer tiers, L1
+//! Pallas flash-attention) is AOT-compiled by `python/compile/aot.py`
+//! into `artifacts/*.hlo.txt` and executed through [`runtime`] on the
+//! PJRT CPU client — Python is never on the request path.
+//!
+//! ## Module map (see DESIGN.md §4 for the full inventory)
+//!
+//! * [`util`] — PRNG, CLI parsing, JSON, stats (offline substitutes for
+//!   rand/clap/serde/criterion).
+//! * [`config`] — typed system configuration + TOML-subset parser.
+//! * [`linalg`] — dense matrices and Cholesky solves for the GP.
+//! * [`corpus`] — synthetic corpora + QA datasets (wiki / hp profiles).
+//! * [`workload`] — query streams with temporal drift and spatial skew.
+//! * [`index`] — inverted keyword index and overlap-ratio scoring.
+//! * [`vecstore`] — cosine top-k vector store.
+//! * [`graphrag`] — entity graph, communities, local/global search.
+//! * [`netsim`] — deterministic network delay simulation.
+//! * [`cost`] — Pope-et-al TFLOPs cost model + Table-3 GPU constants.
+//! * [`oracle`] — answer-accuracy oracle (GPT-4o grading substitute).
+//! * [`edge`] — edge node: FIFO chunk store + adaptive knowledge update.
+//! * [`cloud`] — cloud node: GraphRAG retrieval + knowledge distributor.
+//! * [`gating`] — GP regression + SafeOBO collaborative gate (Alg. 1).
+//! * [`runtime`] — PJRT artifact loading/execution, tokenizer, generation.
+//! * [`coordinator`] — router, dynamic batcher, serving pipeline, metrics.
+//! * [`sim`] — full-system simulation harness used by benches/examples.
+//! * [`testutil`] — mini property-testing framework.
+
+pub mod cloud;
+pub mod config;
+pub mod coordinator;
+pub mod corpus;
+pub mod cost;
+pub mod edge;
+pub mod gating;
+pub mod graphrag;
+pub mod index;
+pub mod linalg;
+pub mod netsim;
+pub mod oracle;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;
+pub mod util;
+pub mod vecstore;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,327 @@
+//! Dense linear algebra for the Gaussian-process gate.
+//!
+//! Row-major `Mat`, Cholesky factorization and triangular solves — the
+//! complete set of operations `gating::gp` needs for posterior inference
+//! (the offline image has no nalgebra/ndarray). Sizes are modest (GP
+//! training sets of a few hundred to a few thousand points), so clarity
+//! beats blocking; the hot `solve` paths are still cache-friendly
+//! (row-major forward/backward substitution).
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// `self * v` for a column vector `v`.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| dot(self.row(i), v))
+            .collect()
+    }
+
+    /// `self * other`.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = out.row_mut(i);
+                for j in 0..orow.len() {
+                    out_row[j] += a * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite
+/// matrix: `A = L Lᵀ`. Returns `None` if A is not (numerically) SPD.
+pub struct Cholesky {
+    pub l: Mat,
+}
+
+impl Cholesky {
+    pub fn new(a: &Mat) -> Option<Cholesky> {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 || !s.is_finite() {
+                        return None;
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Some(Cholesky { l })
+    }
+
+    /// Extend an existing factor with one new row/col of A (rank-1 grow):
+    /// given L for A_n and the new column `a_new = [A(n+1, 0..n), A(n+1,n+1)]`,
+    /// produce L for A_{n+1}. O(n²) instead of O(n³) refactorization —
+    /// this is the incremental update the gate uses every serving step.
+    pub fn extend(&mut self, a_col: &[f64], a_diag: f64) -> bool {
+        let n = self.l.rows;
+        assert_eq!(a_col.len(), n);
+        // Solve L w = a_col (forward substitution).
+        let w = self.solve_lower(a_col);
+        let d = a_diag - dot(&w, &w);
+        if d <= 0.0 || !d.is_finite() {
+            return false;
+        }
+        let mut l = Mat::zeros(n + 1, n + 1);
+        for i in 0..n {
+            let src = self.l.row(i);
+            l.row_mut(i)[..=i].copy_from_slice(&src[..=i]);
+        }
+        l.row_mut(n)[..n].copy_from_slice(&w);
+        l[(n, n)] = d.sqrt();
+        self.l = l;
+        true
+    }
+
+    /// Solve `L y = b` (forward substitution).
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let row = self.l.row(i);
+            let mut s = b[i];
+            for j in 0..i {
+                s -= row[j] * y[j];
+            }
+            y[i] = s / row[i];
+        }
+        y
+    }
+
+    /// Solve `Lᵀ x = y` (backward substitution).
+    pub fn solve_upper(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(y.len(), n);
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for j in i + 1..n {
+                s -= self.l[(j, i)] * x[j];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve `A x = b` via the factor.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_upper(&self.solve_lower(b))
+    }
+
+    /// log|A| = 2·Σ log L_ii.
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Mat {
+        // A = B Bᵀ + n·I is SPD.
+        let mut b = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                b[(i, j)] = rng.normal();
+            }
+        }
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn matvec_and_matmul() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(a.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+        let b = Mat::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Mat::from_rows(&[vec![2.0, 1.0], vec![4.0, 3.0]]));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(1);
+        for n in [1, 2, 5, 20] {
+            let a = random_spd(n, &mut rng);
+            let ch = Cholesky::new(&a).expect("SPD");
+            let recon = ch.l.matmul(&ch.l.transpose());
+            for i in 0..n {
+                for j in 0..n {
+                    assert!(
+                        (recon[(i, j)] - a[(i, j)]).abs() < 1e-8,
+                        "n={n} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_solve_matches() {
+        let mut rng = Rng::new(2);
+        let n = 12;
+        let a = random_spd(n, &mut rng);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let ch = Cholesky::new(&a).unwrap();
+        let x = ch.solve(&b);
+        let ax = a.matvec(&x);
+        for i in 0..n {
+            assert!((ax[i] - b[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // indefinite
+        assert!(Cholesky::new(&a).is_none());
+    }
+
+    #[test]
+    fn extend_matches_full_factorization() {
+        let mut rng = Rng::new(3);
+        let n = 10;
+        let a = random_spd(n, &mut rng);
+        // Factor the leading 6×6 block, then extend one row at a time.
+        let m0 = 6;
+        let mut sub = Mat::zeros(m0, m0);
+        for i in 0..m0 {
+            for j in 0..m0 {
+                sub[(i, j)] = a[(i, j)];
+            }
+        }
+        let mut ch = Cholesky::new(&sub).unwrap();
+        for m in m0..n {
+            let col: Vec<f64> = (0..m).map(|j| a[(m, j)]).collect();
+            assert!(ch.extend(&col, a[(m, m)]));
+        }
+        let full = Cholesky::new(&a).unwrap();
+        for i in 0..n {
+            for j in 0..=i {
+                assert!(
+                    (ch.l[(i, j)] - full.l[(i, j)]).abs() < 1e-8,
+                    "({i},{j}): {} vs {}",
+                    ch.l[(i, j)],
+                    full.l[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn log_det_matches_2x2() {
+        let a = Mat::from_rows(&[vec![4.0, 0.0], vec![0.0, 9.0]]);
+        let ch = Cholesky::new(&a).unwrap();
+        assert!((ch.log_det() - (36.0f64).ln()).abs() < 1e-12);
+    }
+}

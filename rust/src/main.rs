@@ -1,0 +1,202 @@
+//! `eaco-rag` — the EACO-RAG leader binary.
+//!
+//! Subcommands:
+//!   serve    — real serving: SafeOBO gate + dynamic batcher + PJRT
+//!              generation over a synthetic workload (the E2E path).
+//!   simulate — virtual-time replication of a Table-4 style run
+//!              (baselines + EACO) without touching PJRT.
+//!   inspect  — print the artifact manifest the runtime would load.
+//!
+//! Examples:
+//!   eaco-rag serve --dataset wiki --steps 400 --qos cost
+//!   eaco-rag simulate --dataset hp --steps 1500 --warmup 500
+//!   eaco-rag inspect --artifacts artifacts
+
+use std::path::PathBuf;
+
+use eaco_rag::config::{QosPreset, SystemConfig};
+use eaco_rag::coordinator::Coordinator;
+use eaco_rag::corpus::Profile;
+use eaco_rag::runtime::Manifest;
+use eaco_rag::sim::{workload_for, KnowledgeMode, SimSystem};
+use eaco_rag::util::cli::Args;
+use eaco_rag::workload::Workload;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() {
+        "help".to_string()
+    } else {
+        argv.remove(0)
+    };
+    let code = match cmd.as_str() {
+        "serve" => serve(argv),
+        "simulate" => simulate(argv),
+        "inspect" => inspect(argv),
+        _ => {
+            eprintln!(
+                "usage: eaco-rag <serve|simulate|inspect> [options]\n  \
+                 serve    — real PJRT serving over a synthetic workload\n  \
+                 simulate — virtual-time Table-4 style run\n  \
+                 inspect  — print the artifact manifest"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn common(program: &str, about: &str) -> Args {
+    Args::new(program, about)
+        .opt("dataset", "wiki", "dataset profile: wiki | hp")
+        .opt("steps", "800", "workload length (queries)")
+        .opt("warmup", "300", "gate warm-up steps T0")
+        .opt("qos", "cost", "QoS preset: cost | delay")
+        .opt("seed", "42", "run seed")
+        .opt("edges", "4", "number of edge nodes")
+        .opt("edge-tier", "qwen3b", "edge SLM tier")
+        .opt("cloud-tier", "qwen72b", "cloud LLM tier")
+}
+
+fn build_cfg(a: &Args) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.dataset = Profile::parse(&a.get("dataset")).unwrap_or(Profile::Wiki);
+    cfg.warmup_steps = a.get_usize("warmup");
+    cfg.qos = QosPreset::parse(&a.get("qos")).unwrap_or(QosPreset::CostEfficient);
+    cfg.seed = a.get_u64("seed");
+    cfg.num_edges = a.get_usize("edges");
+    cfg.edge_tier = a.get("edge-tier");
+    cfg.cloud_tier = a.get("cloud-tier");
+    cfg
+}
+
+fn serve(argv: Vec<String>) -> i32 {
+    let a = match common("eaco-rag serve", "real PJRT serving")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("gen-tokens", "4", "real tokens decoded per request")
+        .parse_from(argv)
+    {
+        Ok(a) => a,
+        Err(m) => {
+            eprintln!("{m}");
+            return 2;
+        }
+    };
+    let cfg = build_cfg(&a);
+    let steps = a.get_usize("steps");
+    let artifacts = PathBuf::from(a.get("artifacts"));
+    println!(
+        "eaco-rag serve: dataset={} steps={steps} qos={} edges={}",
+        cfg.dataset.name(),
+        cfg.qos.name(),
+        cfg.num_edges
+    );
+    let mut coord = match Coordinator::new(cfg.clone(), &artifacts, a.get_usize("gen-tokens")) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let wl = Workload::generate(&coord.sim.corpus, workload_for(&cfg, steps), cfg.seed);
+    match coord.run(&wl) {
+        Ok(n) => {
+            println!("served {n} requests");
+            println!("{}", coord.metrics.summary());
+            println!("arm usage: {:?}", coord.metrics.arm_histogram());
+            println!("mean batch size: {:.2}", coord.batcher.mean_batch_size());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn simulate(argv: Vec<String>) -> i32 {
+    let a = match common("eaco-rag simulate", "virtual-time experiment run").parse_from(argv) {
+        Ok(a) => a,
+        Err(m) => {
+            eprintln!("{m}");
+            return 2;
+        }
+    };
+    let cfg = build_cfg(&a);
+    let steps = a.get_usize("steps");
+    println!(
+        "eaco-rag simulate: dataset={} steps={steps} qos={} warmup={}",
+        cfg.dataset.name(),
+        cfg.qos.name(),
+        cfg.warmup_steps
+    );
+    for name in ["llm-only", "naive-rag", "graph-slm", "graph-llm"] {
+        let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Static);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, steps), cfg.seed);
+        let stats = sys.run_baseline(&wl, SimSystem::baseline_arm(name).unwrap());
+        println!("{name:>12}: {}", stats.row());
+    }
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Adaptive);
+    let wl = Workload::generate(&sys.corpus, workload_for(&cfg, steps), cfg.seed);
+    let (stats, gate) = sys.run_eaco(&wl);
+    println!("{:>12}: {}", "eaco-rag", stats.row());
+    println!(
+        "         arm usage: {:?}",
+        gate.arms
+            .iter()
+            .map(|a| a.name())
+            .zip(stats.arm_counts.iter())
+            .collect::<Vec<_>>()
+    );
+    0
+}
+
+fn inspect(argv: Vec<String>) -> i32 {
+    let a = match Args::new("eaco-rag inspect", "print the artifact manifest")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .parse_from(argv)
+    {
+        Ok(a) => a,
+        Err(m) => {
+            eprintln!("{m}");
+            return 2;
+        }
+    };
+    let dir = PathBuf::from(a.get("artifacts"));
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!(
+                "manifest: {} artifacts, attention kernel VMEM {:.1} KiB, MXU util {:.3}",
+                m.artifacts.len(),
+                m.attention_vmem_bytes as f64 / 1024.0,
+                m.attention_mxu_util
+            );
+            for a in &m.artifacts {
+                if a.kind == "lm" {
+                    println!(
+                        "  {:<20} tier {:<8} b{} seq {} vocab {} d{} L{} (emulates {}B, cap {:.2})",
+                        a.name,
+                        a.tier,
+                        a.batch,
+                        a.seq,
+                        a.vocab,
+                        a.d_model,
+                        a.layers,
+                        a.emulated_params_b,
+                        a.capability
+                    );
+                } else {
+                    println!(
+                        "  {:<20} embedder b{} feat {} out {}",
+                        a.name, a.batch, a.feat_dim, a.out_dim
+                    );
+                }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}

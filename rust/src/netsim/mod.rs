@@ -1,0 +1,192 @@
+//! Deterministic network simulator (paper §4.1 context `d_t`).
+//!
+//! The gating context includes "network delays, which include both cloud
+//! and edge delays, helping assess network availability". The prototype
+//! in the paper measures these on a real testbed (edge ≈ 20–32 ms, cloud
+//! ≈ 300–350 ms, Table 7); here we synthesize them deterministically:
+//! each link has a base latency, log-normal jitter, and a slow sinusoidal
+//! congestion component so that network conditions *vary over time* and
+//! the gate has something real to adapt to.
+
+use crate::util::rng::Rng;
+
+/// A directed communication link in the edge/cloud topology.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Link {
+    /// User device → its serving edge node.
+    UserToEdge(usize),
+    /// Serving edge → a collaborating edge (edge-assisted retrieval).
+    EdgeToEdge(usize, usize),
+    /// Serving edge → cloud (GraphRAG / 72B escalation).
+    EdgeToCloud(usize),
+}
+
+/// Network simulation parameters.
+#[derive(Clone, Debug)]
+pub struct NetSpec {
+    pub user_edge_base_ms: f64,
+    pub edge_edge_base_ms: f64,
+    pub edge_cloud_base_ms: f64,
+    /// Log-normal jitter sigma (multiplicative).
+    pub jitter_sigma: f64,
+    /// Peak-hour congestion amplitude (fraction of base).
+    pub congestion_amp: f64,
+    /// Steps per congestion cycle.
+    pub congestion_period: usize,
+}
+
+impl Default for NetSpec {
+    fn default() -> Self {
+        NetSpec {
+            user_edge_base_ms: 20.0,
+            edge_edge_base_ms: 32.0,
+            edge_cloud_base_ms: 300.0,
+            jitter_sigma: 0.15,
+            congestion_amp: 0.35,
+            congestion_period: 400,
+        }
+    }
+}
+
+/// The simulator. Stateless across queries except the RNG stream; the
+/// congestion phase is a pure function of the step so replays of the same
+/// seed reproduce identical delay traces.
+#[derive(Clone, Debug)]
+pub struct NetSim {
+    pub spec: NetSpec,
+    pub num_edges: usize,
+    rng: Rng,
+    /// Per-edge phase offsets so edges don't congest in lockstep.
+    edge_phase: Vec<f64>,
+}
+
+impl NetSim {
+    pub fn new(num_edges: usize, spec: NetSpec, seed: u64) -> Self {
+        let mut rng = Rng::new(seed).fork("netsim");
+        let edge_phase = (0..num_edges.max(1))
+            .map(|_| rng.f64() * std::f64::consts::TAU)
+            .collect();
+        NetSim {
+            spec,
+            num_edges,
+            rng,
+            edge_phase,
+        }
+    }
+
+    fn base(&self, link: Link) -> f64 {
+        match link {
+            Link::UserToEdge(_) => self.spec.user_edge_base_ms,
+            Link::EdgeToEdge(a, b) => {
+                if a == b {
+                    0.0 // local retrieval has no inter-edge hop
+                } else {
+                    self.spec.edge_edge_base_ms
+                }
+            }
+            Link::EdgeToCloud(_) => self.spec.edge_cloud_base_ms,
+        }
+    }
+
+    fn phase_of(&self, link: Link) -> f64 {
+        let e = match link {
+            Link::UserToEdge(e) | Link::EdgeToCloud(e) => e,
+            Link::EdgeToEdge(a, _) => a,
+        };
+        self.edge_phase[e % self.edge_phase.len()]
+    }
+
+    /// Congestion multiplier at `step` for `link` (deterministic).
+    pub fn congestion(&self, link: Link, step: usize) -> f64 {
+        let phase = self.phase_of(link);
+        let theta =
+            step as f64 / self.spec.congestion_period as f64 * std::f64::consts::TAU + phase;
+        1.0 + self.spec.congestion_amp * 0.5 * (1.0 + theta.sin()) // in [1, 1+amp]
+    }
+
+    /// One-way delay sample for a link at a step (jittered).
+    pub fn delay_ms(&mut self, link: Link, step: usize) -> f64 {
+        let base = self.base(link);
+        if base == 0.0 {
+            return 0.0;
+        }
+        let congested = base * self.congestion(link, step);
+        let jitter = (self.rng.normal() * self.spec.jitter_sigma).exp();
+        congested * jitter
+    }
+
+    /// Expected (jitter-free) delay — what a monitoring plane would
+    /// report; the gate observes this as context `d_t`.
+    pub fn expected_delay_ms(&self, link: Link, step: usize) -> f64 {
+        self.base(link) * self.congestion(link, step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> NetSim {
+        NetSim::new(4, NetSpec::default(), 7)
+    }
+
+    #[test]
+    fn cloud_slower_than_edge() {
+        let mut s = sim();
+        let mut cloud = 0.0;
+        let mut edge = 0.0;
+        for step in 0..200 {
+            cloud += s.delay_ms(Link::EdgeToCloud(0), step);
+            edge += s.delay_ms(Link::UserToEdge(0), step);
+        }
+        assert!(cloud > edge * 5.0);
+    }
+
+    #[test]
+    fn self_edge_link_free() {
+        let mut s = sim();
+        assert_eq!(s.delay_ms(Link::EdgeToEdge(2, 2), 10), 0.0);
+        assert!(s.delay_ms(Link::EdgeToEdge(2, 3), 10) > 0.0);
+    }
+
+    #[test]
+    fn congestion_varies_over_time() {
+        let s = sim();
+        let d: Vec<f64> = (0..400)
+            .step_by(40)
+            .map(|t| s.expected_delay_ms(Link::EdgeToCloud(1), t))
+            .collect();
+        let min = d.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = d.iter().cloned().fold(0.0, f64::max);
+        assert!(max / min > 1.15, "congestion range too flat: {min}..{max}");
+    }
+
+    #[test]
+    fn expected_delay_deterministic() {
+        let a = sim();
+        let b = sim();
+        for step in [0, 17, 391] {
+            assert_eq!(
+                a.expected_delay_ms(Link::EdgeToCloud(0), step),
+                b.expected_delay_ms(Link::EdgeToCloud(0), step)
+            );
+        }
+    }
+
+    #[test]
+    fn jitter_positive_and_bounded() {
+        let mut s = sim();
+        for step in 0..500 {
+            let d = s.delay_ms(Link::UserToEdge(0), step);
+            assert!(d > 0.0 && d < 200.0, "delay {d}");
+        }
+    }
+
+    #[test]
+    fn edges_have_distinct_phases() {
+        let s = sim();
+        let c0 = s.congestion(Link::EdgeToCloud(0), 100);
+        let c1 = s.congestion(Link::EdgeToCloud(1), 100);
+        assert_ne!(c0, c1);
+    }
+}

@@ -1,0 +1,377 @@
+//! Answer-accuracy oracle — the GPT-4o grading substitute (DESIGN.md §1).
+//!
+//! The paper measures accuracy "by comparing generated responses to
+//! ground truth using GPT-4o". Without access to real LLMs, correctness
+//! is modeled mechanically from the two factors that actually determine
+//! RAG accuracy:
+//!
+//! 1. **Retrieval coverage** — the fraction of the query's supporting
+//!    chunks present in the generation context. No retrieval ⇒ coverage
+//!    0 and the model falls back on parametric knowledge.
+//! 2. **Model capability** — the emulated tier's `capability` score
+//!    (manifest), discounted for multi-hop reasoning.
+//!
+//! p(correct) = know + (1 − know) · coverage · quality · hop_mult · distraction
+//!
+//! The constants are calibrated once against the paper's Table 4
+//! baselines (3B LLM-only ≈ 29%/32%, 3B+NaiveRAG ≈ 62%/53%, 3B+GraphRAG
+//! ≈ 76%/63%, 72B+GraphRAG ≈ 94%/77%) and then *never* conditioned on
+//! the gate's decision — the gate can only influence accuracy through
+//! retrieval coverage and tier choice, exactly like the real system.
+//!
+//! Draws are deterministic per (seed, qa, step) so experiments replay.
+
+use crate::corpus::{ChunkId, Corpus, Profile, QaPair};
+use crate::util::rng::Rng;
+
+/// Where the generation context came from (affects distraction/coherence).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ContextSource {
+    /// No retrieval: parametric knowledge only.
+    None,
+    /// Flat top-k keyword/vector retrieval (local or edge-assisted).
+    NaiveRag,
+    /// Naive retrieval over *community-extracted* chunks distributed by
+    /// the cloud's adaptive update (paper §3.2: "strong intra-community
+    /// alignment … ensures that even lightweight mechanisms, like Naive
+    /// RAG, operate with well-structured and semantically coherent
+    /// data") — gets the coherence bonus without cloud latency.
+    EdgeCommunity,
+    /// Community-structured retrieval (cloud knowledge graph).
+    GraphRag,
+}
+
+/// Oracle parameters (exposed for ablations; defaults are calibrated).
+#[derive(Clone, Debug)]
+pub struct OracleParams {
+    /// Parametric-knowledge intercept/slope per profile.
+    pub know_base_wiki: f64,
+    pub know_slope_wiki: f64,
+    pub know_base_hp: f64,
+    pub know_slope_hp: f64,
+    /// Multi-hop discount on parametric knowledge.
+    pub know_multihop_factor: f64,
+    /// Generation quality intercept/slope on capability.
+    pub quality_base: f64,
+    pub quality_slope: f64,
+    /// Hop-penalty strength (scaled by (1 − capability)).
+    pub hop2_penalty: f64,
+    pub hop3_penalty: f64,
+    /// Specialized-domain quality factor (paper §6.1: HP questions
+    /// "require specific background knowledge").
+    pub hp_quality_factor: f64,
+    /// Accuracy loss per fully-irrelevant context ("misleading retrieval
+    /// degrades output quality", paper §1).
+    pub distraction_penalty: f64,
+    /// Coherence bonus for community-extracted chunks served from the
+    /// edge (paper §3.2: intra-community alignment lets naive RAG
+    /// operate on well-structured data).
+    pub community_coherence_bonus: f64,
+}
+
+impl Default for OracleParams {
+    fn default() -> Self {
+        OracleParams {
+            know_base_wiki: 0.10,
+            know_slope_wiki: 0.38,
+            know_base_hp: 0.20,
+            know_slope_hp: 0.30,
+            know_multihop_factor: 0.6,
+            quality_base: 0.60,
+            quality_slope: 0.50,
+            hop2_penalty: 0.65,
+            hop3_penalty: 0.95,
+            hp_quality_factor: 0.80,
+            distraction_penalty: 0.05,
+            community_coherence_bonus: 1.12,
+        }
+    }
+}
+
+/// The oracle. One instance per experiment run.
+pub struct Oracle {
+    pub params: OracleParams,
+    seed: u64,
+}
+
+impl Oracle {
+    pub fn new(seed: u64) -> Oracle {
+        Oracle {
+            params: OracleParams::default(),
+            seed,
+        }
+    }
+
+    pub fn with_params(seed: u64, params: OracleParams) -> Oracle {
+        Oracle { params, seed }
+    }
+
+    /// Retrieval coverage: fraction of supporting chunks in context.
+    pub fn coverage(&self, qa: &QaPair, context: &[ChunkId]) -> f64 {
+        if qa.supporting_chunks.is_empty() {
+            return 0.0;
+        }
+        let hit = qa
+            .supporting_chunks
+            .iter()
+            .filter(|c| context.contains(c))
+            .count();
+        hit as f64 / qa.supporting_chunks.len() as f64
+    }
+
+    /// Probability the (emulated) model answers correctly.
+    pub fn p_correct(
+        &self,
+        profile: Profile,
+        qa: &QaPair,
+        capability: f64,
+        context: &[ChunkId],
+        source: ContextSource,
+    ) -> f64 {
+        let p = &self.params;
+
+        // Parametric knowledge.
+        let mut know = match profile {
+            Profile::Wiki => p.know_base_wiki + p.know_slope_wiki * capability,
+            Profile::HarryPotter => p.know_base_hp + p.know_slope_hp * capability,
+        };
+        if qa.hops > 1 {
+            know *= p.know_multihop_factor;
+        }
+
+        // Retrieval-grounded path.
+        let coverage = match source {
+            ContextSource::None => 0.0,
+            _ => self.coverage(qa, context),
+        };
+        let mut quality = (p.quality_base + p.quality_slope * capability).min(1.0);
+        if profile == Profile::HarryPotter {
+            quality *= p.hp_quality_factor;
+        }
+        let hop_mult = match qa.hops {
+            1 => 1.0,
+            2 => 1.0 - p.hop2_penalty * (1.0 - capability),
+            _ => 1.0 - p.hop3_penalty * (1.0 - capability),
+        };
+        let irrelevant_share = if context.is_empty() {
+            0.0
+        } else {
+            let irrelevant = context
+                .iter()
+                .filter(|c| !qa.supporting_chunks.contains(c))
+                .count();
+            irrelevant as f64 / context.len() as f64
+        };
+        let mut grounded = coverage * quality * hop_mult
+            * (1.0 - p.distraction_penalty * irrelevant_share);
+        if source == ContextSource::EdgeCommunity {
+            grounded = (grounded * p.community_coherence_bonus).min(1.0);
+        }
+
+        (know + (1.0 - know) * grounded).clamp(0.0, 1.0)
+    }
+
+    /// Bernoulli judgement, deterministic per (seed, qa, step).
+    pub fn judge(
+        &self,
+        profile: Profile,
+        qa: &QaPair,
+        capability: f64,
+        context: &[ChunkId],
+        source: ContextSource,
+        step: usize,
+    ) -> bool {
+        let p = self.p_correct(profile, qa, capability, context, source);
+        let mut rng = Rng::new(
+            self.seed
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(qa.id as u64)
+                .wrapping_add((step as u64) << 32),
+        );
+        rng.chance(p)
+    }
+
+    /// Convenience: judge over a whole corpus sample with a fixed
+    /// strategy's (capability, retrieval) — used by calibration tests.
+    pub fn expected_accuracy<F>(
+        &self,
+        corpus: &Corpus,
+        capability: f64,
+        source: ContextSource,
+        mut retrieve: F,
+    ) -> f64
+    where
+        F: FnMut(&QaPair) -> Vec<ChunkId>,
+    {
+        let mut sum = 0.0;
+        for qa in &corpus.qa {
+            let ctx = retrieve(qa);
+            sum += self.p_correct(corpus.spec.profile, qa, capability, &ctx, source);
+        }
+        sum / corpus.qa.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{Corpus, Profile};
+    use crate::graphrag::GraphRag;
+
+    const CAP_3B: f64 = 0.55;
+    const CAP_72B: f64 = 0.90;
+
+    #[test]
+    fn llm_only_matches_table4() {
+        // Table 4: 3B LLM-only = 28.72% (wiki), 31.69% (hp).
+        let o = Oracle::new(1);
+        for (profile, target) in [(Profile::Wiki, 0.287), (Profile::HarryPotter, 0.317)] {
+            let c = Corpus::generate(profile, 1);
+            let acc = o.expected_accuracy(&c, CAP_3B, ContextSource::None, |_| vec![]);
+            assert!(
+                (acc - target).abs() < 0.06,
+                "{profile:?}: {acc:.3} vs paper {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn perfect_graph_retrieval_matches_table4_72b() {
+        // Table 4: 72B + GraphRAG = 94.39% (wiki) — near-full coverage.
+        let o = Oracle::new(1);
+        let c = Corpus::generate(Profile::Wiki, 1);
+        let acc = o.expected_accuracy(&c, CAP_72B, ContextSource::GraphRag, |qa| {
+            qa.supporting_chunks.clone()
+        });
+        assert!(acc > 0.88, "acc {acc:.3}");
+    }
+
+    #[test]
+    fn real_graphrag_retrieval_3b_near_table4() {
+        // Table 4: 3B + GraphRAG = 76.01% (wiki), 63.47% (hp) — with
+        // *actual* graph retrieval, not oracle-supplied chunks.
+        for (profile, target, tol) in [
+            (Profile::Wiki, 0.76, 0.10),
+            (Profile::HarryPotter, 0.635, 0.10),
+        ] {
+            let c = Corpus::generate(profile, 1);
+            let g = GraphRag::build(&c);
+            let o = Oracle::new(1);
+            let acc = o.expected_accuracy(&c, CAP_3B, ContextSource::GraphRag, |qa| {
+                let kws = c.qa_keywords(qa);
+                g.local_search(&c, &kws, 8)
+                    .into_iter()
+                    .map(|(ch, _)| ch)
+                    .collect()
+            });
+            assert!(
+                (acc - target).abs() < tol,
+                "{profile:?}: {acc:.3} vs paper {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn coverage_fraction() {
+        let c = Corpus::generate(Profile::Wiki, 1);
+        let o = Oracle::new(1);
+        let qa = c.qa.iter().find(|q| q.supporting_chunks.len() >= 2).unwrap();
+        let half: Vec<_> = qa.supporting_chunks[..1].to_vec();
+        let cov = o.coverage(qa, &half);
+        assert!(cov > 0.0 && cov < 1.0);
+        assert_eq!(o.coverage(qa, &qa.supporting_chunks), 1.0);
+        assert_eq!(o.coverage(qa, &[]), 0.0);
+    }
+
+    #[test]
+    fn more_capability_more_accuracy() {
+        let c = Corpus::generate(Profile::Wiki, 1);
+        let o = Oracle::new(1);
+        let full = |qa: &QaPair| qa.supporting_chunks.clone();
+        let a3 = o.expected_accuracy(&c, CAP_3B, ContextSource::NaiveRag, full);
+        let a72 = o.expected_accuracy(&c, CAP_72B, ContextSource::NaiveRag, full);
+        assert!(a72 > a3);
+    }
+
+    #[test]
+    fn retrieval_beats_no_retrieval() {
+        let c = Corpus::generate(Profile::HarryPotter, 1);
+        let o = Oracle::new(1);
+        let none = o.expected_accuracy(&c, CAP_3B, ContextSource::None, |_| vec![]);
+        let full = o.expected_accuracy(&c, CAP_3B, ContextSource::NaiveRag, |qa| {
+            qa.supporting_chunks.clone()
+        });
+        assert!(full > none + 0.2);
+    }
+
+    #[test]
+    fn multihop_harder_for_weak_models() {
+        let c = Corpus::generate(Profile::HarryPotter, 1);
+        let o = Oracle::new(1);
+        let single: Vec<&QaPair> = c.qa.iter().filter(|q| q.hops == 1).collect();
+        let multi: Vec<&QaPair> = c.qa.iter().filter(|q| q.hops > 1).collect();
+        let avg = |qs: &[&QaPair], cap: f64| {
+            qs.iter()
+                .map(|q| {
+                    o.p_correct(
+                        c.spec.profile,
+                        q,
+                        cap,
+                        &q.supporting_chunks,
+                        ContextSource::NaiveRag,
+                    )
+                })
+                .sum::<f64>()
+                / qs.len() as f64
+        };
+        let gap_3b = avg(&single, CAP_3B) - avg(&multi, CAP_3B);
+        let gap_72b = avg(&single, CAP_72B) - avg(&multi, CAP_72B);
+        assert!(gap_3b > gap_72b, "3b gap {gap_3b:.3} vs 72b gap {gap_72b:.3}");
+    }
+
+    #[test]
+    fn distraction_hurts() {
+        let c = Corpus::generate(Profile::Wiki, 1);
+        let o = Oracle::new(1);
+        let qa = &c.qa[0];
+        let clean = qa.supporting_chunks.clone();
+        let mut noisy = clean.clone();
+        for extra in 0..20 {
+            let cid = (qa.supporting_chunks[0] + 1 + extra) % c.chunks.len();
+            if !noisy.contains(&cid) {
+                noisy.push(cid);
+            }
+        }
+        let p_clean =
+            o.p_correct(Profile::Wiki, qa, CAP_3B, &clean, ContextSource::NaiveRag);
+        let p_noisy =
+            o.p_correct(Profile::Wiki, qa, CAP_3B, &noisy, ContextSource::NaiveRag);
+        assert!(p_clean > p_noisy);
+    }
+
+    #[test]
+    fn judge_deterministic() {
+        let c = Corpus::generate(Profile::Wiki, 1);
+        let o = Oracle::new(7);
+        let qa = &c.qa[3];
+        let a = o.judge(Profile::Wiki, qa, CAP_3B, &qa.supporting_chunks, ContextSource::NaiveRag, 10);
+        let b = o.judge(Profile::Wiki, qa, CAP_3B, &qa.supporting_chunks, ContextSource::NaiveRag, 10);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn judge_rate_tracks_probability() {
+        let c = Corpus::generate(Profile::Wiki, 1);
+        let o = Oracle::new(9);
+        let qa = &c.qa[0];
+        let p = o.p_correct(Profile::Wiki, qa, CAP_3B, &qa.supporting_chunks, ContextSource::NaiveRag);
+        let n = 2000;
+        let hits = (0..n)
+            .filter(|&s| {
+                o.judge(Profile::Wiki, qa, CAP_3B, &qa.supporting_chunks, ContextSource::NaiveRag, s)
+            })
+            .count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - p).abs() < 0.05, "rate {rate:.3} vs p {p:.3}");
+    }
+}

@@ -1,0 +1,262 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Parsed with `util::json` (no serde offline).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One weight tensor's location inside a tier's `.bin`.
+#[derive(Clone, Debug)]
+pub struct WeightSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_elems: usize,
+    pub num_elems: usize,
+}
+
+/// One compiled artifact (an HLO module at a fixed batch size).
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String, // "lm" | "embedder"
+    pub tier: String,
+    pub path: String,
+    pub weights_path: String,
+    pub weights: Vec<WeightSpec>,
+    pub batch: usize,
+    // lm-only fields (0 for embedder)
+    pub seq: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub layers: usize,
+    pub emulated_params_b: f64,
+    pub capability: f64,
+    pub tiny_flops_per_forward: f64,
+    // embedder-only fields
+    pub feat_dim: usize,
+    pub out_dim: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub attention_vmem_bytes: usize,
+    pub attention_mxu_util: f64,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} (run `make artifacts`)", mpath.display()))?;
+        let root = parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        if root.get("version").as_f64().unwrap_or(0.0) < 2.0 {
+            bail!("manifest version < 2; regenerate artifacts");
+        }
+        let mut artifacts = Vec::new();
+        for a in root
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing artifacts[]"))?
+        {
+            let weights = a
+                .get("weights")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|w| WeightSpec {
+                    name: w.get("name").as_str().unwrap_or("").to_string(),
+                    shape: w
+                        .get("shape")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect(),
+                    offset_elems: w.get("offset_elems").as_usize().unwrap_or(0),
+                    num_elems: w.get("num_elems").as_usize().unwrap_or(0),
+                })
+                .collect();
+            artifacts.push(ArtifactEntry {
+                name: req_str(a, "name")?,
+                kind: req_str(a, "kind")?,
+                tier: req_str(a, "tier")?,
+                path: req_str(a, "path")?,
+                weights_path: req_str(a, "weights_path")?,
+                weights,
+                batch: a.get("batch").as_usize().unwrap_or(1),
+                seq: a.get("seq").as_usize().unwrap_or(0),
+                vocab: a.get("vocab").as_usize().unwrap_or(0),
+                d_model: a.get("d_model").as_usize().unwrap_or(0),
+                layers: a.get("layers").as_usize().unwrap_or(0),
+                emulated_params_b: a.get("emulated_params_b").as_f64().unwrap_or(0.0),
+                capability: a.get("capability").as_f64().unwrap_or(0.0),
+                tiny_flops_per_forward: a.get("tiny_flops_per_forward").as_f64().unwrap_or(0.0),
+                feat_dim: a.get("feat_dim").as_usize().unwrap_or(0),
+                out_dim: a.get("out_dim").as_usize().unwrap_or(0),
+            });
+        }
+        let kernel = root.get("kernel");
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            attention_vmem_bytes: kernel.get("attention_vmem_bytes").as_usize().unwrap_or(0),
+            attention_mxu_util: kernel.get("attention_mxu_util").as_f64().unwrap_or(0.0),
+        })
+    }
+
+    /// Find the LM artifact for `tier` with the smallest batch ≥ wanted
+    /// (falls back to the largest available).
+    pub fn lm_for(&self, tier: &str, batch: usize) -> Option<&ArtifactEntry> {
+        let mut candidates: Vec<&ArtifactEntry> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "lm" && a.tier == tier)
+            .collect();
+        candidates.sort_by_key(|a| a.batch);
+        candidates
+            .iter()
+            .find(|a| a.batch >= batch)
+            .copied()
+            .or_else(|| candidates.last().copied())
+    }
+
+    pub fn embedder_for(&self, batch: usize) -> Option<&ArtifactEntry> {
+        let mut candidates: Vec<&ArtifactEntry> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "embedder")
+            .collect();
+        candidates.sort_by_key(|a| a.batch);
+        candidates
+            .iter()
+            .find(|a| a.batch >= batch)
+            .copied()
+            .or_else(|| candidates.last().copied())
+    }
+
+    /// All tier names with LM artifacts.
+    pub fn tiers(&self) -> Vec<String> {
+        let mut t: Vec<String> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "lm")
+            .map(|a| a.tier.clone())
+            .collect();
+        t.sort();
+        t.dedup();
+        t
+    }
+
+    /// Capability score for a tier (from the manifest).
+    pub fn capability_of(&self, tier: &str) -> Option<f64> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "lm" && a.tier == tier)
+            .map(|a| a.capability)
+    }
+
+    /// Emulated parameter count (billions) for a tier.
+    pub fn params_of(&self, tier: &str) -> Option<f64> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "lm" && a.tier == tier)
+            .map(|a| a.emulated_params_b)
+    }
+}
+
+fn req_str(a: &Json, key: &str) -> Result<String> {
+    a.get(key)
+        .as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow!("manifest entry missing {key:?}"))
+}
+
+/// Read a weights `.bin` (little-endian f32) into per-tensor vectors.
+pub fn read_weights(dir: &Path, entry: &ArtifactEntry) -> Result<Vec<Vec<f32>>> {
+    let path = dir.join(&entry.weights_path);
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading weights {}", path.display()))?;
+    let total: usize = entry.weights.iter().map(|w| w.num_elems).sum();
+    if bytes.len() != total * 4 {
+        bail!(
+            "weights size mismatch for {}: {} bytes vs {} elems",
+            entry.name,
+            bytes.len(),
+            total
+        );
+    }
+    let mut out = Vec::with_capacity(entry.weights.len());
+    for w in &entry.weights {
+        let start = w.offset_elems * 4;
+        let end = start + w.num_elems * 4;
+        let mut v = Vec::with_capacity(w.num_elems);
+        for c in bytes[start..end].chunks_exact(4) {
+            v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        out.push(v);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.artifacts.is_empty());
+        assert!(m.tiers().contains(&"qwen3b".to_string()));
+        let a = m.lm_for("qwen3b", 1).unwrap();
+        assert_eq!(a.batch, 1);
+        assert!(a.seq > 0 && a.vocab > 0);
+        assert!(m.capability_of("qwen72b").unwrap() > m.capability_of("qwen3b").unwrap());
+    }
+
+    #[test]
+    fn lm_for_picks_smallest_sufficient_batch() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.lm_for("qwen3b", 3).unwrap().batch, 4);
+        assert_eq!(m.lm_for("qwen3b", 5).unwrap().batch, 8);
+        // Above max: falls back to largest.
+        assert_eq!(m.lm_for("qwen3b", 64).unwrap().batch, 8);
+        assert!(m.lm_for("nonexistent", 1).is_none());
+    }
+
+    #[test]
+    fn weights_parse_and_match_shapes() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.lm_for("qwen15b", 1).unwrap();
+        let w = read_weights(&dir, a).unwrap();
+        assert_eq!(w.len(), a.weights.len());
+        for (data, spec) in w.iter().zip(&a.weights) {
+            let expect: usize = spec.shape.iter().product();
+            assert_eq!(data.len(), expect, "{}", spec.name);
+        }
+        // First weight is the embedding table (vocab × d).
+        assert_eq!(a.weights[0].name, "embed");
+        assert_eq!(a.weights[0].shape, vec![a.vocab, a.d_model]);
+    }
+}

@@ -1,0 +1,248 @@
+//! PJRT runtime: load AOT artifacts, execute models, generate tokens.
+//!
+//! The load path follows `/opt/xla-example/load_hlo`: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile`. Weights are uploaded **once** per tier as
+//! device-resident `PjRtBuffer`s and reused by every `execute_b` call —
+//! the weight-residency pattern of real serving stacks; per-request
+//! traffic is just the token tensor.
+//!
+//! Python is never on this path: after `make artifacts`, the Rust binary
+//! is self-contained.
+
+pub mod manifest;
+pub mod tokenizer;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+pub use manifest::{ArtifactEntry, Manifest};
+pub use tokenizer::{FeatureHasher, Tokenizer};
+
+/// A compiled artifact with device-resident weights.
+pub struct LoadedModel {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::PjRtBuffer>,
+}
+
+/// Execution timing for one call (real wall-clock on the PJRT CPU client).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecTiming {
+    pub upload_us: u128,
+    pub execute_us: u128,
+    pub download_us: u128,
+}
+
+/// The runtime: one PJRT client + lazily compiled models.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    loaded: HashMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (compiles nothing yet).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            loaded: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.loaded.contains_key(name)
+    }
+
+    /// Compile an artifact and upload its weights (idempotent).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.loaded.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        let hlo_path = self.manifest.dir.join(&entry.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+
+        let host_weights = manifest::read_weights(&self.manifest.dir, &entry)?;
+        let mut weights = Vec::with_capacity(host_weights.len());
+        for (data, spec) in host_weights.iter().zip(&entry.weights) {
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(data, &spec.shape, None)
+                .map_err(|e| anyhow!("uploading {}::{}: {e:?}", name, spec.name))?;
+            weights.push(buf);
+        }
+        self.loaded.insert(
+            name.to_string(),
+            LoadedModel {
+                entry,
+                exe,
+                weights,
+            },
+        );
+        Ok(())
+    }
+
+    fn model(&self, name: &str) -> Result<&LoadedModel> {
+        self.loaded
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not loaded"))
+    }
+
+    /// Run an LM artifact on a token batch. `tokens.len()` must equal
+    /// `batch * seq`. Returns `(logits[batch*vocab], timing)`.
+    pub fn lm_logits(&self, name: &str, tokens: &[i32]) -> Result<(Vec<f32>, ExecTiming)> {
+        let m = self.model(name)?;
+        let (b, s, v) = (m.entry.batch, m.entry.seq, m.entry.vocab);
+        if tokens.len() != b * s {
+            bail!(
+                "token tensor mismatch for {name}: got {}, want {}x{}",
+                tokens.len(),
+                b,
+                s
+            );
+        }
+        let mut timing = ExecTiming::default();
+        let t0 = Instant::now();
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(tokens, &[b, s], None)
+            .map_err(|e| anyhow!("uploading tokens: {e:?}"))?;
+        timing.upload_us = t0.elapsed().as_micros();
+
+        let mut args: Vec<&xla::PjRtBuffer> = m.weights.iter().collect();
+        args.push(&tok_buf);
+        let t1 = Instant::now();
+        let result = m
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        timing.execute_us = t1.elapsed().as_micros();
+
+        let t2 = Instant::now();
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let logits = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        timing.download_us = t2.elapsed().as_micros();
+        if logits.len() != b * v {
+            bail!("logits shape mismatch: {} vs {}x{}", logits.len(), b, v);
+        }
+        Ok((logits, timing))
+    }
+
+    /// Run the embedder on `batch` feature rows (padded to the artifact
+    /// batch). Returns unit-norm vectors, one per input row.
+    pub fn embed(&self, name: &str, feats: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let m = self.model(name)?;
+        let (b, fd, od) = (m.entry.batch, m.entry.feat_dim, m.entry.out_dim);
+        if feats.len() > b {
+            bail!("embed batch {} exceeds artifact batch {b}", feats.len());
+        }
+        let mut flat = vec![0.0f32; b * fd];
+        for (i, row) in feats.iter().enumerate() {
+            if row.len() != fd {
+                bail!("feature dim {} != {fd}", row.len());
+            }
+            flat[i * fd..(i + 1) * fd].copy_from_slice(row);
+        }
+        let feat_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(&flat, &[b, fd], None)
+            .map_err(|e| anyhow!("uploading feats: {e:?}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = m.weights.iter().collect();
+        args.push(&feat_buf);
+        let result = m
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download: {e:?}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let flat_out = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok(feats
+            .iter()
+            .enumerate()
+            .map(|(i, _)| flat_out[i * od..(i + 1) * od].to_vec())
+            .collect())
+    }
+
+    /// Greedy-decode `max_new` tokens for a batch of prompts on a tier.
+    /// Prompts beyond the artifact batch are rejected. Returns per-prompt
+    /// generated ids plus cumulative real execution time.
+    pub fn generate(
+        &mut self,
+        tier: &str,
+        prompts: &[String],
+        max_new: usize,
+    ) -> Result<(Vec<Vec<i32>>, ExecTiming)> {
+        let entry = self
+            .manifest
+            .lm_for(tier, prompts.len())
+            .ok_or_else(|| anyhow!("no artifact for tier {tier:?}"))?
+            .clone();
+        if prompts.len() > entry.batch {
+            bail!("batch {} exceeds artifact batch {}", prompts.len(), entry.batch);
+        }
+        let name = entry.name.clone();
+        self.load(&name)?;
+        let tok = Tokenizer::new(entry.vocab, entry.seq);
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+        let mut total = ExecTiming::default();
+        for _ in 0..max_new {
+            // Assemble the sliding windows (dummy rows pad the batch).
+            let mut tokens = Vec::with_capacity(entry.batch * entry.seq);
+            for i in 0..entry.batch {
+                if i < prompts.len() {
+                    tokens.extend(tok.encode_with_generated(&prompts[i], &generated[i]));
+                } else {
+                    tokens.extend(std::iter::repeat(tokenizer::PAD).take(entry.seq));
+                }
+            }
+            let (logits, t) = self.lm_logits(&name, &tokens)?;
+            total.upload_us += t.upload_us;
+            total.execute_us += t.execute_us;
+            total.download_us += t.download_us;
+            for (i, gen) in generated.iter_mut().enumerate() {
+                let row = &logits[i * entry.vocab..(i + 1) * entry.vocab];
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j as i32)
+                    .unwrap_or(0);
+                gen.push(argmax);
+            }
+        }
+        Ok((generated, total))
+    }
+}

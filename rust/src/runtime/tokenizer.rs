@@ -1,0 +1,200 @@
+//! Tokenizer + feature hasher — the host-side text frontend.
+//!
+//! The transformer artifacts consume token ids (`i32`, fixed window) and
+//! the embedder consumes hashed n-gram count vectors (`f32[feat_dim]`).
+//! Both mappings live entirely in Rust (Python never tokenizes at
+//! runtime); only the *shape* contract is shared with the artifacts.
+//!
+//! Token ids: FNV-1a hash of each whitespace-separated word, mod vocab
+//! (reserving 0 = PAD, 1 = BOS). Feature vector: character 3-gram
+//! hashing (the `all-MiniLM` stand-in geometry — shared n-grams ⇒ shared
+//! buckets ⇒ cosine similarity tracks lexical overlap).
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+const RESERVED: u64 = 2;
+
+/// Word-level hashing tokenizer with a fixed context window.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    pub vocab: usize,
+    pub seq: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize, seq: usize) -> Tokenizer {
+        assert!(vocab > 8);
+        Tokenizer { vocab, seq }
+    }
+
+    fn word_id(&self, w: &str) -> i32 {
+        let h = fnv1a(w.to_lowercase().as_bytes());
+        (RESERVED + h % (self.vocab as u64 - RESERVED)) as i32
+    }
+
+    /// Tokenize to exactly `seq` ids: BOS + words, front-padded (the
+    /// model attends causally, so content sits at the window's end).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut ids: Vec<i32> = vec![BOS];
+        ids.extend(text.split_whitespace().map(|w| self.word_id(w)));
+        if ids.len() > self.seq {
+            // Keep the tail (most recent context).
+            ids = ids[ids.len() - self.seq..].to_vec();
+        }
+        let mut out = vec![PAD; self.seq - ids.len()];
+        out.extend(ids);
+        out
+    }
+
+    /// Encode a prompt then append generated ids, keeping the window.
+    pub fn encode_with_generated(&self, text: &str, generated: &[i32]) -> Vec<i32> {
+        let mut ids: Vec<i32> = vec![BOS];
+        ids.extend(text.split_whitespace().map(|w| self.word_id(w)));
+        ids.extend_from_slice(generated);
+        if ids.len() > self.seq {
+            ids = ids[ids.len() - self.seq..].to_vec();
+        }
+        let mut out = vec![PAD; self.seq - ids.len()];
+        out.extend(ids);
+        out
+    }
+}
+
+/// Character-3-gram feature hasher for the embedder artifact.
+#[derive(Clone, Debug)]
+pub struct FeatureHasher {
+    pub feat_dim: usize,
+}
+
+impl FeatureHasher {
+    pub fn new(feat_dim: usize) -> FeatureHasher {
+        FeatureHasher { feat_dim }
+    }
+
+    /// Hash text into a count vector of character 3-grams.
+    pub fn features(&self, text: &str) -> Vec<f32> {
+        let mut v = vec![0.0f32; self.feat_dim];
+        let lower = text.to_lowercase();
+        let bytes: Vec<u8> = lower
+            .bytes()
+            .filter(|b| b.is_ascii_alphanumeric() || *b == b' ')
+            .collect();
+        if bytes.len() < 3 {
+            if !bytes.is_empty() {
+                v[(fnv1a(&bytes) % self.feat_dim as u64) as usize] += 1.0;
+            }
+            return v;
+        }
+        for w in bytes.windows(3) {
+            v[(fnv1a(w) % self.feat_dim as u64) as usize] += 1.0;
+        }
+        v
+    }
+
+    /// Cosine similarity between two hashed texts (host-side shortcut
+    /// used when the PJRT embedder is not loaded).
+    pub fn cosine(&self, a: &str, b: &str) -> f64 {
+        let fa = self.features(a);
+        let fb = self.features(b);
+        let dot: f32 = fa.iter().zip(&fb).map(|(x, y)| x * y).sum();
+        let na: f32 = fa.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nb: f32 = fb.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if na == 0.0 || nb == 0.0 {
+            0.0
+        } else {
+            (dot / (na * nb)) as f64
+        }
+    }
+}
+
+#[inline]
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_fixed_length_and_padded() {
+        let t = Tokenizer::new(512, 64);
+        let ids = t.encode("who founded Kamor");
+        assert_eq!(ids.len(), 64);
+        assert_eq!(ids[0], PAD);
+        assert_eq!(ids[64 - 4], BOS);
+        assert!(ids[61..].iter().all(|&i| i >= 2));
+    }
+
+    #[test]
+    fn encode_truncates_long_input_keeping_tail() {
+        let t = Tokenizer::new(512, 16);
+        let words: Vec<String> = (0..100).map(|i| format!("w{i}")).collect();
+        let ids = t.encode(&words.join(" "));
+        assert_eq!(ids.len(), 16);
+        assert!(ids.iter().all(|&i| i != PAD));
+        // Tail word w99 must be present; early words gone.
+        assert_eq!(*ids.last().unwrap(), t.word_id("w99"));
+    }
+
+    #[test]
+    fn deterministic_and_case_insensitive() {
+        let t = Tokenizer::new(512, 32);
+        assert_eq!(t.encode("Harry Potter"), t.encode("harry potter"));
+    }
+
+    #[test]
+    fn ids_in_vocab_range() {
+        let t = Tokenizer::new(512, 32);
+        for w in ["a", "zzz", "Alohomora", "x1y2z3"] {
+            let id = t.word_id(w);
+            assert!((2..512).contains(&id), "{w} -> {id}");
+        }
+    }
+
+    #[test]
+    fn encode_with_generated_appends() {
+        let t = Tokenizer::new(512, 16);
+        let base = t.encode("hello world");
+        let gen = t.encode_with_generated("hello world", &[42, 43]);
+        assert_eq!(gen.len(), 16);
+        assert_eq!(gen[15], 43);
+        assert_eq!(gen[14], 42);
+        assert_eq!(&gen[..14], &base[2..]);
+    }
+
+    #[test]
+    fn feature_hasher_shape_and_counts() {
+        let h = FeatureHasher::new(256);
+        let f = h.features("alohomora spell");
+        assert_eq!(f.len(), 256);
+        let total: f32 = f.iter().sum();
+        assert!(total > 0.0);
+    }
+
+    #[test]
+    fn similar_text_higher_cosine() {
+        let h = FeatureHasher::new(256);
+        let sim_close = h.cosine("alohomora unlocking spell", "alohomora spell door");
+        let sim_far = h.cosine("alohomora unlocking spell", "quidditch world cup");
+        assert!(sim_close > sim_far, "{sim_close} <= {sim_far}");
+        assert!(sim_close > 0.3);
+    }
+
+    #[test]
+    fn identical_text_cosine_one() {
+        let h = FeatureHasher::new(256);
+        assert!((h.cosine("hermione granger", "hermione granger") - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_text_zero() {
+        let h = FeatureHasher::new(256);
+        assert_eq!(h.cosine("", "anything"), 0.0);
+    }
+}

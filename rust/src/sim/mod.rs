@@ -1,0 +1,505 @@
+//! Full-system simulation harness: the paper's evaluation testbed.
+//!
+//! Wires every substrate together — corpus, workload, edge stores,
+//! cloud GraphRAG + distributor, netsim, cost model, oracle, and the
+//! SafeOBO gate — under **virtual time**, so the benches can replay the
+//! paper's experiments (Tables 1/4/5/6/7, Figures 2/4) deterministically
+//! and fast. The real-serving path (PJRT generation, wall-clock latency)
+//! lives in [`crate::coordinator`]; both share the same retrieval,
+//! gating, and cost machinery.
+
+pub mod strategy;
+
+use crate::cloud::{CloudNode, CloudSpec};
+use crate::config::SystemConfig;
+use crate::corpus::{ChunkId, Corpus, QaId};
+use crate::cost::CostModel;
+use crate::edge::{best_edge_for, EdgeNode};
+use crate::gating::safeobo::{Observation, Qos, SafeObo};
+use crate::gating::{standard_arms, Arm, GateContext, GenLoc, Retrieval};
+use crate::netsim::{Link, NetSim};
+use crate::oracle::Oracle;
+use crate::util::rng::Rng;
+use crate::util::stats::Running;
+use crate::workload::{Workload, WorkloadSpec};
+use strategy::{execute, GenRates, Outcome, StrategyInputs};
+
+/// How edge stores are managed during a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KnowledgeMode {
+    /// Static provisioning only (the Naive-RAG baseline).
+    Static,
+    /// EACO-RAG adaptive updates (cloud-triggered, FIFO).
+    Adaptive,
+}
+
+/// Aggregated run metrics (one Table-4 style row).
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    pub queries: usize,
+    pub accuracy: f64,
+    pub delay: Running,
+    pub resource_cost: Running,
+    pub total_cost: Running,
+    pub in_tokens: Running,
+    pub out_tokens: Running,
+    /// Arm usage histogram (gate runs only).
+    pub arm_counts: Vec<usize>,
+}
+
+impl RunStats {
+    pub fn row(&self) -> String {
+        format!(
+            "acc {:5.2}%  delay {:5.2}s ± {:4.2}  cost {:8.2} ± {:6.2} TFLOPs  (n={})",
+            self.accuracy * 100.0,
+            self.delay.mean(),
+            self.delay.std(),
+            self.resource_cost.mean(),
+            self.resource_cost.std(),
+            self.queries
+        )
+    }
+}
+
+/// The simulated system.
+pub struct SimSystem {
+    pub cfg: SystemConfig,
+    pub corpus: Corpus,
+    pub edges: Vec<EdgeNode>,
+    pub cloud: CloudNode,
+    pub net: NetSim,
+    pub oracle: Oracle,
+    pub cost: CostModel,
+    pub rates: GenRates,
+    pub mode: KnowledgeMode,
+    /// Chunks that arrived via community distribution, per edge.
+    community_marked: Vec<std::collections::HashSet<ChunkId>>,
+    rng: Rng,
+    /// Tier parameters (emulated billions) — from the manifest when
+    /// available, else the defaults matching `python/compile/model.py`.
+    pub edge_params_b: f64,
+    pub cloud_params_b: f64,
+    pub edge_capability: f64,
+    pub cloud_capability: f64,
+}
+
+/// Default tier table mirroring `python/compile/model.py::TIERS` (used
+/// when running simulation-only, without loading the artifact manifest).
+pub fn tier_defaults(name: &str) -> Option<(f64, f64)> {
+    // (emulated_params_b, capability)
+    match name {
+        "qwen05b" => Some((0.5, 0.30)),
+        "qwen15b" => Some((1.5, 0.42)),
+        "qwen3b" => Some((3.0, 0.55)),
+        "llama3b" => Some((3.0, 0.48)),
+        "qwen7b" => Some((7.0, 0.64)),
+        "qwen72b" => Some((72.0, 0.90)),
+        _ => None,
+    }
+}
+
+impl SimSystem {
+    /// Build a system per config; edges are provisioned with chunks for
+    /// their home topics (pre-deployment state).
+    pub fn new(cfg: SystemConfig, mode: KnowledgeMode) -> SimSystem {
+        let corpus = Corpus::generate(cfg.dataset, cfg.seed);
+        let cloud_spec = CloudSpec {
+            update_trigger: cfg.update_trigger,
+            distribute_max_chunks: cfg.distribute_max_chunks,
+            top_k_communities: cfg.top_k_communities,
+        };
+        let cloud = CloudNode::new(&corpus, cfg.num_edges, cloud_spec);
+        let edges: Vec<EdgeNode> = (0..cfg.num_edges)
+            .map(|i| EdgeNode::new(i, cfg.edge_capacity))
+            .collect();
+        let net = NetSim::new(cfg.num_edges, cfg.net.clone(), cfg.seed);
+        let oracle = Oracle::new(cfg.seed ^ 0x5eed);
+        let cost = CostModel::new(cfg.cost_weights);
+        let (edge_params_b, edge_capability) =
+            tier_defaults(&cfg.edge_tier).unwrap_or((3.0, 0.55));
+        let (cloud_params_b, cloud_capability) =
+            tier_defaults(&cfg.cloud_tier).unwrap_or((72.0, 0.90));
+        let rng = Rng::new(cfg.seed).fork("sim");
+        let community_marked = vec![std::collections::HashSet::new(); cfg.num_edges];
+        let mut sys = SimSystem {
+            cfg,
+            corpus,
+            edges,
+            cloud,
+            net,
+            oracle,
+            cost,
+            rates: GenRates::default(),
+            mode,
+            community_marked,
+            rng,
+            edge_params_b,
+            cloud_params_b,
+            edge_capability,
+            cloud_capability,
+        };
+        sys.provision_edges();
+        sys
+    }
+
+    /// Initial edge provisioning: fill each store with chunks from its
+    /// home topics (round-robin pages), capped at capacity.
+    fn provision_edges(&mut self) {
+        let num_edges = self.cfg.num_edges;
+        let topics = self.corpus.spec.topics;
+        let per_edge = (topics as f64 / num_edges as f64).ceil() as usize;
+        for e in 0..num_edges {
+            let home: Vec<usize> = (0..per_edge.max(1))
+                .map(|i| (e * per_edge + i) % topics)
+                .collect();
+            let chunks: Vec<ChunkId> = self
+                .corpus
+                .chunks
+                .iter()
+                .filter(|c| home.contains(&c.topic))
+                .take(self.cfg.edge_capacity)
+                .map(|c| c.id)
+                .collect();
+            self.edges[e].apply_update(&self.corpus, &chunks);
+        }
+    }
+
+    /// Assemble the gate context for a query event.
+    pub fn gate_context(&self, qa_id: QaId, edge_id: usize, step: usize) -> GateContext {
+        let qa = &self.corpus.qa[qa_id];
+        let kws = self.corpus.qa_keywords(qa);
+        let (best_edge, best_overlap) = best_edge_for(&self.edges, edge_id, &kws);
+        let local_overlap = self.edges[edge_id].overlap_ratio(&kws);
+        GateContext {
+            cloud_delay_ms: self.net.expected_delay_ms(Link::EdgeToCloud(edge_id), step),
+            edge_delay_ms: self.net.expected_delay_ms(Link::UserToEdge(edge_id), step),
+            best_overlap,
+            best_edge_is_local: best_edge == edge_id,
+            local_overlap,
+            hops: qa.hops,
+            length_tokens: qa.length_tokens,
+            entity_count: qa.entities.len(),
+        }
+    }
+
+    /// Serve one query with a fixed arm; returns the outcome + verdict.
+    pub fn serve(
+        &mut self,
+        qa_id: QaId,
+        edge_id: usize,
+        step: usize,
+        arm: Arm,
+    ) -> (Outcome, bool) {
+        let kws_owned: Vec<String> = {
+            let qa = &self.corpus.qa[qa_id];
+            self.corpus
+                .qa_keywords(qa)
+                .into_iter()
+                .map(|s| s.to_string())
+                .collect()
+        };
+        let kws: Vec<&str> = kws_owned.iter().map(|s| s.as_str()).collect();
+
+        // --- retrieval ---
+        let (retrieved, context_chars, community, edge_edge_s) = match arm.retrieval {
+            Retrieval::None => (Vec::new(), 0, false, 0.0),
+            Retrieval::LocalNaive => {
+                let chunks = self.edges[edge_id].retrieve(&kws, self.cfg.retrieve_k);
+                let chars = self.edges[edge_id].retrieval_context_chars(&self.corpus, &chunks);
+                let community = chunks
+                    .iter()
+                    .any(|c| self.community_marked[edge_id].contains(c));
+                (chunks, chars, community, 0.0)
+            }
+            Retrieval::EdgeAssisted => {
+                let (best, _) = best_edge_for(&self.edges, edge_id, &kws);
+                let chunks = self.edges[best].retrieve(&kws, self.cfg.retrieve_k);
+                let chars = self.edges[best].retrieval_context_chars(&self.corpus, &chunks);
+                let community = chunks
+                    .iter()
+                    .any(|c| self.community_marked[best].contains(c));
+                let hop = if best == edge_id {
+                    0.0
+                } else {
+                    self.net.delay_ms(Link::EdgeToEdge(edge_id, best), step) / 1000.0
+                };
+                (chunks, chars, community, hop)
+            }
+            Retrieval::CloudGraph => {
+                let (chunks, chars) =
+                    self.cloud
+                        .retrieve_graph(&self.corpus, &kws, self.cfg.retrieve_k);
+                (chunks, chars, false, 0.0)
+            }
+        };
+
+        let qa = &self.corpus.qa[qa_id];
+        let inputs = StrategyInputs {
+            arm,
+            retrieved,
+            context_chars,
+            community_content: community,
+            question_tokens: qa.length_tokens,
+            net_user_edge_s: self.net.delay_ms(Link::UserToEdge(edge_id), step) / 1000.0,
+            net_edge_edge_s: edge_edge_s,
+            net_edge_cloud_s: self.net.delay_ms(Link::EdgeToCloud(edge_id), step) / 1000.0,
+            edge_params_b: self.edge_params_b,
+            cloud_params_b: self.cloud_params_b,
+            rates: &self.rates,
+            cost: &self.cost,
+        };
+        let outcome = execute(inputs, &mut self.rng);
+
+        // --- grading ---
+        let capability = match arm.gen {
+            GenLoc::EdgeSlm => self.edge_capability,
+            GenLoc::CloudLlm => self.cloud_capability,
+        };
+        let correct = self.oracle.judge(
+            self.corpus.spec.profile,
+            qa,
+            capability,
+            &outcome.retrieved,
+            outcome.source,
+            step,
+        );
+
+        // --- adaptive knowledge update ---
+        if self.mode == KnowledgeMode::Adaptive {
+            if let Some(plan) = self.cloud.record_query(&self.corpus, edge_id, qa_id) {
+                self.edges[plan.edge_id].apply_update(&self.corpus, &plan.chunks);
+                let marked = &mut self.community_marked[plan.edge_id];
+                for &c in &plan.chunks {
+                    marked.insert(c);
+                }
+            }
+        }
+
+        (outcome, correct)
+    }
+
+    /// Run a fixed-strategy baseline over a workload slice.
+    pub fn run_baseline(&mut self, workload: &Workload, arm: Arm) -> RunStats {
+        let mut stats = RunStats {
+            arm_counts: vec![0; 1],
+            ..Default::default()
+        };
+        let mut correct_n = 0usize;
+        for ev in workload.events.clone() {
+            let (outcome, correct) = self.serve(ev.qa_id, ev.edge_id, ev.step, arm);
+            accumulate(&mut stats, &outcome, correct, &mut correct_n);
+        }
+        finalize(&mut stats, correct_n);
+        stats
+    }
+
+    /// Run EACO-RAG: SafeOBO gate over the workload. Metrics cover the
+    /// exploitation phase only (post-warm-up), matching Table 5's
+    /// sensitivity to T₀. Returns (stats, gate) for inspection.
+    pub fn run_eaco(&mut self, workload: &Workload) -> (RunStats, SafeObo) {
+        let (min_acc, max_delay) = self.cfg.qos.constraints_for(self.cfg.dataset);
+        let mut gate = SafeObo::new(
+            standard_arms(),
+            Qos {
+                min_accuracy: min_acc,
+                max_delay_s: max_delay,
+            },
+            self.cfg.warmup_steps,
+            self.cfg.beta,
+            self.cfg.seed,
+        );
+        let mut stats = RunStats {
+            arm_counts: vec![0; gate.arms.len()],
+            ..Default::default()
+        };
+        let mut correct_n = 0usize;
+        for ev in workload.events.clone() {
+            let ctx = self.gate_context(ev.qa_id, ev.edge_id, ev.step);
+            let decision = gate.decide(&ctx);
+            let arm = gate.arms[decision.arm_idx];
+            let (outcome, correct) = self.serve(ev.qa_id, ev.edge_id, ev.step, arm);
+            gate.observe(
+                &ctx,
+                decision.arm_idx,
+                Observation {
+                    resource_cost: outcome.resource_cost,
+                    delay_cost: outcome.delay_cost,
+                    accuracy: if correct { 1.0 } else { 0.0 },
+                    delay_s: outcome.delay_s,
+                },
+            );
+            if !decision.explored {
+                stats.arm_counts[decision.arm_idx] += 1;
+                accumulate(&mut stats, &outcome, correct, &mut correct_n);
+            }
+        }
+        finalize(&mut stats, correct_n);
+        (stats, gate)
+    }
+
+    /// The standard baseline arms of Table 4.
+    pub fn baseline_arm(name: &str) -> Option<Arm> {
+        match name {
+            "llm-only" => Some(Arm { retrieval: Retrieval::None, gen: GenLoc::EdgeSlm }),
+            "naive-rag" => Some(Arm { retrieval: Retrieval::LocalNaive, gen: GenLoc::EdgeSlm }),
+            "graph-slm" => Some(Arm { retrieval: Retrieval::CloudGraph, gen: GenLoc::EdgeSlm }),
+            "graph-llm" => Some(Arm { retrieval: Retrieval::CloudGraph, gen: GenLoc::CloudLlm }),
+            _ => None,
+        }
+    }
+}
+
+fn accumulate(stats: &mut RunStats, o: &Outcome, correct: bool, correct_n: &mut usize) {
+    stats.queries += 1;
+    if correct {
+        *correct_n += 1;
+    }
+    stats.delay.push(o.delay_s);
+    stats.resource_cost.push(o.resource_cost);
+    stats.total_cost.push(o.total_cost);
+    stats.in_tokens.push(o.tokens.input);
+    stats.out_tokens.push(o.tokens.output);
+}
+
+fn finalize(stats: &mut RunStats, correct_n: usize) {
+    stats.accuracy = if stats.queries == 0 {
+        0.0
+    } else {
+        correct_n as f64 / stats.queries as f64
+    };
+}
+
+/// Convenience: workload spec matching a config.
+pub fn workload_for(cfg: &SystemConfig, steps: usize) -> WorkloadSpec {
+    WorkloadSpec {
+        num_edges: cfg.num_edges,
+        steps,
+        ..WorkloadSpec::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QosPreset;
+    use crate::corpus::Profile;
+    use crate::workload::Workload;
+
+    fn small_cfg(profile: Profile) -> SystemConfig {
+        SystemConfig {
+            dataset: profile,
+            edge_capacity: 400,
+            warmup_steps: 300,
+            ..SystemConfig::default()
+        }
+    }
+
+    fn run_pair(profile: Profile, steps: usize) -> (SimSystem, Workload) {
+        let cfg = small_cfg(profile);
+        let sys = SimSystem::new(cfg.clone(), KnowledgeMode::Adaptive);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, steps), cfg.seed);
+        (sys, wl)
+    }
+
+    #[test]
+    fn baselines_ordered_like_table4() {
+        let cfg = small_cfg(Profile::Wiki);
+        let mut results = Vec::new();
+        for name in ["llm-only", "naive-rag", "graph-slm", "graph-llm"] {
+            let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Static);
+            let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 400), cfg.seed);
+            let arm = SimSystem::baseline_arm(name).unwrap();
+            let stats = sys.run_baseline(&wl, arm);
+            results.push((name, stats));
+        }
+        let acc: Vec<f64> = results.iter().map(|(_, s)| s.accuracy).collect();
+        // Table 4 ordering: LLM-only < NaiveRAG < GraphRAG-3B < GraphRAG-72B.
+        assert!(acc[0] < acc[1], "llm {} !< naive {}", acc[0], acc[1]);
+        assert!(acc[1] < acc[2] + 0.05, "naive {} !< graph {}", acc[1], acc[2]);
+        assert!(acc[2] < acc[3], "graph3b {} !< graph72b {}", acc[2], acc[3]);
+        // Cost ordering too.
+        let cost: Vec<f64> = results.iter().map(|(_, s)| s.resource_cost.mean()).collect();
+        assert!(cost[0] < cost[1] && cost[1] < cost[2] && cost[2] < cost[3]);
+        // Delay: graph-slm slowest.
+        let delay: Vec<f64> = results.iter().map(|(_, s)| s.delay.mean()).collect();
+        assert!(delay[2] > delay[3], "3b graph should be slowest");
+    }
+
+    #[test]
+    fn eaco_cuts_cost_vs_cloud_at_similar_accuracy() {
+        let (mut sys, wl) = run_pair(Profile::Wiki, 1500);
+        let (eaco, _) = sys.run_eaco(&wl);
+
+        let cfg = small_cfg(Profile::Wiki);
+        let mut base = SimSystem::new(cfg.clone(), KnowledgeMode::Static);
+        let cloud = base.run_baseline(&wl, SimSystem::baseline_arm("graph-llm").unwrap());
+
+        assert!(
+            eaco.accuracy > cloud.accuracy - 0.08,
+            "eaco acc {:.3} vs cloud {:.3}",
+            eaco.accuracy,
+            cloud.accuracy
+        );
+        assert!(
+            eaco.resource_cost.mean() < cloud.resource_cost.mean() * 0.6,
+            "eaco cost {:.1} vs cloud {:.1}",
+            eaco.resource_cost.mean(),
+            cloud.resource_cost.mean()
+        );
+    }
+
+    #[test]
+    fn adaptive_updates_improve_local_coverage() {
+        let cfg = small_cfg(Profile::Wiki);
+        let wl_spec = workload_for(&cfg, 600);
+
+        let mut static_sys = SimSystem::new(cfg.clone(), KnowledgeMode::Static);
+        let wl = Workload::generate(&static_sys.corpus, wl_spec, cfg.seed);
+        let arm = SimSystem::baseline_arm("naive-rag").unwrap();
+        let s_static = static_sys.run_baseline(&wl, arm);
+
+        let mut adaptive_sys = SimSystem::new(cfg, KnowledgeMode::Adaptive);
+        let s_adapt = adaptive_sys.run_baseline(&wl, arm);
+
+        assert!(
+            s_adapt.accuracy > s_static.accuracy + 0.02,
+            "adaptive {:.3} !> static {:.3}",
+            s_adapt.accuracy,
+            s_static.accuracy
+        );
+        assert!(adaptive_sys.cloud.updates_sent > 0);
+    }
+
+    #[test]
+    fn delay_oriented_gate_meets_deadline() {
+        let mut cfg = small_cfg(Profile::Wiki);
+        cfg.qos = QosPreset::DelayOriented;
+        let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Adaptive);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 900), cfg.seed);
+        let (stats, _) = sys.run_eaco(&wl);
+        assert!(
+            stats.delay.mean() < 1.3,
+            "delay-oriented mean {:.2}s",
+            stats.delay.mean()
+        );
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let (mut a, wl) = run_pair(Profile::Wiki, 300);
+        let (sa, _) = a.run_eaco(&wl);
+        let (mut b, wl2) = run_pair(Profile::Wiki, 300);
+        let (sb, _) = b.run_eaco(&wl2);
+        assert_eq!(sa.queries, sb.queries);
+        assert!((sa.accuracy - sb.accuracy).abs() < 1e-12);
+        assert!((sa.resource_cost.mean() - sb.resource_cost.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gate_uses_multiple_arms() {
+        let (mut sys, wl) = run_pair(Profile::Wiki, 1500);
+        let (stats, _) = sys.run_eaco(&wl);
+        let used = stats.arm_counts.iter().filter(|&&c| c > 0).count();
+        assert!(used >= 2, "gate collapsed to one arm: {:?}", stats.arm_counts);
+    }
+}

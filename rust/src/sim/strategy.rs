@@ -1,0 +1,310 @@
+//! Strategy execution model: tokens, delay, and cost per gate arm.
+//!
+//! Turns an arm choice into the observable outcome triple the paper's
+//! optimization consumes — (accuracy ρ_t, response time h_t, costs u_r,
+//! u_d). Token counts come from the *actual* retrieved context; delays
+//! combine netsim link samples with a generation-time model calibrated
+//! to Table 4 (e.g. 3B LLM-only ≈ 0.30 s on a 4090; 72B+GraphRAG ≈ 1 s
+//! on the emulated 8×H100 cloud); costs follow `cost::inference_tflops`
+//! and the Table-3 GPU scaling.
+
+use crate::corpus::ChunkId;
+use crate::cost::{text_tokens, CostModel, Gpu, TokenUsage};
+use crate::gating::{Arm, GenLoc, Retrieval};
+use crate::oracle::ContextSource;
+use crate::util::rng::Rng;
+
+/// Generation-rate model (tokens/second) for an emulated tier.
+///
+/// Rates scale inversely with parameter count and linearly with the
+/// serving hardware: the edge runs a single RTX 4090, the cloud an
+/// emulated 8×H100 pod (paper §5). Constants calibrated so Table 4's
+/// delay column reproduces: 3B prefill ≈ 6k tok/s & decode ≈ 100 tok/s
+/// on the edge; 72B prefill ≈ 30k tok/s & decode ≈ 400 tok/s in the
+/// cloud.
+#[derive(Clone, Copy, Debug)]
+pub struct GenRates {
+    pub edge_prefill_per_b: f64,
+    pub edge_decode_per_b: f64,
+    pub cloud_prefill_per_b: f64,
+    pub cloud_decode_per_b: f64,
+}
+
+impl Default for GenRates {
+    fn default() -> Self {
+        GenRates {
+            edge_prefill_per_b: 18_000.0,
+            edge_decode_per_b: 300.0,
+            cloud_prefill_per_b: 4_000_000.0,
+            cloud_decode_per_b: 43_200.0,
+        }
+    }
+}
+
+impl GenRates {
+    /// Generation wall-time (seconds) for a tier at a location.
+    pub fn gen_seconds(
+        &self,
+        loc: GenLoc,
+        params_b: f64,
+        in_tokens: f64,
+        out_tokens: f64,
+    ) -> f64 {
+        let (pre, dec) = match loc {
+            GenLoc::EdgeSlm => (
+                self.edge_prefill_per_b / params_b,
+                self.edge_decode_per_b / params_b,
+            ),
+            GenLoc::CloudLlm => (
+                self.cloud_prefill_per_b / params_b,
+                self.cloud_decode_per_b / params_b,
+            ),
+        };
+        in_tokens / pre + out_tokens / dec
+    }
+}
+
+/// Fixed non-generation latencies (seconds).
+pub const LOCAL_RETRIEVAL_S: f64 = 0.005;
+pub const GRAPH_SEARCH_S: f64 = 0.20;
+
+/// Everything observable about one served query.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub arm: Arm,
+    pub retrieved: Vec<ChunkId>,
+    pub source: ContextSource,
+    pub tokens: TokenUsage,
+    pub delay_s: f64,
+    /// u_r (TFLOPs) and u_d (delay · GPU TFLOPS).
+    pub resource_cost: f64,
+    pub delay_cost: f64,
+    pub total_cost: f64,
+    pub gen_gpu: Gpu,
+}
+
+/// Inputs needed to realize an outcome (assembled by the sim runner).
+pub struct StrategyInputs<'a> {
+    pub arm: Arm,
+    /// Retrieved context and its char volume (by the arm's source).
+    pub retrieved: Vec<ChunkId>,
+    pub context_chars: usize,
+    /// Whether retrieval came from community-distributed edge content.
+    pub community_content: bool,
+    /// Question length (tokens).
+    pub question_tokens: usize,
+    /// Sampled network delays for this query (seconds).
+    pub net_user_edge_s: f64,
+    pub net_edge_edge_s: f64,
+    pub net_edge_cloud_s: f64,
+    /// Emulated parameter counts.
+    pub edge_params_b: f64,
+    pub cloud_params_b: f64,
+    pub rates: &'a GenRates,
+    pub cost: &'a CostModel,
+}
+
+/// Realize the outcome of serving a query with a given arm.
+pub fn execute(inp: StrategyInputs<'_>, rng: &mut Rng) -> Outcome {
+    let arm = inp.arm;
+
+    // --- context source & retrieval latency ---
+    let (source, retrieval_s) = match arm.retrieval {
+        Retrieval::None => (ContextSource::None, 0.0),
+        Retrieval::LocalNaive => (
+            if inp.community_content {
+                ContextSource::EdgeCommunity
+            } else {
+                ContextSource::NaiveRag
+            },
+            LOCAL_RETRIEVAL_S,
+        ),
+        Retrieval::EdgeAssisted => (
+            if inp.community_content {
+                ContextSource::EdgeCommunity
+            } else {
+                ContextSource::NaiveRag
+            },
+            inp.net_edge_edge_s + LOCAL_RETRIEVAL_S,
+        ),
+        Retrieval::CloudGraph => (
+            ContextSource::GraphRag,
+            inp.net_edge_cloud_s + GRAPH_SEARCH_S,
+        ),
+    };
+
+    // --- tokens ---
+    let in_tokens = inp.question_tokens as f64 + text_tokens(inp.context_chars);
+    let out_tokens = match source {
+        // GraphRAG-grounded answers are verbose (Table 1: 142.7 ± 91).
+        ContextSource::GraphRag => 110.0 + rng.f64() * 70.0,
+        ContextSource::None => 18.0 + rng.f64() * 18.0,
+        _ => 20.0 + rng.f64() * 14.0,
+    };
+
+    // --- generation ---
+    let (params_b, gen_gpu) = match arm.gen {
+        GenLoc::EdgeSlm => (inp.edge_params_b, Gpu::Rtx4090),
+        GenLoc::CloudLlm => (inp.cloud_params_b, Gpu::H100),
+    };
+    let gen_s = inp.rates.gen_seconds(arm.gen, params_b, in_tokens, out_tokens);
+
+    // Cloud generation needs a cloud hop unless retrieval already went
+    // there (context is forwarded within the data center).
+    let extra_cloud_hop = match (arm.gen, arm.retrieval) {
+        (GenLoc::CloudLlm, Retrieval::CloudGraph) => 0.0,
+        (GenLoc::CloudLlm, _) => inp.net_edge_cloud_s,
+        _ => 0.0,
+    };
+
+    let delay_s = inp.net_user_edge_s + retrieval_s + extra_cloud_hop + gen_s;
+
+    // --- costs (Eq. 1) ---
+    let resource_cost = inp.cost.resource_cost(params_b, in_tokens, out_tokens);
+    let delay_cost = inp.cost.time_cost(delay_s, gen_gpu);
+    let total_cost = inp.cost.total(resource_cost, delay_cost);
+
+    Outcome {
+        arm,
+        retrieved: inp.retrieved,
+        source,
+        tokens: TokenUsage {
+            input: in_tokens,
+            output: out_tokens,
+        },
+        delay_s,
+        resource_cost,
+        delay_cost,
+        total_cost,
+        gen_gpu,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostWeights;
+    use crate::gating::{Arm, GenLoc, Retrieval};
+
+    fn base_inputs<'a>(
+        arm: Arm,
+        context_chars: usize,
+        rates: &'a GenRates,
+        cost: &'a CostModel,
+    ) -> StrategyInputs<'a> {
+        StrategyInputs {
+            arm,
+            retrieved: vec![],
+            context_chars,
+            community_content: false,
+            question_tokens: 16,
+            net_user_edge_s: 0.020,
+            net_edge_edge_s: 0.032,
+            net_edge_cloud_s: 0.300,
+            edge_params_b: 3.0,
+            cloud_params_b: 72.0,
+            rates,
+            cost,
+        }
+    }
+
+    fn run(arm: Arm, context_chars: usize) -> Outcome {
+        let rates = GenRates::default();
+        let cost = CostModel::new(CostWeights::default());
+        let mut rng = Rng::new(1);
+        execute(base_inputs(arm, context_chars, &rates, &cost), &mut rng)
+    }
+
+    #[test]
+    fn llm_only_delay_near_table4() {
+        // Table 4: 3B LLM-only = 0.30 ± 0.07 s.
+        let o = run(Arm { retrieval: Retrieval::None, gen: GenLoc::EdgeSlm }, 0);
+        assert!((0.15..0.55).contains(&o.delay_s), "delay {}", o.delay_s);
+        assert!(o.resource_cost < 1.0, "cost {}", o.resource_cost);
+    }
+
+    #[test]
+    fn naive_rag_delay_near_table4() {
+        // Table 4: 3B + Naive RAG = 0.88 ± 0.11 s with ~3.6k-token context.
+        let o = run(
+            Arm { retrieval: Retrieval::LocalNaive, gen: GenLoc::EdgeSlm },
+            14_400, // ≈3600 tokens
+        );
+        assert!((0.6..1.3).contains(&o.delay_s), "delay {}", o.delay_s);
+        assert!((15.0..30.0).contains(&o.resource_cost), "cost {}", o.resource_cost);
+    }
+
+    #[test]
+    fn graphrag_3b_slowest_cloud72_fast() {
+        // Table 4: 3B+GraphRAG ≈ 3.0 s (long context on weak edge GPU),
+        // 72B+GraphRAG ≈ 1.0 s (big pod) — the crossover the gate exploits.
+        let slm = run(
+            Arm { retrieval: Retrieval::CloudGraph, gen: GenLoc::EdgeSlm },
+            24_000,
+        );
+        let llm = run(
+            Arm { retrieval: Retrieval::CloudGraph, gen: GenLoc::CloudLlm },
+            24_000,
+        );
+        assert!(slm.delay_s > 2.0, "slm {}", slm.delay_s);
+        assert!((0.5..1.6).contains(&llm.delay_s), "llm {}", llm.delay_s);
+        assert!(llm.resource_cost > slm.resource_cost * 5.0);
+    }
+
+    #[test]
+    fn graph_out_tokens_verbose() {
+        let o = run(
+            Arm { retrieval: Retrieval::CloudGraph, gen: GenLoc::CloudLlm },
+            24_000,
+        );
+        assert!(o.tokens.output > 100.0);
+        let plain = run(Arm { retrieval: Retrieval::None, gen: GenLoc::EdgeSlm }, 0);
+        assert!(plain.tokens.output < 40.0);
+    }
+
+    #[test]
+    fn community_content_changes_source() {
+        let rates = GenRates::default();
+        let cost = CostModel::default();
+        let mut rng = Rng::new(2);
+        let mut inp = base_inputs(
+            Arm { retrieval: Retrieval::LocalNaive, gen: GenLoc::EdgeSlm },
+            4000,
+            &rates,
+            &cost,
+        );
+        inp.community_content = true;
+        let o = execute(inp, &mut rng);
+        assert_eq!(o.source, ContextSource::EdgeCommunity);
+    }
+
+    #[test]
+    fn cloud_gen_without_cloud_retrieval_pays_hop() {
+        let local_gen = run(
+            Arm { retrieval: Retrieval::LocalNaive, gen: GenLoc::EdgeSlm },
+            4000,
+        );
+        let cloud_gen = run(
+            Arm { retrieval: Retrieval::LocalNaive, gen: GenLoc::CloudLlm },
+            4000,
+        );
+        // The cloud hop (~0.3 s) must appear, but the 72B pod generates
+        // faster, so compare the network component via total structure.
+        assert!(cloud_gen.delay_s > 0.3, "cloud hop missing: {}", cloud_gen.delay_s);
+        assert_eq!(cloud_gen.gen_gpu, Gpu::H100);
+        assert_eq!(local_gen.gen_gpu, Gpu::Rtx4090);
+    }
+
+    #[test]
+    fn time_cost_scales_with_gpu() {
+        let edge = run(Arm { retrieval: Retrieval::None, gen: GenLoc::EdgeSlm }, 0);
+        let cloud = run(
+            Arm { retrieval: Retrieval::CloudGraph, gen: GenLoc::CloudLlm },
+            24_000,
+        );
+        // Per second of delay, cloud time-cost is 60/1.29 ≈ 46× pricier.
+        let edge_rate = edge.delay_cost / edge.delay_s;
+        let cloud_rate = cloud.delay_cost / cloud.delay_s;
+        assert!((cloud_rate / edge_rate - 60.0 / 1.29).abs() < 1e-6);
+    }
+}

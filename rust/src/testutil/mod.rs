@@ -1,0 +1,102 @@
+//! Mini property-testing harness (proptest substitute, DESIGN.md §1).
+//!
+//! Offline image has no proptest; this provides the 90% we need: run a
+//! property over many seeded-random cases, and on failure report the
+//! failing case number + seed so the exact case replays deterministically.
+//!
+//! ```ignore
+//! proptest(200, |rng| {
+//!     let n = rng.range(1, 50);
+//!     // ... build inputs from rng, assert invariants ...
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Run `prop` over `cases` generated cases. Panics (with seed + case
+/// index) on the first failing case. The base seed is fixed so CI is
+/// deterministic; set `EACO_PROPTEST_SEED` to explore other schedules.
+pub fn proptest<F: FnMut(&mut Rng)>(cases: usize, mut prop: F) {
+    let base = std::env::var("EACO_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xEAC0_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed:#x}, base {base:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two floats are within absolute tolerance.
+#[macro_export]
+macro_rules! assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b, tol): (f64, f64, f64) = ($a, $b, $tol);
+        assert!(
+            (a - b).abs() <= tol,
+            "assert_close failed: {} vs {} (tol {})",
+            a,
+            b,
+            tol
+        );
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        proptest(50, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn reports_failing_case() {
+        let r = std::panic::catch_unwind(|| {
+            proptest(10, |rng| {
+                let x = rng.below(100);
+                assert!(x != x, "always fails {x}");
+            });
+        });
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("property failed at case 0"), "{msg}");
+    }
+
+    #[test]
+    fn cases_use_distinct_seeds() {
+        let mut first_draws = Vec::new();
+        proptest(5, |rng| {
+            first_draws.push(rng.next_u64());
+        });
+        let mut dedup = first_draws.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), first_draws.len());
+    }
+
+    #[test]
+    fn assert_close_works() {
+        assert_close!(1.0, 1.0 + 1e-9, 1e-6);
+    }
+}

@@ -1,0 +1,209 @@
+//! Tiny CLI argument parser (clap substitute for the offline image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Each binary declares its options up front so `--help` is generated.
+
+use std::collections::BTreeMap;
+
+/// Declared option for help output.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    specs: Vec<OptSpec>,
+    program: String,
+    about: String,
+}
+
+impl Args {
+    /// Build a parser: declare options, then call [`Args::parse`].
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Parse an explicit argv (no leading program name). Returns Err with
+    /// a usage string on unknown options or `--help`.
+    pub fn parse_from<I: IntoIterator<Item = String>>(mut self, argv: I) -> Result<Self, String> {
+        let known_flag = |specs: &[OptSpec], n: &str| {
+            specs.iter().any(|s| s.name == n && s.is_flag)
+        };
+        let known_opt = |specs: &[OptSpec], n: &str| {
+            specs.iter().any(|s| s.name == n && !s.is_flag)
+        };
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    if !known_opt(&self.specs, k) {
+                        return Err(format!("unknown option --{k}\n\n{}", self.usage()));
+                    }
+                    self.values.insert(k.to_string(), v.to_string());
+                } else if known_flag(&self.specs, body) {
+                    self.flags.push(body.to_string());
+                } else if known_opt(&self.specs, body) {
+                    match it.next() {
+                        Some(v) => {
+                            self.values.insert(body.to_string(), v);
+                        }
+                        None => return Err(format!("option --{body} expects a value")),
+                    }
+                } else {
+                    return Err(format!("unknown option --{body}\n\n{}", self.usage()));
+                }
+            } else {
+                self.positional.push(arg);
+            }
+        }
+        Ok(self)
+    }
+
+    /// Parse `std::env::args()` (skipping the program name); exits the
+    /// process with the usage text on error.
+    pub fn parse(self) -> Self {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let tail = if spec.is_flag {
+                String::new()
+            } else {
+                format!(" <v> (default: {})", spec.default.as_deref().unwrap_or(""))
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", spec.name, tail, spec.help));
+        }
+        s
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+            .unwrap_or_default()
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name).parse().unwrap_or_else(|_| {
+            eprintln!("option --{name} expects an integer (got {:?})", self.get(name));
+            std::process::exit(2);
+        })
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name).parse().unwrap_or_else(|_| {
+            eprintln!("option --{name} expects a number (got {:?})", self.get(name));
+            std::process::exit(2);
+        })
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name).parse().unwrap_or_else(|_| {
+            eprintln!("option --{name} expects an integer (got {:?})", self.get(name));
+            std::process::exit(2);
+        })
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn parser() -> Args {
+        Args::new("t", "test")
+            .opt("steps", "100", "number of steps")
+            .opt("dataset", "wiki", "dataset profile")
+            .flag("verbose", "chatty output")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parser().parse_from(argv(&[])).unwrap();
+        assert_eq!(a.get("steps"), "100");
+        assert_eq!(a.get_usize("steps"), 100);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parser()
+            .parse_from(argv(&["--steps", "5", "--dataset=hp", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("steps"), 5);
+        assert_eq!(a.get("dataset"), "hp");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parser().parse_from(argv(&["--bogus"])).is_err());
+    }
+
+    #[test]
+    fn help_errors_with_usage() {
+        let err = parser().parse_from(argv(&["--help"])).unwrap_err();
+        assert!(err.contains("--steps"));
+        assert!(err.contains("--dataset"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parser().parse_from(argv(&["--steps"])).is_err());
+    }
+}

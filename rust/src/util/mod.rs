@@ -1,0 +1,17 @@
+//! Shared utilities — in-repo substitutes for crates unavailable in the
+//! offline image (rand, clap, serde/serde_json, criterion's stats).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Format a float with fixed decimals, trimming `-0.00` artifacts.
+pub fn fmt_f(v: f64, decimals: usize) -> String {
+    let s = format!("{v:.decimals$}");
+    if s.starts_with("-0.") && s[1..].parse::<f64>() == Ok(0.0) {
+        s[1..].to_string()
+    } else {
+        s
+    }
+}

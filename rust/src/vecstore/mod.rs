@@ -1,0 +1,171 @@
+//! Cosine-similarity vector store (the dense half of retrieval).
+//!
+//! Stores unit-normalized embeddings produced by the runtime embedder
+//! (the MiniLM stand-in) and answers top-k / threshold queries. Brute
+//! force with a blocked scan — at edge-store scale (≤ a few thousand
+//! vectors × 64 dims) this is memory-bandwidth bound and far from the
+//! bottleneck; see benches/perf_hotpath.rs for measured scan rates.
+
+/// A vector store over fixed-dimension embeddings.
+#[derive(Clone, Debug)]
+pub struct VecStore {
+    dim: usize,
+    ids: Vec<usize>,
+    /// Row-major, one row per id; rows are L2-normalized on insert.
+    data: Vec<f32>,
+}
+
+impl VecStore {
+    pub fn new(dim: usize) -> Self {
+        VecStore {
+            dim,
+            ids: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Insert (or replace) a vector under `id`. The stored copy is
+    /// L2-normalized so `score == cosine`.
+    pub fn insert(&mut self, id: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.dim, "dim mismatch");
+        let norm = (v.iter().map(|x| x * x).sum::<f32>()).sqrt().max(1e-12);
+        if let Some(pos) = self.ids.iter().position(|&i| i == id) {
+            let row = &mut self.data[pos * self.dim..(pos + 1) * self.dim];
+            for (r, x) in row.iter_mut().zip(v) {
+                *r = *x / norm;
+            }
+        } else {
+            self.ids.push(id);
+            self.data.extend(v.iter().map(|x| x / norm));
+        }
+    }
+
+    /// Remove a vector (swap-remove; O(dim)).
+    pub fn remove(&mut self, id: usize) -> bool {
+        if let Some(pos) = self.ids.iter().position(|&i| i == id) {
+            let last = self.ids.len() - 1;
+            self.ids.swap(pos, last);
+            self.ids.pop();
+            if pos != last {
+                let (head, tail) = self.data.split_at_mut(last * self.dim);
+                head[pos * self.dim..(pos + 1) * self.dim].copy_from_slice(&tail[..self.dim]);
+            }
+            self.data.truncate(last * self.dim);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Cosine of `q` against every stored vector: returns (id, score)
+    /// top-k, descending, ties broken by id.
+    pub fn top_k(&self, q: &[f32], k: usize) -> Vec<(usize, f32)> {
+        assert_eq!(q.len(), self.dim);
+        let qn = (q.iter().map(|x| x * x).sum::<f32>()).sqrt().max(1e-12);
+        let mut scored: Vec<(usize, f32)> = self
+            .ids
+            .iter()
+            .enumerate()
+            .map(|(pos, &id)| {
+                let row = &self.data[pos * self.dim..(pos + 1) * self.dim];
+                let mut s = 0.0f32;
+                for i in 0..self.dim {
+                    s += row[i] * q[i];
+                }
+                (id, s / qn)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        scored.truncate(k);
+        scored
+    }
+
+    /// All ids whose cosine against `q` is at least `threshold` — the
+    /// paper's ">50% similarity ⇒ valid keyword match" rule.
+    pub fn above_threshold(&self, q: &[f32], threshold: f32) -> Vec<(usize, f32)> {
+        let mut v: Vec<(usize, f32)> = self
+            .top_k(q, self.len())
+            .into_iter()
+            .take_while(|&(_, s)| s >= threshold)
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_topk() {
+        let mut vs = VecStore::new(3);
+        vs.insert(10, &[1.0, 0.0, 0.0]);
+        vs.insert(20, &[0.0, 1.0, 0.0]);
+        vs.insert(30, &[0.7, 0.7, 0.0]);
+        let top = vs.top_k(&[1.0, 0.0, 0.0], 2);
+        assert_eq!(top[0].0, 10);
+        assert!((top[0].1 - 1.0).abs() < 1e-6);
+        assert_eq!(top[1].0, 30);
+    }
+
+    #[test]
+    fn normalization_on_insert() {
+        let mut vs = VecStore::new(2);
+        vs.insert(1, &[10.0, 0.0]); // scaled input
+        let top = vs.top_k(&[1.0, 0.0], 1);
+        assert!((top[0].1 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn replace_same_id() {
+        let mut vs = VecStore::new(2);
+        vs.insert(1, &[1.0, 0.0]);
+        vs.insert(1, &[0.0, 1.0]);
+        assert_eq!(vs.len(), 1);
+        let top = vs.top_k(&[0.0, 1.0], 1);
+        assert!((top[0].1 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn remove_swaps_correctly() {
+        let mut vs = VecStore::new(2);
+        vs.insert(1, &[1.0, 0.0]);
+        vs.insert(2, &[0.0, 1.0]);
+        vs.insert(3, &[-1.0, 0.0]);
+        assert!(vs.remove(1));
+        assert!(!vs.remove(99));
+        assert_eq!(vs.len(), 2);
+        let top = vs.top_k(&[0.0, 1.0], 2);
+        assert_eq!(top[0].0, 2);
+        assert_eq!(top[1].0, 3);
+    }
+
+    #[test]
+    fn threshold_rule() {
+        let mut vs = VecStore::new(2);
+        vs.insert(1, &[1.0, 0.0]);
+        vs.insert(2, &[0.6, 0.8]);
+        vs.insert(3, &[0.0, 1.0]);
+        let hits = vs.above_threshold(&[1.0, 0.0], 0.5);
+        assert_eq!(hits.iter().map(|h| h.0).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn empty_store() {
+        let vs = VecStore::new(4);
+        assert!(vs.top_k(&[1.0, 0.0, 0.0, 0.0], 5).is_empty());
+    }
+}

@@ -1,0 +1,280 @@
+//! Query workload generation: temporal drift + spatial skew (paper §2).
+//!
+//! Table 2 of the paper motivates EACO-RAG with queries that vary over
+//! *time* (elections, sports results) and *space* (regional traditions).
+//! This module turns those observations into a generative model:
+//!
+//! * **Spatial skew** — each edge node has its own topic-preference
+//!   distribution (a tilted/permuted version of the corpus base
+//!   popularity), so different edges see different query mixes.
+//! * **Temporal drift** — every `drift_period` steps a new *trending
+//!   topic* takes over a share of the traffic (breaking news), and the
+//!   underlying preference slowly rotates.
+//!
+//! The resulting stream is what exercises the adaptive knowledge update:
+//! an edge whose local store tracked last week's interests starts missing
+//! and must refresh from the cloud's knowledge graph.
+
+use crate::corpus::{Corpus, QaId, TopicId};
+use crate::util::rng::Rng;
+
+/// One arriving query.
+#[derive(Clone, Debug)]
+pub struct QueryEvent {
+    pub step: usize,
+    pub edge_id: usize,
+    pub qa_id: QaId,
+    /// Virtual inter-arrival gap before this query (milliseconds).
+    pub gap_ms: f64,
+}
+
+/// Workload generation parameters.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub num_edges: usize,
+    pub steps: usize,
+    /// Steps between trend changes (temporal drift cadence).
+    pub drift_period: usize,
+    /// Traffic share captured by the current trending topic.
+    pub trend_share: f64,
+    /// How strongly an edge's preference tilts toward its own topics
+    /// (0 = uniform across topics, 1 = fully local).
+    pub spatial_tilt: f64,
+    /// Mean inter-arrival gap (ms) — Poisson arrivals.
+    pub mean_gap_ms: f64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            num_edges: 4,
+            steps: 1000,
+            drift_period: 120,
+            trend_share: 0.35,
+            spatial_tilt: 0.6,
+            mean_gap_ms: 120.0,
+        }
+    }
+}
+
+/// A generated workload: the full event stream plus the evolving
+/// popularity model (exposed for tests and the knowledge distributor).
+pub struct Workload {
+    pub spec: WorkloadSpec,
+    pub events: Vec<QueryEvent>,
+    /// Per-edge home-topic assignment (spatial identity).
+    pub edge_home_topics: Vec<Vec<TopicId>>,
+    /// Trending topic per drift window.
+    pub trends: Vec<TopicId>,
+}
+
+impl Workload {
+    /// Generate a deterministic stream over `corpus`.
+    pub fn generate(corpus: &Corpus, spec: WorkloadSpec, seed: u64) -> Workload {
+        let mut rng = Rng::new(seed).fork("workload");
+        let topics = corpus.spec.topics;
+
+        // Spatial identity: each edge "owns" a contiguous slice of topics
+        // (regions care about local matters) — with wraparound.
+        let per_edge = (topics as f64 / spec.num_edges as f64).ceil() as usize;
+        let edge_home_topics: Vec<Vec<TopicId>> = (0..spec.num_edges)
+            .map(|e| {
+                (0..per_edge.max(1))
+                    .map(|i| (e * per_edge + i) % topics)
+                    .collect()
+            })
+            .collect();
+
+        // Trending topics per drift window.
+        let windows = spec.steps / spec.drift_period.max(1) + 1;
+        let trends: Vec<TopicId> = (0..windows).map(|_| rng.below(topics)).collect();
+
+        // Per-topic QA pools.
+        let topic_qas: Vec<Vec<QaId>> =
+            (0..topics).map(|t| corpus.qa_by_topic(t)).collect();
+
+        let mut events = Vec::with_capacity(spec.steps);
+        for step in 0..spec.steps {
+            let edge_id = rng.below(spec.num_edges);
+            let trend = trends[step / spec.drift_period.max(1)];
+            let topic = sample_topic(
+                corpus,
+                &edge_home_topics[edge_id],
+                trend,
+                &spec,
+                &mut rng,
+            );
+            // Sample a QA from the topic (fall back to any QA if empty).
+            let qa_id = if topic_qas[topic].is_empty() {
+                rng.below(corpus.qa.len())
+            } else {
+                *rng.choose(&topic_qas[topic])
+            };
+            events.push(QueryEvent {
+                step,
+                edge_id,
+                qa_id,
+                gap_ms: rng.exponential(1.0 / spec.mean_gap_ms),
+            });
+        }
+
+        Workload {
+            spec,
+            events,
+            edge_home_topics,
+            trends,
+        }
+    }
+
+    /// Instantaneous topic distribution seen at (edge, step) — used by
+    /// tests and by the cloud's knowledge distributor to anticipate
+    /// demand.
+    pub fn topic_distribution(
+        &self,
+        corpus: &Corpus,
+        edge_id: usize,
+        step: usize,
+    ) -> Vec<f64> {
+        let topics = corpus.spec.topics;
+        let trend = self.trends[step / self.spec.drift_period.max(1)];
+        let mut probs = vec![0.0; topics];
+        let home = &self.edge_home_topics[edge_id];
+        for t in 0..topics {
+            let base = corpus.topic_popularity[t];
+            let local = if home.contains(&t) {
+                1.0 / home.len() as f64
+            } else {
+                0.0
+            };
+            probs[t] = (1.0 - self.spec.spatial_tilt) * base + self.spec.spatial_tilt * local;
+        }
+        for p in probs.iter_mut() {
+            *p *= 1.0 - self.spec.trend_share;
+        }
+        probs[trend] += self.spec.trend_share;
+        probs
+    }
+}
+
+fn sample_topic(
+    corpus: &Corpus,
+    home: &[TopicId],
+    trend: TopicId,
+    spec: &WorkloadSpec,
+    rng: &mut Rng,
+) -> TopicId {
+    if rng.chance(spec.trend_share) {
+        return trend;
+    }
+    if rng.chance(spec.spatial_tilt) {
+        return *rng.choose(home);
+    }
+    // Base popularity (zipf) sampling.
+    let mut u = rng.f64();
+    for (t, &p) in corpus.topic_popularity.iter().enumerate() {
+        u -= p;
+        if u <= 0.0 {
+            return t;
+        }
+    }
+    corpus.spec.topics - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::Profile;
+
+    fn wl(steps: usize) -> (Corpus, Workload) {
+        let c = Corpus::generate(Profile::Wiki, 5);
+        let spec = WorkloadSpec {
+            steps,
+            ..WorkloadSpec::default()
+        };
+        let w = Workload::generate(&c, spec, 5);
+        (c, w)
+    }
+
+    #[test]
+    fn generates_requested_steps() {
+        let (_, w) = wl(500);
+        assert_eq!(w.events.len(), 500);
+        for (i, e) in w.events.iter().enumerate() {
+            assert_eq!(e.step, i);
+            assert!(e.edge_id < w.spec.num_edges);
+            assert!(e.gap_ms >= 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let c = Corpus::generate(Profile::Wiki, 5);
+        let a = Workload::generate(&c, WorkloadSpec::default(), 9);
+        let b = Workload::generate(&c, WorkloadSpec::default(), 9);
+        assert_eq!(a.events.len(), b.events.len());
+        assert!(a
+            .events
+            .iter()
+            .zip(&b.events)
+            .all(|(x, y)| x.qa_id == y.qa_id && x.edge_id == y.edge_id));
+    }
+
+    #[test]
+    fn spatial_skew_differs_across_edges() {
+        let (c, w) = wl(2000);
+        // Count topic frequency per edge; home topics should dominate.
+        let mut per_edge = vec![vec![0usize; c.spec.topics]; w.spec.num_edges];
+        for e in &w.events {
+            per_edge[e.edge_id][c.qa[e.qa_id].topic] += 1;
+        }
+        let mut home_hits = 0usize;
+        let mut total = 0usize;
+        for (eid, counts) in per_edge.iter().enumerate() {
+            for (t, &n) in counts.iter().enumerate() {
+                total += n;
+                if w.edge_home_topics[eid].contains(&t) {
+                    home_hits += n;
+                }
+            }
+        }
+        let share = home_hits as f64 / total as f64;
+        // Home topics are ~25% of topics but should get well above 25% of
+        // traffic under tilt=0.6.
+        assert!(share > 0.4, "home share {share}");
+    }
+
+    #[test]
+    fn temporal_drift_changes_mix() {
+        let (c, w) = wl(4000);
+        // Distribution inside one drift window should over-represent the
+        // window's trend topic.
+        let period = w.spec.drift_period;
+        for window in 0..3 {
+            let trend = w.trends[window];
+            let in_window: Vec<_> = w
+                .events
+                .iter()
+                .filter(|e| e.step / period == window)
+                .collect();
+            let hits = in_window
+                .iter()
+                .filter(|e| c.qa[e.qa_id].topic == trend)
+                .count();
+            let share = hits as f64 / in_window.len().max(1) as f64;
+            assert!(
+                share > 0.2,
+                "window {window}: trend share {share} (expected boost)"
+            );
+        }
+    }
+
+    #[test]
+    fn topic_distribution_sums_to_one() {
+        let (c, w) = wl(100);
+        for edge in 0..w.spec.num_edges {
+            let d = w.topic_distribution(&c, edge, 50);
+            let sum: f64 = d.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "edge {edge} sum {sum}");
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! Cross-module integration tests (no PJRT; virtual-time paths) plus
+//! property-based tests on coordinator/gating/state invariants using the
+//! in-repo `testutil::proptest` harness (offline proptest substitute).
+
+use eaco_rag::cloud::{CloudNode, CloudSpec};
+use eaco_rag::config::{QosPreset, SystemConfig};
+use eaco_rag::coordinator::batcher::{DynamicBatcher, GenRequest};
+use eaco_rag::corpus::{Corpus, Profile};
+use eaco_rag::edge::{best_edge_for, EdgeNode};
+use eaco_rag::gating::safeobo::{Observation, Qos, SafeObo};
+use eaco_rag::gating::{standard_arms, GateContext};
+use eaco_rag::index::KeywordIndex;
+use eaco_rag::sim::{workload_for, KnowledgeMode, SimSystem};
+use eaco_rag::testutil::proptest;
+use eaco_rag::util::rng::Rng;
+use eaco_rag::workload::{Workload, WorkloadSpec};
+
+// ---------------------------------------------------------------------------
+// corpus × graphrag × cloud
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cloud_distribution_improves_edge_overlap() {
+    let corpus = Corpus::generate(Profile::Wiki, 11);
+    let mut cloud = CloudNode::new(&corpus, 2, CloudSpec::default());
+    let mut edge = EdgeNode::new(0, 800);
+
+    // Queries from one topic; before distribution the edge knows nothing.
+    let qas = corpus.qa_by_topic(3);
+    let sample: Vec<usize> = qas.iter().copied().take(25).collect();
+    let kws_of = |qa: usize| -> Vec<&str> { corpus.qa_keywords(&corpus.qa[qa]) };
+    let before: f64 = sample
+        .iter()
+        .map(|&q| edge.overlap_ratio(&kws_of(q)))
+        .sum::<f64>()
+        / sample.len() as f64;
+
+    let plan = cloud.plan_update(&corpus, 0, &sample);
+    edge.apply_update(&corpus, &plan.chunks);
+
+    let after: f64 = sample
+        .iter()
+        .map(|&q| edge.overlap_ratio(&kws_of(q)))
+        .sum::<f64>()
+        / sample.len() as f64;
+    assert!(before < 0.2, "before {before}");
+    assert!(after > 0.8, "after {after}");
+}
+
+#[test]
+fn full_sim_pipeline_all_arms_work() {
+    let cfg = SystemConfig {
+        dataset: Profile::HarryPotter,
+        edge_capacity: 500,
+        ..SystemConfig::default()
+    };
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Adaptive);
+    let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 50), cfg.seed);
+    for arm in standard_arms() {
+        for ev in wl.events.iter().take(10) {
+            let (outcome, _) = sys.serve(ev.qa_id, ev.edge_id, ev.step, arm);
+            assert!(outcome.delay_s > 0.0);
+            assert!(outcome.resource_cost > 0.0);
+            assert!(outcome.tokens.output > 0.0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// property tests (proptest substitute)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_never_loses_or_duplicates_requests() {
+    proptest(100, |rng| {
+        let max_batch = 1 + rng.below(8);
+        let mut b = DynamicBatcher::new(max_batch, 50.0);
+        let n = 1 + rng.below(60);
+        let tiers = ["a", "b", "c"];
+        let mut seen: Vec<usize> = Vec::new();
+        let mut now = 0.0;
+        for id in 0..n {
+            now += rng.f64() * 30.0;
+            let tier = tiers[rng.below(3)];
+            if let Some(batch) = b.push(GenRequest {
+                request_id: id,
+                tier: tier.into(),
+                prompt: String::new(),
+                max_new: 1,
+                enqueued_ms: now,
+            }) {
+                assert!(batch.requests.len() <= max_batch);
+                seen.extend(batch.requests.iter().map(|r| r.request_id));
+            }
+            for batch in b.poll_deadline(now) {
+                seen.extend(batch.requests.iter().map(|r| r.request_id));
+            }
+        }
+        for batch in b.drain() {
+            assert!(batch.requests.len() <= max_batch);
+            seen.extend(batch.requests.iter().map(|r| r.request_id));
+        }
+        seen.sort_unstable();
+        let expect: Vec<usize> = (0..n).collect();
+        assert_eq!(seen, expect, "requests lost or duplicated");
+    });
+}
+
+#[test]
+fn prop_edge_store_capacity_and_index_consistency() {
+    let corpus = Corpus::generate(Profile::Wiki, 3);
+    proptest(60, |rng| {
+        let cap = 1 + rng.below(120);
+        let mut edge = EdgeNode::new(0, cap);
+        for _ in 0..rng.below(30) {
+            let k = 1 + rng.below(40);
+            let chunks: Vec<usize> =
+                (0..k).map(|_| rng.below(corpus.chunks.len())).collect();
+            edge.apply_update(&corpus, &chunks);
+            // Invariant 1: capacity never exceeded.
+            assert!(edge.len() <= cap, "len {} > cap {cap}", edge.len());
+            // Invariant 2: index and FIFO agree.
+            assert_eq!(edge.resident_chunks().count(), edge.index.len());
+            for c in edge.resident_chunks() {
+                assert!(edge.contains(c));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_overlap_ratio_bounds_and_monotonicity() {
+    let corpus = Corpus::generate(Profile::HarryPotter, 5);
+    proptest(60, |rng| {
+        let mut ix = KeywordIndex::new();
+        let mut edge_chunks: Vec<usize> = Vec::new();
+        for _ in 0..rng.below(50) {
+            let c = rng.below(corpus.chunks.len());
+            ix.add_chunk(c, &corpus.chunks[c].keywords);
+            edge_chunks.push(c);
+        }
+        let qa = &corpus.qa[rng.below(corpus.qa.len())];
+        let kws = corpus.qa_keywords(qa);
+        let r = ix.overlap_ratio(&kws);
+        assert!((0.0..=1.0).contains(&r), "ratio {r}");
+        // Adding the supporting chunks can only increase the ratio.
+        for &c in &qa.supporting_chunks {
+            ix.add_chunk(c, &corpus.chunks[c].keywords);
+        }
+        let r2 = ix.overlap_ratio(&kws);
+        assert!(r2 + 1e-12 >= r, "{r2} < {r}");
+        assert!(r2 > 0.99, "support present ⇒ full overlap, got {r2}");
+    });
+}
+
+#[test]
+fn prop_best_edge_returns_max_overlap() {
+    let corpus = Corpus::generate(Profile::Wiki, 7);
+    proptest(40, |rng| {
+        let n_edges = 2 + rng.below(4);
+        let mut edges: Vec<EdgeNode> = (0..n_edges)
+            .map(|i| EdgeNode::new(i, 200))
+            .collect();
+        for e in edges.iter_mut() {
+            let k = rng.below(80);
+            let chunks: Vec<usize> =
+                (0..k).map(|_| rng.below(corpus.chunks.len())).collect();
+            e.apply_update(&corpus, &chunks);
+        }
+        let qa = &corpus.qa[rng.below(corpus.qa.len())];
+        let kws = corpus.qa_keywords(qa);
+        let local = rng.below(n_edges);
+        let (best, ratio) = best_edge_for(&edges, local, &kws);
+        for e in &edges {
+            assert!(
+                e.overlap_ratio(&kws) <= ratio + 1e-12,
+                "edge {} beats chosen best",
+                e.id
+            );
+        }
+        assert!(best < n_edges);
+    });
+}
+
+#[test]
+fn prop_gate_always_returns_valid_arm_and_safe_set() {
+    proptest(20, |rng| {
+        let arms = standard_arms();
+        let n = arms.len();
+        let mut gate = SafeObo::new(
+            arms,
+            Qos {
+                min_accuracy: 0.5 + rng.f64() * 0.4,
+                max_delay_s: 0.5 + rng.f64() * 4.0,
+            },
+            rng.below(40),
+            0.25 + rng.f64(),
+            rng.next_u64(),
+        );
+        for step in 0..80 {
+            let ctx = GateContext {
+                cloud_delay_ms: 200.0 + rng.f64() * 300.0,
+                edge_delay_ms: 10.0 + rng.f64() * 30.0,
+                best_overlap: rng.f64(),
+                best_edge_is_local: rng.chance(0.5),
+                local_overlap: rng.f64(),
+                hops: 1 + rng.below(3),
+                length_tokens: 5 + rng.below(30),
+                entity_count: 2 + rng.below(5),
+            };
+            let d = gate.decide(&ctx);
+            // Invariants: arm valid; safe set nonempty; decision ∈ safe
+            // set (post-warm-up); seed-safe arm always present.
+            assert!(d.arm_idx < n);
+            assert!(!d.safe_set.is_empty());
+            if !d.explored {
+                assert!(d.safe_set.contains(&d.arm_idx));
+                assert!(d.safe_set.contains(&(n - 1)));
+            }
+            gate.observe(
+                &ctx,
+                d.arm_idx,
+                Observation {
+                    resource_cost: rng.f64() * 1000.0,
+                    delay_cost: rng.f64() * 10.0,
+                    accuracy: if rng.chance(0.7) { 1.0 } else { 0.0 },
+                    delay_s: rng.f64() * 4.0,
+                },
+            );
+            let _ = step;
+        }
+    });
+}
+
+#[test]
+fn prop_workload_events_well_formed() {
+    proptest(30, |rng| {
+        let corpus = Corpus::generate(
+            if rng.chance(0.5) {
+                Profile::Wiki
+            } else {
+                Profile::HarryPotter
+            },
+            rng.next_u64(),
+        );
+        let spec = WorkloadSpec {
+            num_edges: 1 + rng.below(8),
+            steps: 1 + rng.below(300),
+            drift_period: 1 + rng.below(200),
+            trend_share: rng.f64() * 0.8,
+            spatial_tilt: rng.f64(),
+            mean_gap_ms: 1.0 + rng.f64() * 300.0,
+        };
+        let wl = Workload::generate(&corpus, spec.clone(), rng.next_u64());
+        assert_eq!(wl.events.len(), spec.steps);
+        for ev in &wl.events {
+            assert!(ev.edge_id < spec.num_edges);
+            assert!(ev.qa_id < corpus.qa.len());
+            assert!(ev.gap_ms >= 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_sim_serve_accounting_invariants() {
+    let cfg = SystemConfig {
+        edge_capacity: 300,
+        ..SystemConfig::default()
+    };
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Adaptive);
+    let arms = standard_arms();
+    proptest(60, |rng| {
+        let qa_id = rng.below(sys.corpus.qa.len());
+        let edge = rng.below(cfg.num_edges);
+        let step = rng.below(2000);
+        let arm = arms[rng.below(arms.len())];
+        let (o, _) = sys.serve(qa_id, edge, step, arm);
+        // Cost must decompose per Eq. (1) with δ₁ = δ₂ = 1.
+        assert!((o.total_cost - (o.resource_cost + o.delay_cost)).abs() < 1e-9);
+        // Delay contains at least the user-edge hop.
+        assert!(o.delay_s > 0.0);
+        // Token accounting is consistent with the retrieved context.
+        if o.retrieved.is_empty() {
+            assert!(o.tokens.input < 80.0, "no context ⇒ small input");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// QoS preset behaviour
+// ---------------------------------------------------------------------------
+
+#[test]
+fn delay_oriented_run_is_faster_than_cost_oriented() {
+    let mk = |qos| {
+        let cfg = SystemConfig {
+            qos,
+            ..SystemConfig::default()
+        };
+        let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Adaptive);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 1000), cfg.seed);
+        sys.run_eaco(&wl).0
+    };
+    let cost_run = mk(QosPreset::CostEfficient);
+    let delay_run = mk(QosPreset::DelayOriented);
+    assert!(
+        delay_run.delay.mean() <= cost_run.delay.mean() + 0.05,
+        "delay-oriented {:.2}s vs cost {:.2}s",
+        delay_run.delay.mean(),
+        cost_run.delay.mean()
+    );
+    assert!(
+        cost_run.resource_cost.mean() <= delay_run.resource_cost.mean() * 1.05,
+        "cost-oriented should be cheaper: {:.1} vs {:.1}",
+        cost_run.resource_cost.mean(),
+        delay_run.resource_cost.mean()
+    );
+}

@@ -1,0 +1,134 @@
+//! End-to-end pipeline test over the REAL stack: coordinator + dynamic
+//! batcher + PJRT executor + oracle + adaptive updates. Requires
+//! `make artifacts` (skips loudly otherwise).
+
+use std::path::PathBuf;
+
+use eaco_rag::config::{QosPreset, SystemConfig};
+use eaco_rag::coordinator::Coordinator;
+use eaco_rag::corpus::Profile;
+use eaco_rag::sim::workload_for;
+use eaco_rag::workload::Workload;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn small_cfg() -> SystemConfig {
+    SystemConfig {
+        dataset: Profile::Wiki,
+        warmup_steps: 30,
+        edge_capacity: 400,
+        ..SystemConfig::default()
+    }
+}
+
+#[test]
+fn serves_every_request_exactly_once() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = small_cfg();
+    let mut coord = Coordinator::new(cfg.clone(), &dir, 2).unwrap();
+    let wl = Workload::generate(&coord.sim.corpus, workload_for(&cfg, 90), cfg.seed);
+    let served = coord.run(&wl).unwrap();
+    assert_eq!(served, 90);
+    // Every request id exactly once.
+    let mut ids: Vec<usize> = coord.metrics.records.iter().map(|r| r.request_id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..90).collect::<Vec<_>>());
+}
+
+#[test]
+fn real_execution_time_recorded_and_batched() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = small_cfg();
+    let mut coord = Coordinator::new(cfg.clone(), &dir, 2).unwrap();
+    let wl = Workload::generate(&coord.sim.corpus, workload_for(&cfg, 64), cfg.seed);
+    coord.run(&wl).unwrap();
+    // Real PJRT time must be nonzero for every record.
+    for r in &coord.metrics.records {
+        assert!(r.real_exec_s > 0.0, "request {} has no real exec time", r.request_id);
+        assert!(r.batch_size >= 1 && r.batch_size <= 8);
+    }
+    // Batching must actually group requests.
+    assert!(
+        coord.batcher.mean_batch_size() > 1.0,
+        "mean batch size {:.2}",
+        coord.batcher.mean_batch_size()
+    );
+}
+
+#[test]
+fn adaptive_updates_flow_during_serving() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = small_cfg();
+    let mut coord = Coordinator::new(cfg.clone(), &dir, 2).unwrap();
+    let wl = Workload::generate(&coord.sim.corpus, workload_for(&cfg, 120), cfg.seed);
+    coord.run(&wl).unwrap();
+    assert!(
+        coord.sim.cloud.updates_sent > 0,
+        "cloud never distributed knowledge"
+    );
+    let resident: usize = coord.sim.edges.iter().map(|e| e.len()).sum();
+    assert!(resident > 0);
+}
+
+#[test]
+fn gate_uses_both_tiers_under_real_serving() {
+    let Some(dir) = artifacts() else { return };
+    let mut cfg = small_cfg();
+    cfg.warmup_steps = 40;
+    let mut coord = Coordinator::new(cfg.clone(), &dir, 2).unwrap();
+    let wl = Workload::generate(&coord.sim.corpus, workload_for(&cfg, 150), cfg.seed);
+    coord.run(&wl).unwrap();
+    let hist = coord.metrics.arm_histogram();
+    assert!(hist.len() >= 2, "gate collapsed: {hist:?}");
+}
+
+#[test]
+fn deterministic_decisions_across_runs() {
+    let Some(dir) = artifacts() else { return };
+    let run = || {
+        let cfg = small_cfg();
+        let mut coord = Coordinator::new(cfg.clone(), &dir, 2).unwrap();
+        let wl = Workload::generate(&coord.sim.corpus, workload_for(&cfg, 60), cfg.seed);
+        coord.run(&wl).unwrap();
+        let mut recs: Vec<(usize, String, bool)> = coord
+            .metrics
+            .records
+            .iter()
+            .map(|r| (r.request_id, r.arm.clone(), r.correct))
+            .collect();
+        recs.sort_by_key(|r| r.0);
+        recs
+    };
+    assert_eq!(run(), run(), "serving decisions must be deterministic");
+}
+
+#[test]
+fn delay_oriented_qos_respected_in_real_pipeline() {
+    let Some(dir) = artifacts() else { return };
+    let mut cfg = small_cfg();
+    cfg.qos = QosPreset::DelayOriented;
+    cfg.warmup_steps = 60;
+    let mut coord = Coordinator::new(cfg.clone(), &dir, 2).unwrap();
+    let wl = Workload::generate(&coord.sim.corpus, workload_for(&cfg, 200), cfg.seed);
+    coord.run(&wl).unwrap();
+    // Post-warm-up virtual delays should mostly respect the 1 s budget
+    // (soft check: p50 under budget + slack).
+    let mut post: Vec<f64> = coord
+        .metrics
+        .records
+        .iter()
+        .filter(|r| r.request_id >= cfg.warmup_steps)
+        .map(|r| r.virtual_delay_s)
+        .collect();
+    post.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = post[post.len() / 2];
+    assert!(p50 < 1.5, "p50 {p50:.2}s under delay-oriented QoS");
+}

@@ -1,0 +1,153 @@
+//! Integration tests for the PJRT runtime: real artifact load, compile,
+//! execute, generate. Requires `make artifacts` (tests skip otherwise,
+//! loudly).
+
+use std::path::PathBuf;
+
+use eaco_rag::runtime::{tokenizer::PAD, FeatureHasher, Runtime, Tokenizer};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn open_runtime_and_list_tiers() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    let tiers = rt.manifest.tiers();
+    for t in ["qwen3b", "qwen72b", "qwen15b"] {
+        assert!(tiers.contains(&t.to_string()), "missing {t}: {tiers:?}");
+    }
+}
+
+#[test]
+fn lm_forward_produces_finite_logits() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    rt.load("slm_qwen15b_b1").unwrap();
+    let entry = rt
+        .manifest
+        .artifacts
+        .iter()
+        .find(|a| a.name == "slm_qwen15b_b1")
+        .unwrap()
+        .clone();
+    let tok = Tokenizer::new(entry.vocab, entry.seq);
+    let tokens = tok.encode("who founded the order");
+    let (logits, timing) = rt.lm_logits("slm_qwen15b_b1", &tokens).unwrap();
+    assert_eq!(logits.len(), entry.vocab);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    assert!(timing.execute_us > 0);
+}
+
+#[test]
+fn lm_forward_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    rt.load("slm_qwen15b_b1").unwrap();
+    let tokens = vec![5i32; 64];
+    let (a, _) = rt.lm_logits("slm_qwen15b_b1", &tokens).unwrap();
+    let (b, _) = rt.lm_logits("slm_qwen15b_b1", &tokens).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn lm_batch_variant_consistent_with_b1() {
+    // The same prompt must produce (nearly) identical logits whether it
+    // runs through the b1 or b4 artifact — weights are shared.
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    rt.load("slm_qwen15b_b1").unwrap();
+    rt.load("slm_qwen15b_b4").unwrap();
+    let tok = Tokenizer::new(512, 64);
+    let row = tok.encode("alpha beta gamma");
+    let (l1, _) = rt.lm_logits("slm_qwen15b_b1", &row).unwrap();
+    let mut batch = Vec::new();
+    for _ in 0..4 {
+        batch.extend(row.iter().copied());
+    }
+    let (l4, _) = rt.lm_logits("slm_qwen15b_b4", &batch).unwrap();
+    for i in 0..l1.len() {
+        assert!(
+            (l1[i] - l4[i]).abs() < 1e-3,
+            "logit {i}: {} vs {}",
+            l1[i],
+            l4[i]
+        );
+    }
+    // All four batch rows identical.
+    for r in 1..4 {
+        for i in 0..l1.len() {
+            assert!((l4[i] - l4[r * l1.len() + i]).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn rejects_bad_token_shape() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    rt.load("slm_qwen15b_b1").unwrap();
+    assert!(rt.lm_logits("slm_qwen15b_b1", &vec![0i32; 17]).is_err());
+    assert!(rt.lm_logits("never_loaded", &vec![0i32; 64]).is_err());
+}
+
+#[test]
+fn generate_greedy_tokens() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let (gen, timing) = rt
+        .generate("qwen15b", &["who rules the kingdom".to_string()], 4)
+        .unwrap();
+    assert_eq!(gen.len(), 1);
+    assert_eq!(gen[0].len(), 4);
+    assert!(gen[0].iter().all(|&t| t >= 0 && t != PAD));
+    assert!(timing.execute_us > 0);
+    // Deterministic.
+    let (gen2, _) = rt
+        .generate("qwen15b", &["who rules the kingdom".to_string()], 4)
+        .unwrap();
+    assert_eq!(gen, gen2);
+}
+
+#[test]
+fn generate_batched_prompts() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let prompts: Vec<String> = (0..3).map(|i| format!("question number {i}")).collect();
+    let (gen, _) = rt.generate("qwen15b", &prompts, 3).unwrap();
+    assert_eq!(gen.len(), 3);
+    // Different prompts should (generally) diverge somewhere.
+    assert!(gen[0] != gen[1] || gen[1] != gen[2], "all outputs identical");
+}
+
+#[test]
+fn embedder_unit_norm_and_similarity() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    rt.load("embedder_b8").unwrap();
+    let h = FeatureHasher::new(256);
+    let rows = vec![
+        h.features("alohomora unlocking spell"),
+        h.features("alohomora spell door"),
+        h.features("quidditch world cup"),
+    ];
+    let vecs = rt.embed("embedder_b8", &rows).unwrap();
+    assert_eq!(vecs.len(), 3);
+    for v in &vecs {
+        assert_eq!(v.len(), 64);
+        let n: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((n - 1.0).abs() < 1e-3, "norm {n}");
+    }
+    let dot = |a: &[f32], b: &[f32]| a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>();
+    let close = dot(&vecs[0], &vecs[1]);
+    let far = dot(&vecs[0], &vecs[2]);
+    assert!(close > far, "close {close} <= far {far}");
+}
