@@ -1,0 +1,28 @@
+# EACO-RAG workspace drivers.
+#
+# The Rust workspace lives under rust/ (vendored offline deps under
+# rust/vendor/); the JAX/Pallas AOT compiler under python/compile/.
+
+CARGO ?= cargo
+
+.PHONY: build test bench-json artifacts
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# Machine-readable perf trajectory: runs the hot-path bench in release
+# mode and writes BENCH_PR1.json at the repo root — an array of
+# {"bench", "iters", "mean_ns", "p50_ns", "p99_ns", "min_ns",
+#  "throughput_per_s"[, "gbps"]} records (see util::stats::BenchResult
+# ::to_json). EACO_BENCH_OUT overrides the output path;
+# EACO_BENCH_FULL=1 adds the slow scenarios (10k-observation GP window).
+bench-json:
+	$(CARGO) bench --bench perf_hotpath
+
+# AOT-compile the L2 model artifacts into rust/artifacts/ (requires the
+# python-side JAX toolchain; PJRT tests/benches skip without this).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts

@@ -1,14 +1,23 @@
 //! **§Perf** — hot-path micro-benchmarks for the L3 coordinator plus the
 //! real PJRT execution path (criterion substitute; see DESIGN.md §7).
 //!
-//! Measured here and tracked in EXPERIMENTS.md §Perf:
+//! Measured here, tracked in EXPERIMENTS.md §Perf, and **emitted as a
+//! machine-readable trajectory file** (`BENCH_PR1.json` at the repo
+//! root — see `make bench-json`) so every future PR has a baseline to
+//! beat:
 //!   * gate decision latency vs GP observation count (target ≪ 1 ms)
-//!   * GP posterior update (incremental Cholesky extend)
+//!   * GP posterior update (incremental Cholesky extend) and predict at
+//!     large observation windows (2k default; 10k with EACO_BENCH_FULL=1)
 //!   * edge keyword retrieval + overlap scan
-//!   * vector-store top-k scan rate
+//!   * vector-store top-k at 2k / 100k / 1M × 64-dim rows — heap scan
+//!     (auto-sharded at ≥16k rows), serial scan, and the pre-PR
+//!     full-sort reference, with effective GB/s
 //!   * dynamic batcher push/flush throughput
 //!   * PJRT LM forward (b1 vs b8 — batching amortization) and embedder
 //!     (skipped with a notice if artifacts/ is absent)
+//!
+//! Env knobs: `EACO_BENCH_OUT` overrides the JSON output path;
+//! `EACO_BENCH_FULL=1` adds the slow scenarios (10k GP window).
 
 use std::path::PathBuf;
 
@@ -16,11 +25,14 @@ use eaco_rag::config::SystemConfig;
 use eaco_rag::corpus::{Corpus, Profile};
 use eaco_rag::coordinator::batcher::{DynamicBatcher, GenRequest};
 use eaco_rag::edge::EdgeNode;
+use eaco_rag::gating::gp::{Gp, GpScratch, Kernel};
 use eaco_rag::gating::safeobo::{Observation, Qos, SafeObo};
 use eaco_rag::gating::{standard_arms, GateContext};
 use eaco_rag::runtime::{FeatureHasher, Runtime, Tokenizer};
+use eaco_rag::testutil::artifacts_dir;
+use eaco_rag::util::json::Json;
 use eaco_rag::util::rng::Rng;
-use eaco_rag::util::stats::bench;
+use eaco_rag::util::stats::{bench, BenchResult};
 use eaco_rag::vecstore::VecStore;
 
 fn ctx(rng: &mut Rng) -> GateContext {
@@ -36,8 +48,132 @@ fn ctx(rng: &mut Rng) -> GateContext {
     }
 }
 
+/// Collects results for the trajectory file while echoing the human
+/// table to stdout.
+struct Report {
+    entries: Vec<Json>,
+}
+
+impl Report {
+    fn new() -> Report {
+        Report { entries: Vec::new() }
+    }
+
+    fn push(&mut self, r: &BenchResult) {
+        println!("{r}");
+        self.entries.push(r.to_json());
+    }
+
+    /// Record a scan-rate entry: same schema plus `"gbps"`.
+    fn push_scan(&mut self, r: &BenchResult, bytes_per_iter: f64) {
+        println!("{r}");
+        let gbps = bytes_per_iter / r.mean_ns; // bytes/ns == GB/s
+        println!("  -> effective scan rate {gbps:.2} GB/s");
+        let mut j = r.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("gbps".to_string(), Json::Num(gbps));
+        }
+        self.entries.push(j);
+    }
+
+    fn write(&self) {
+        let out = std::env::var_os("EACO_BENCH_OUT")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| {
+                // rust/ → repo root.
+                PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                    .parent()
+                    .expect("manifest dir has a parent")
+                    .join("BENCH_PR1.json")
+            });
+        let doc = Json::Arr(self.entries.clone());
+        match std::fs::write(&out, doc.to_string() + "\n") {
+            Ok(()) => println!("\nwrote {} ({} entries)", out.display(), self.entries.len()),
+            Err(e) => eprintln!("\nWARNING: could not write {}: {e}", out.display()),
+        }
+    }
+}
+
+fn random_store(rows: usize, dim: usize, rng: &mut Rng) -> VecStore {
+    let mut vs = VecStore::with_capacity(dim, rows);
+    let mut v = vec![0.0f32; dim];
+    for i in 0..rows {
+        for x in v.iter_mut() {
+            *x = rng.normal() as f32;
+        }
+        vs.insert(i, &v);
+    }
+    vs
+}
+
+fn bench_vecstore(report: &mut Report, rows: usize, iters: usize, fullsort_iters: usize) {
+    let dim = 64;
+    let mut rng = Rng::new(6 + rows as u64);
+    let vs = random_store(rows, dim, &mut rng);
+    let q: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+    let bytes = (rows * dim * 4) as f64;
+    let label = if rows >= 1_000_000 {
+        format!("{}m", rows / 1_000_000)
+    } else {
+        format!("{}k", rows / 1000)
+    };
+
+    let r = bench(&format!("vecstore.top_k8 {label}x64"), iters, || {
+        std::hint::black_box(vs.top_k(&q, 8));
+    });
+    report.push_scan(&r, bytes);
+
+    let r = bench(&format!("vecstore.top_k8_serial {label}x64"), iters, || {
+        std::hint::black_box(vs.top_k_serial(&q, 8));
+    });
+    report.push_scan(&r, bytes);
+
+    let r = bench(
+        &format!("vecstore.top_k8_fullsort {label}x64"),
+        fullsort_iters,
+        || {
+            std::hint::black_box(vs.top_k_fullsort(&q, 8));
+        },
+    );
+    report.push_scan(&r, bytes);
+
+    let r = bench(&format!("vecstore.above_threshold {label}x64"), iters, || {
+        std::hint::black_box(vs.above_threshold(&q, 0.5));
+    });
+    report.push_scan(&r, bytes);
+}
+
+/// Build a GP with `n` observations over a 4-d feature space, then
+/// bench predict (shared scratch) and steady-state observe.
+fn bench_gp_window(report: &mut Report, n: usize, predict_iters: usize) {
+    let mut gp = Gp::new(
+        Kernel {
+            sf2: 0.5,
+            length_scale: 0.7,
+            noise: 0.05,
+        },
+        0.0,
+        n,
+    );
+    let mut rng = Rng::new(40 + n as u64);
+    // Fill to just under the window so observe below doesn't trim.
+    for _ in 0..n - 1 {
+        let x = vec![rng.f64(), rng.f64(), rng.f64(), rng.f64()];
+        let y = x[0] - x[1] + 0.1 * rng.normal();
+        gp.observe(x, y);
+    }
+    let mut scratch = GpScratch::default();
+    let probe = vec![0.4, 0.6, 0.2, 0.8];
+    let r = bench(&format!("gp.predict @ {n} window"), predict_iters, || {
+        std::hint::black_box(gp.predict_with(&probe, &mut scratch));
+    });
+    report.push(&r);
+}
+
 fn main() {
     println!("\n=== §Perf hot-path benchmarks ===\n");
+    let full = std::env::var("EACO_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let mut report = Report::new();
 
     // --- gate decision latency vs observation count ---
     for n_obs in [100usize, 300, 500] {
@@ -68,7 +204,7 @@ fn main() {
             let c = ctx(&mut rng2);
             std::hint::black_box(gate.decide(&c));
         });
-        println!("{r}");
+        report.push(&r);
     }
 
     // --- GP posterior update (incremental) ---
@@ -95,7 +231,15 @@ fn main() {
                 },
             );
         });
-        println!("{r}");
+        report.push(&r);
+    }
+
+    // --- GP predict at large observation windows ---
+    bench_gp_window(&mut report, 2000, 100);
+    if full {
+        bench_gp_window(&mut report, 10_000, 10);
+    } else {
+        println!("(EACO_BENCH_FULL=1 adds the 10k-window GP scenario)");
     }
 
     // --- edge retrieval ---
@@ -112,34 +256,19 @@ fn main() {
             let kws = corpus.qa_keywords(qa);
             std::hint::black_box(edge.retrieve(&kws, 6));
         });
-        println!("{r}");
+        report.push(&r);
         let r = bench("edge.overlap_ratio", 2000, || {
             let qa = qas[rng.below(qas.len())];
             let kws = corpus.qa_keywords(qa);
             std::hint::black_box(edge.overlap_ratio(&kws));
         });
-        println!("{r}");
+        report.push(&r);
     }
 
-    // --- vector store scan ---
-    {
-        let mut vs = VecStore::new(64);
-        let mut rng = Rng::new(6);
-        for i in 0..2000 {
-            let v: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
-            vs.insert(i, &v);
-        }
-        let q: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
-        let r = bench("vecstore.top_k(8) over 2000×64", 500, || {
-            std::hint::black_box(vs.top_k(&q, 8));
-        });
-        println!("{r}");
-        let bytes = 2000.0 * 64.0 * 4.0;
-        println!(
-            "  -> effective scan rate {:.2} GB/s",
-            bytes / r.mean_ns
-        );
-    }
+    // --- vector store scans: paper-prototype scale and beyond ---
+    bench_vecstore(&mut report, 2000, 500, 200);
+    bench_vecstore(&mut report, 100_000, 50, 20);
+    bench_vecstore(&mut report, 1_000_000, 10, 5);
 
     // --- batcher throughput ---
     {
@@ -155,47 +284,46 @@ fn main() {
                 enqueued_ms: i as f64,
             }));
         });
-        println!("{r}");
+        report.push(&r);
     }
 
-    // --- real PJRT path ---
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        println!("\n(artifacts/ missing — PJRT section skipped; run `make artifacts`)");
-        return;
+    // --- real PJRT path (gated on artifacts) ---
+    if let Some(dir) = artifacts_dir() {
+        let mut rt = Runtime::open(&dir).expect("runtime");
+        for name in ["slm_qwen3b_b1", "slm_qwen3b_b8", "slm_qwen72b_b8", "embedder_b8"] {
+            rt.load(name).expect(name);
+        }
+        let tok = Tokenizer::new(512, 64);
+        let row = tok.encode("what spell unlocks the door");
+        let r = bench("PJRT lm forward qwen3b b1", 200, || {
+            std::hint::black_box(rt.lm_logits("slm_qwen3b_b1", &row).unwrap());
+        });
+        report.push(&r);
+        let mut batch8 = Vec::new();
+        for _ in 0..8 {
+            batch8.extend(row.iter().copied());
+        }
+        let r8 = bench("PJRT lm forward qwen3b b8", 200, || {
+            std::hint::black_box(rt.lm_logits("slm_qwen3b_b8", &batch8).unwrap());
+        });
+        report.push(&r8);
+        println!(
+            "  -> batching amortization: b8 per-row cost is {:.2}x of b1",
+            r8.mean_ns / 8.0 / r.mean_ns
+        );
+        let r72 = bench("PJRT lm forward qwen72b b8", 100, || {
+            std::hint::black_box(rt.lm_logits("slm_qwen72b_b8", &batch8).unwrap());
+        });
+        report.push(&r72);
+        let h = FeatureHasher::new(256);
+        let feats: Vec<Vec<f32>> = (0..8)
+            .map(|i| h.features(&format!("sample text number {i}")))
+            .collect();
+        let re = bench("PJRT embedder b8", 200, || {
+            std::hint::black_box(rt.embed("embedder_b8", &feats).unwrap());
+        });
+        report.push(&re);
     }
-    let mut rt = Runtime::open(&dir).expect("runtime");
-    for name in ["slm_qwen3b_b1", "slm_qwen3b_b8", "slm_qwen72b_b8", "embedder_b8"] {
-        rt.load(name).expect(name);
-    }
-    let tok = Tokenizer::new(512, 64);
-    let row = tok.encode("what spell unlocks the door");
-    let r = bench("PJRT lm forward qwen3b b1", 200, || {
-        std::hint::black_box(rt.lm_logits("slm_qwen3b_b1", &row).unwrap());
-    });
-    println!("{r}");
-    let mut batch8 = Vec::new();
-    for _ in 0..8 {
-        batch8.extend(row.iter().copied());
-    }
-    let r8 = bench("PJRT lm forward qwen3b b8", 200, || {
-        std::hint::black_box(rt.lm_logits("slm_qwen3b_b8", &batch8).unwrap());
-    });
-    println!("{r8}");
-    println!(
-        "  -> batching amortization: b8 per-row cost is {:.2}x of b1",
-        r8.mean_ns / 8.0 / r.mean_ns
-    );
-    let r72 = bench("PJRT lm forward qwen72b b8", 100, || {
-        std::hint::black_box(rt.lm_logits("slm_qwen72b_b8", &batch8).unwrap());
-    });
-    println!("{r72}");
-    let h = FeatureHasher::new(256);
-    let feats: Vec<Vec<f32>> = (0..8)
-        .map(|i| h.features(&format!("sample text number {i}")))
-        .collect();
-    let re = bench("PJRT embedder b8", 200, || {
-        std::hint::black_box(rt.embed("embedder_b8", &feats).unwrap());
-    });
-    println!("{re}");
+
+    report.write();
 }

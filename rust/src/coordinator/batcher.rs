@@ -7,7 +7,7 @@
 //! request has waited longer than `max_wait` virtual milliseconds
 //! (deadline batching, the vLLM-style latency/throughput knob).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 /// A queued generation request.
 #[derive(Clone, Debug)]
@@ -33,6 +33,9 @@ pub struct DynamicBatcher {
     pub max_batch: usize,
     pub max_wait_ms: f64,
     queues: Vec<(String, VecDeque<GenRequest>)>,
+    /// tier name → slot in `queues`; keeps per-request push O(1) in the
+    /// number of tiers (queues are never removed, so slots are stable).
+    tier_index: HashMap<String, usize>,
     pub flushed_batches: usize,
     pub flushed_requests: usize,
 }
@@ -43,17 +46,20 @@ impl DynamicBatcher {
             max_batch: max_batch.max(1),
             max_wait_ms,
             queues: Vec::new(),
+            tier_index: HashMap::new(),
             flushed_batches: 0,
             flushed_requests: 0,
         }
     }
 
     fn queue_mut(&mut self, tier: &str) -> &mut VecDeque<GenRequest> {
-        if let Some(pos) = self.queues.iter().position(|(t, _)| t == tier) {
+        if let Some(&pos) = self.tier_index.get(tier) {
             &mut self.queues[pos].1
         } else {
+            let pos = self.queues.len();
+            self.tier_index.insert(tier.to_string(), pos);
             self.queues.push((tier.to_string(), VecDeque::new()));
-            &mut self.queues.last_mut().unwrap().1
+            &mut self.queues[pos].1
         }
     }
 
@@ -199,6 +205,24 @@ mod tests {
         let batch = b.push(req(9, "t", 0.0)).unwrap();
         let ids: Vec<usize> = batch.requests.iter().map(|r| r.request_id).collect();
         assert_eq!(ids, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn many_tiers_route_to_their_own_queues() {
+        // The HashMap side index must keep tiers isolated and stable as
+        // the tier count grows (push cost is O(1) in #tiers).
+        let mut b = DynamicBatcher::new(2, 100.0);
+        for i in 0..25 {
+            assert!(b.push(req(i, &format!("t{i}"), 0.0)).is_none());
+        }
+        assert_eq!(b.pending(), 25);
+        for i in 0..25 {
+            let f = b.push(req(100 + i, &format!("t{i}"), 0.0)).expect("flush at 2");
+            assert_eq!(f.tier, format!("t{i}"));
+            let ids: Vec<usize> = f.requests.iter().map(|r| r.request_id).collect();
+            assert_eq!(ids, vec![i, 100 + i]);
+        }
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]

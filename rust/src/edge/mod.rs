@@ -10,7 +10,7 @@
 use std::collections::VecDeque;
 
 use crate::corpus::{ChunkId, Corpus};
-use crate::index::KeywordIndex;
+use crate::index::{KeywordIndex, RetrieveScratch};
 
 /// Counters for observability / tests.
 #[derive(Clone, Copy, Debug, Default)]
@@ -30,6 +30,8 @@ pub struct EdgeNode {
     /// Keyword index over resident chunks.
     pub index: KeywordIndex,
     pub stats: EdgeStats,
+    /// Reusable retrieval workspace (allocation-free steady state).
+    scratch: RetrieveScratch,
 }
 
 impl EdgeNode {
@@ -40,6 +42,7 @@ impl EdgeNode {
             fifo: VecDeque::new(),
             index: KeywordIndex::new(),
             stats: EdgeStats::default(),
+            scratch: RetrieveScratch::default(),
         }
     }
 
@@ -88,12 +91,14 @@ impl EdgeNode {
     }
 
     /// Naive local RAG: top-k resident chunks by distinct keyword hits.
+    /// Scoring reuses the node's held workspace — no per-query map/set
+    /// allocation.
     pub fn retrieve(&mut self, query_keywords: &[&str], k: usize) -> Vec<ChunkId> {
         self.stats.retrievals += 1;
         self.index
-            .retrieve(query_keywords, k)
-            .into_iter()
-            .map(|(c, _)| c)
+            .retrieve_with(query_keywords, k, &mut self.scratch)
+            .iter()
+            .map(|&(c, _)| c)
             .collect()
     }
 

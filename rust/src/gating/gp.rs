@@ -43,6 +43,19 @@ impl Kernel {
     }
 }
 
+/// Reusable workspace for posterior queries. One scratch serves any
+/// number of GPs: buffers are cleared (capacity kept) per call, so a
+/// steady-state `predict_with` does zero heap allocation. `SafeObo`
+/// holds a single scratch and threads it through every per-arm GP query
+/// of a decision step.
+#[derive(Clone, Debug, Default)]
+pub struct GpScratch {
+    /// k(x*, X) — kernel column against the training set.
+    kstar: Vec<f64>,
+    /// Forward-substitution vector v = L⁻¹ k*.
+    v: Vec<f64>,
+}
+
 /// A GP posterior over scalar observations.
 pub struct Gp {
     pub kernel: Kernel,
@@ -54,6 +67,11 @@ pub struct Gp {
     alpha: Vec<f64>,
     /// Max observations before the sliding window trims.
     pub max_obs: usize,
+    /// Kernel-column workspace for `observe` (incremental extend).
+    colbuf: Vec<f64>,
+    /// Fallback workspace so the scratch-less `predict` stays
+    /// allocation-free in steady state too.
+    own_scratch: std::cell::RefCell<GpScratch>,
 }
 
 impl Gp {
@@ -66,6 +84,8 @@ impl Gp {
             chol: None,
             alpha: Vec::new(),
             max_obs: max_obs.max(8),
+            colbuf: Vec::new(),
+            own_scratch: std::cell::RefCell::new(GpScratch::default()),
         }
     }
 
@@ -77,7 +97,9 @@ impl Gp {
         self.xs.is_empty()
     }
 
-    /// Add an observation; O(n²) incremental Cholesky growth.
+    /// Add an observation; O(n²) incremental Cholesky growth. Steady
+    /// state allocates only the caller-provided `x` (kernel column,
+    /// substitution vectors, and alpha all reuse held buffers).
     pub fn observe(&mut self, x: Vec<f64>, y: f64) {
         if self.xs.len() >= self.max_obs {
             // Drop the oldest third, rebuild once.
@@ -88,17 +110,17 @@ impl Gp {
         }
         self.xs.push(x);
         self.ys.push(y);
-        match &mut self.chol {
-            Some(ch) => {
-                let n = self.xs.len() - 1;
-                let newx = &self.xs[n];
-                let col: Vec<f64> = (0..n).map(|i| self.kernel.k(&self.xs[i], newx)).collect();
-                let diag = self.kernel.k(newx, newx) + self.kernel.noise;
-                if !ch.extend(&col, diag) {
-                    self.chol = None; // numeric trouble: rebuild below
-                }
+        if let Some(ch) = &mut self.chol {
+            let n = self.xs.len() - 1;
+            let newx = &self.xs[n];
+            self.colbuf.clear();
+            let kernel = self.kernel;
+            self.colbuf
+                .extend(self.xs[..n].iter().map(|xi| kernel.k(xi, newx)));
+            let diag = kernel.k(newx, newx) + kernel.noise;
+            if !ch.extend(&self.colbuf, diag) {
+                self.chol = None; // numeric trouble: rebuild below
             }
-            None => {}
         }
         if self.chol.is_none() {
             self.rebuild();
@@ -129,13 +151,27 @@ impl Gp {
 
     fn refresh_alpha(&mut self) {
         if let Some(ch) = &self.chol {
-            let centered: Vec<f64> = self.ys.iter().map(|y| y - self.prior_mean).collect();
-            self.alpha = ch.solve(&centered);
+            // alpha = K⁻¹ (y − μ₀), solved in place in the alpha buffer.
+            self.alpha.clear();
+            self.alpha
+                .extend(self.ys.iter().map(|y| y - self.prior_mean));
+            ch.solve_in_place(&mut self.alpha);
         }
     }
 
     /// Posterior mean and standard deviation at `x`.
+    ///
+    /// Allocation-free in steady state via an internal workspace; when
+    /// querying several GPs in one decision, prefer [`Gp::predict_with`]
+    /// and share one [`GpScratch`] across all of them.
     pub fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let mut scratch = self.own_scratch.borrow_mut();
+        self.predict_with(x, &mut scratch)
+    }
+
+    /// Posterior mean and standard deviation at `x`, using a
+    /// caller-provided workspace (no allocation once warm).
+    pub fn predict_with(&self, x: &[f64], scratch: &mut GpScratch) -> (f64, f64) {
         let n = self.xs.len();
         let prior_sd = (self.kernel.sf2 + self.kernel.noise).sqrt();
         if n == 0 {
@@ -145,14 +181,35 @@ impl Gp {
             Some(c) => c,
             None => return (self.prior_mean, prior_sd),
         };
-        let kstar: Vec<f64> = (0..n).map(|i| self.kernel.k(&self.xs[i], x)).collect();
-        let mu = self.prior_mean + dot(&kstar, &self.alpha);
-        let v = ch.solve_lower(&kstar);
+        scratch.kstar.clear();
+        scratch
+            .kstar
+            .extend(self.xs.iter().map(|xi| self.kernel.k(xi, x)));
+        let mu = self.prior_mean + dot(&scratch.kstar, &self.alpha);
+        scratch.v.clear();
+        scratch.v.extend_from_slice(&scratch.kstar);
+        ch.solve_lower_in_place(&mut scratch.v);
         // Latent-function variance (no observation noise): repeated
         // observations at the same x genuinely shrink the bound — this is
         // what lets the SafeOBO safe set tighten (Eq. 3).
-        let var = (self.kernel.k(x, x) - dot(&v, &v)).max(1e-12);
+        let var = (self.kernel.k(x, x) - dot(&scratch.v, &scratch.v)).max(1e-12);
         (mu, var.sqrt())
+    }
+
+    /// Batch posterior: predict at every point of `xs`, reusing one
+    /// workspace across the whole batch. Appends to `out` after
+    /// clearing it, so the result buffer is reusable too.
+    pub fn predict_many(
+        &self,
+        xs: &[Vec<f64>],
+        scratch: &mut GpScratch,
+        out: &mut Vec<(f64, f64)>,
+    ) {
+        out.clear();
+        out.reserve(xs.len());
+        for x in xs {
+            out.push(self.predict_with(x, scratch));
+        }
     }
 }
 

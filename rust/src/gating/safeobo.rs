@@ -15,7 +15,7 @@
 //! + cloud LLM) is always admissible, mirroring the paper's assumption
 //! that a known-safe fallback exists.
 
-use super::gp::{Gp, Kernel};
+use super::gp::{Gp, GpScratch, Kernel};
 use super::{Arm, GateContext};
 use crate::util::rng::Rng;
 
@@ -103,6 +103,21 @@ pub struct SafeObo {
     gps: Vec<ArmGps>,
     step: usize,
     rng: Rng,
+    /// Shared GP workspace: one decision queries 3 GPs × |arms| and
+    /// reuses these buffers for every query instead of allocating.
+    scratch: GpScratch,
+    /// Reusable per-decision posterior buffer (taken/restored around
+    /// `decide` so the borrow checker allows `predict_many(&mut self)`).
+    posterior_buf: Vec<ArmPosterior>,
+}
+
+/// Per-arm posterior triple computed by [`SafeObo::predict_many`]:
+/// (μ, σ) for accuracy, delay, and (normalized) cost.
+#[derive(Clone, Copy, Debug)]
+pub struct ArmPosterior {
+    pub acc: (f64, f64),
+    pub delay: (f64, f64),
+    pub cost: (f64, f64),
 }
 
 impl SafeObo {
@@ -123,6 +138,27 @@ impl SafeObo {
             gps: (0..num_arms).map(|_| ArmGps::new(window)).collect(),
             step: 0,
             rng: Rng::new(seed).fork("safeobo"),
+            scratch: GpScratch::default(),
+            posterior_buf: Vec::new(),
+        }
+    }
+
+    /// Batch posterior over all arms for one context: every GP query in
+    /// the decision shares the gate's single workspace, so a full
+    /// decision performs no per-arm allocation. Appends into `out`
+    /// (cleared first) so the caller can reuse its buffer as well.
+    pub fn predict_many(&mut self, ctx: &GateContext, out: &mut Vec<ArmPosterior>) {
+        let za = ctx.acc_features();
+        let zd = ctx.delay_features();
+        let zc = ctx.cost_features();
+        out.clear();
+        out.reserve(self.gps.len());
+        for g in &self.gps {
+            out.push(ArmPosterior {
+                acc: g.acc.predict_with(&za, &mut self.scratch),
+                delay: g.delay.predict_with(&zd, &mut self.scratch),
+                cost: g.cost.predict_with(&zc, &mut self.scratch),
+            });
         }
     }
 
@@ -149,17 +185,17 @@ impl SafeObo {
         }
 
         // Safe-set estimation (Eq. 3, line 17). Each GP family sees its
-        // own low-dimensional feature subspace (see GateContext).
-        let za = ctx.acc_features();
-        let zd = ctx.delay_features();
-        let zc = ctx.cost_features();
+        // own low-dimensional feature subspace (see GateContext); all
+        // 3·n posterior queries share the gate's workspace, and the
+        // posterior list reuses the gate-held buffer across decisions.
+        let mut arm_posteriors = std::mem::take(&mut self.posterior_buf);
+        self.predict_many(ctx, &mut arm_posteriors);
         let mut safe: Vec<usize> = Vec::new();
         let mut posteriors = Vec::with_capacity(n);
-        for a in 0..n {
-            let (mu_acc, sd_acc) = self.gps[a].acc.predict(&za);
-            let (mu_del, sd_del) = self.gps[a].delay.predict(&zd);
-            let (mu_cost, sd_cost) = self.gps[a].cost.predict(&zc);
-            posteriors.push((mu_cost, sd_cost));
+        for (a, p) in arm_posteriors.iter().enumerate() {
+            let (mu_acc, sd_acc) = p.acc;
+            let (mu_del, sd_del) = p.delay;
+            posteriors.push(p.cost);
             let acc_ok = mu_acc - self.beta * sd_acc >= self.qos.min_accuracy;
             let delay_ok = mu_del + self.beta * sd_del <= self.qos.max_delay_s;
             if acc_ok && delay_ok {
@@ -173,6 +209,8 @@ impl SafeObo {
             }
         }
         safe.sort_unstable();
+
+        self.posterior_buf = arm_posteriors;
 
         // Acquisition (Eq. 4, line 19): optimistic cost LCB over S_t.
         let mut best = safe[0];

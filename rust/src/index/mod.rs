@@ -8,6 +8,22 @@
 
 use std::collections::{HashMap, HashSet};
 
+/// Reusable scoring workspace for [`KeywordIndex::retrieve_with`]: the
+/// per-query maps/sets/buffers are cleared (capacity retained) instead
+/// of re-allocated, which keeps the retrieval hot path allocation-free
+/// in steady state. One scratch per caller (e.g. per edge node).
+#[derive(Clone, Debug, Default)]
+pub struct RetrieveScratch {
+    /// chunk id → distinct-keyword hit count.
+    scores: HashMap<usize, usize>,
+    /// normalized query keywords already counted.
+    seen_kw: HashSet<String>,
+    /// ranked (chunk, hits) working buffer.
+    ranked: Vec<(usize, usize)>,
+    /// normalization buffer (avoids a fresh String per keyword).
+    norm_buf: String,
+}
+
 /// Inverted index over an (externally owned) chunk collection.
 #[derive(Clone, Debug, Default)]
 pub struct KeywordIndex {
@@ -65,42 +81,71 @@ impl KeywordIndex {
 
     /// Does any indexed chunk mention this keyword?
     pub fn has_keyword(&self, kw: &str) -> bool {
-        self.postings.contains_key(&normalize(kw))
+        let mut buf = String::new();
+        normalize_into(kw, &mut buf);
+        self.postings.contains_key(buf.as_str())
     }
 
     /// Overlap ratio: |query keywords found in the index| / |query keywords|.
-    /// This is the paper's edge-selection score.
+    /// This is the paper's edge-selection score. One normalization
+    /// buffer serves the whole query (no per-keyword String).
     pub fn overlap_ratio(&self, query_keywords: &[&str]) -> f64 {
         if query_keywords.is_empty() {
             return 0.0;
         }
+        let mut buf = String::new();
         let hits = query_keywords
             .iter()
-            .filter(|kw| self.has_keyword(kw))
+            .filter(|kw| {
+                normalize_into(kw, &mut buf);
+                self.postings.contains_key(buf.as_str())
+            })
             .count();
         hits as f64 / query_keywords.len() as f64
     }
 
     /// Retrieve top-k chunks ranked by the number of distinct query
     /// keywords they contain (ties broken by chunk id for determinism).
+    /// Convenience wrapper over [`Self::retrieve_with`] with a one-shot
+    /// workspace; hot callers hold a [`RetrieveScratch`] instead.
     pub fn retrieve(&self, query_keywords: &[&str], k: usize) -> Vec<(usize, usize)> {
-        let mut scores: HashMap<usize, usize> = HashMap::new();
-        let mut seen_kw: HashSet<String> = HashSet::new();
+        let mut scratch = RetrieveScratch::default();
+        self.retrieve_with(query_keywords, k, &mut scratch).to_vec()
+    }
+
+    /// [`Self::retrieve`] against a caller-held workspace: the scoring
+    /// map, dedup set, and ranking buffer are reused across queries, so
+    /// steady-state retrieval does no allocation at all — the ranked
+    /// result is borrowed from the workspace (valid until its next use).
+    pub fn retrieve_with<'s>(
+        &self,
+        query_keywords: &[&str],
+        k: usize,
+        scratch: &'s mut RetrieveScratch,
+    ) -> &'s [(usize, usize)] {
+        scratch.scores.clear();
+        scratch.seen_kw.clear();
         for kw in query_keywords {
-            let norm = normalize(kw);
-            if !seen_kw.insert(norm.clone()) {
+            normalize_into(kw, &mut scratch.norm_buf);
+            if scratch.seen_kw.contains(scratch.norm_buf.as_str()) {
                 continue; // count each distinct keyword once
             }
-            if let Some(chunks) = self.postings.get(&norm) {
+            scratch.seen_kw.insert(scratch.norm_buf.clone());
+            if let Some(chunks) = self.postings.get(scratch.norm_buf.as_str()) {
                 for &c in chunks {
-                    *scores.entry(c).or_insert(0) += 1;
+                    *scratch.scores.entry(c).or_insert(0) += 1;
                 }
             }
         }
-        let mut ranked: Vec<(usize, usize)> = scores.into_iter().collect();
-        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
-        ranked.truncate(k);
-        ranked
+        scratch.ranked.clear();
+        scratch
+            .ranked
+            .extend(scratch.scores.iter().map(|(&c, &s)| (c, s)));
+        scratch
+            .ranked
+            .sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        scratch.ranked.truncate(k);
+        &scratch.ranked
     }
 
     /// All distinct keywords currently indexed.
@@ -111,8 +156,21 @@ impl KeywordIndex {
 
 /// Keyword normalization: lowercase, trim punctuation.
 pub fn normalize(kw: &str) -> String {
-    kw.trim_matches(|c: char| !c.is_alphanumeric() && c != '_')
-        .to_lowercase()
+    let mut out = String::new();
+    normalize_into(kw, &mut out);
+    out
+}
+
+/// [`normalize`] into a reusable buffer (cleared first) — the hot paths
+/// use this to avoid a fresh String per keyword.
+pub fn normalize_into(kw: &str, out: &mut String) {
+    out.clear();
+    let trimmed = kw.trim_matches(|c: char| !c.is_alphanumeric() && c != '_');
+    for c in trimmed.chars() {
+        for lc in c.to_lowercase() {
+            out.push(lc);
+        }
+    }
 }
 
 #[cfg(test)]

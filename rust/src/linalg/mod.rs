@@ -107,13 +107,29 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     }
 }
 
-/// Dot product.
+/// Dot product, 4-lane unrolled. Independent accumulators break the
+/// serial FP dependency chain so the autovectorizer can keep multiple
+/// FMAs in flight; this sits on the GP hot path (`kstar·alpha`, forward
+/// substitution partials) where slices are hundreds to thousands long.
+/// The pairwise reduction differs from a strict sequential sum only in
+/// the last ulps — every consumer tolerates ≤1e-8.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut s = 0.0;
-    for i in 0..a.len() {
-        s += a[i] * b[i];
+    let mut acc = [0.0f64; 4];
+    let chunks_a = a.chunks_exact(4);
+    let chunks_b = b.chunks_exact(4);
+    let rem_a = chunks_a.remainder();
+    let rem_b = chunks_b.remainder();
+    for (ca, cb) in chunks_a.zip(chunks_b) {
+        acc[0] += ca[0] * cb[0];
+        acc[1] += ca[1] * cb[1];
+        acc[2] += ca[2] * cb[2];
+        acc[3] += ca[3] * cb[3];
+    }
+    let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+    for (x, y) in rem_a.iter().zip(rem_b) {
+        s += x * y;
     }
     s
 }
@@ -122,6 +138,9 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
 /// matrix: `A = L Lᵀ`. Returns `None` if A is not (numerically) SPD.
 pub struct Cholesky {
     pub l: Mat,
+    /// Reusable forward-substitution workspace for [`Cholesky::extend`]
+    /// (keeps the per-observation GP update allocation-free).
+    wbuf: Vec<f64>,
 }
 
 impl Cholesky {
@@ -131,10 +150,10 @@ impl Cholesky {
         let mut l = Mat::zeros(n, n);
         for i in 0..n {
             for j in 0..=i {
-                let mut s = a[(i, j)];
-                for k in 0..j {
-                    s -= l[(i, k)] * l[(j, k)];
-                }
+                // Partial sums run through the unrolled `dot` over the
+                // contiguous row prefixes (this is the O(n³) rebuild
+                // path hit on every sliding-window trim).
+                let s = a[(i, j)] - dot(&l.row(i)[..j], &l.row(j)[..j]);
                 if i == j {
                     if s <= 0.0 || !s.is_finite() {
                         return None;
@@ -145,67 +164,103 @@ impl Cholesky {
                 }
             }
         }
-        Some(Cholesky { l })
+        Some(Cholesky { l, wbuf: Vec::new() })
     }
 
     /// Extend an existing factor with one new row/col of A (rank-1 grow):
     /// given L for A_n and the new column `a_new = [A(n+1, 0..n), A(n+1,n+1)]`,
     /// produce L for A_{n+1}. O(n²) instead of O(n³) refactorization —
     /// this is the incremental update the gate uses every serving step.
+    /// The square storage is regrown in place (stride n → n+1) so steady
+    /// state does no fresh matrix allocation once capacity has grown.
     pub fn extend(&mut self, a_col: &[f64], a_diag: f64) -> bool {
         let n = self.l.rows;
         assert_eq!(a_col.len(), n);
-        // Solve L w = a_col (forward substitution).
-        let w = self.solve_lower(a_col);
+        // Solve L w = a_col (forward substitution) into the workspace.
+        let mut w = std::mem::take(&mut self.wbuf);
+        w.clear();
+        w.extend_from_slice(a_col);
+        self.solve_lower_in_place(&mut w);
         let d = a_diag - dot(&w, &w);
         if d <= 0.0 || !d.is_finite() {
+            self.wbuf = w;
             return false;
         }
-        let mut l = Mat::zeros(n + 1, n + 1);
-        for i in 0..n {
-            let src = self.l.row(i);
-            l.row_mut(i)[..=i].copy_from_slice(&src[..=i]);
+        // Re-stride the row-major square storage from n to n+1 in place.
+        // Rows move back-to-front; row i's destination i*(n+1) is at or
+        // beyond its source i*n and strictly beyond every lower row's
+        // source, so copy order never clobbers unread data.
+        let m = n + 1;
+        self.l.data.resize(m * m, 0.0);
+        for i in (1..n).rev() {
+            self.l.data.copy_within(i * n..i * n + i + 1, i * m);
         }
-        l.row_mut(n)[..n].copy_from_slice(&w);
-        l[(n, n)] = d.sqrt();
-        self.l = l;
+        // Clear the (strictly upper) remainder of each widened row.
+        for i in 0..n {
+            for v in &mut self.l.data[i * m + i + 1..(i + 1) * m] {
+                *v = 0.0;
+            }
+        }
+        self.l.data[n * m..n * m + n].copy_from_slice(&w);
+        self.l.data[n * m + n] = d.sqrt();
+        self.l.rows = m;
+        self.l.cols = m;
+        self.wbuf = w;
         true
     }
 
     /// Solve `L y = b` (forward substitution).
     pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let mut y = b.to_vec();
+        self.solve_lower_in_place(&mut y);
+        y
+    }
+
+    /// Forward substitution in place: on entry `x` holds `b`, on exit
+    /// `L x_out = b`. The per-row partial sum uses the unrolled [`dot`]
+    /// over the already-solved prefix — contiguous row-major access.
+    pub fn solve_lower_in_place(&self, x: &mut [f64]) {
         let n = self.l.rows;
-        assert_eq!(b.len(), n);
-        let mut y = vec![0.0; n];
+        assert_eq!(x.len(), n);
         for i in 0..n {
             let row = self.l.row(i);
-            let mut s = b[i];
-            for j in 0..i {
-                s -= row[j] * y[j];
-            }
-            y[i] = s / row[i];
+            let s = x[i] - dot(&row[..i], &x[..i]);
+            x[i] = s / row[i];
         }
-        y
     }
 
     /// Solve `Lᵀ x = y` (backward substitution).
     pub fn solve_upper(&self, y: &[f64]) -> Vec<f64> {
+        let mut x = y.to_vec();
+        self.solve_upper_in_place(&mut x);
+        x
+    }
+
+    /// Backward substitution in place: on entry `x` holds `y`, on exit
+    /// `Lᵀ x_out = y`.
+    pub fn solve_upper_in_place(&self, x: &mut [f64]) {
         let n = self.l.rows;
-        assert_eq!(y.len(), n);
-        let mut x = vec![0.0; n];
+        assert_eq!(x.len(), n);
         for i in (0..n).rev() {
-            let mut s = y[i];
+            let mut s = x[i];
             for j in i + 1..n {
                 s -= self.l[(j, i)] * x[j];
             }
             x[i] = s / self.l[(i, i)];
         }
-        x
     }
 
     /// Solve `A x = b` via the factor.
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
-        self.solve_upper(&self.solve_lower(b))
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+
+    /// Solve `A x = b` in place (forward then backward substitution).
+    pub fn solve_in_place(&self, x: &mut [f64]) {
+        self.solve_lower_in_place(x);
+        self.solve_upper_in_place(x);
     }
 
     /// log|A| = 2·Σ log L_ii.

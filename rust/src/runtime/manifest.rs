@@ -206,18 +206,11 @@ pub fn read_weights(dir: &Path, entry: &ArtifactEntry) -> Result<Vec<Vec<f32>>> 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn artifacts_dir() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
+    use crate::testutil::artifacts_dir;
 
     #[test]
     fn loads_real_manifest_if_built() {
-        let dir = artifacts_dir();
-        if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
+        let Some(dir) = artifacts_dir() else { return };
         let m = Manifest::load(&dir).unwrap();
         assert!(!m.artifacts.is_empty());
         assert!(m.tiers().contains(&"qwen3b".to_string()));
@@ -229,10 +222,7 @@ mod tests {
 
     #[test]
     fn lm_for_picks_smallest_sufficient_batch() {
-        let dir = artifacts_dir();
-        if !dir.join("manifest.json").exists() {
-            return;
-        }
+        let Some(dir) = artifacts_dir() else { return };
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.lm_for("qwen3b", 3).unwrap().batch, 4);
         assert_eq!(m.lm_for("qwen3b", 5).unwrap().batch, 8);
@@ -243,10 +233,7 @@ mod tests {
 
     #[test]
     fn weights_parse_and_match_shapes() {
-        let dir = artifacts_dir();
-        if !dir.join("manifest.json").exists() {
-            return;
-        }
+        let Some(dir) = artifacts_dir() else { return };
         let m = Manifest::load(&dir).unwrap();
         let a = m.lm_for("qwen15b", 1).unwrap();
         let w = read_weights(&dir, a).unwrap();

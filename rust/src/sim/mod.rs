@@ -190,15 +190,11 @@ impl SimSystem {
         step: usize,
         arm: Arm,
     ) -> (Outcome, bool) {
-        let kws_owned: Vec<String> = {
-            let qa = &self.corpus.qa[qa_id];
-            self.corpus
-                .qa_keywords(qa)
-                .into_iter()
-                .map(|s| s.to_string())
-                .collect()
-        };
-        let kws: Vec<&str> = kws_owned.iter().map(|s| s.as_str()).collect();
+        // Borrow keywords straight from the corpus: retrieval mutates
+        // `self.edges`/`self.cloud`/`self.net` only, all disjoint from
+        // `self.corpus`, so the per-query String clone the seed did here
+        // was pure hot-path allocation overhead.
+        let kws: Vec<&str> = self.corpus.qa_keywords(&self.corpus.qa[qa_id]);
 
         // --- retrieval ---
         let (retrieved, context_chars, community, edge_edge_s) = match arm.retrieval {

@@ -11,7 +11,28 @@
 //! });
 //! ```
 
+use std::path::PathBuf;
+
 use crate::util::rng::Rng;
+
+/// Locate the PJRT artifact directory, or `None` (with a loud SKIP
+/// notice) when artifacts haven't been built. Every PJRT-dependent
+/// test/bench gates on this so `cargo test -q` stays green without
+/// `make artifacts`. Override the location with `EACO_ARTIFACTS_DIR`.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var_os("EACO_ARTIFACTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "SKIP: PJRT artifacts not present at {} (run `make artifacts`)",
+            dir.display()
+        );
+        None
+    }
+}
 
 /// Run `prop` over `cases` generated cases. Panics (with seed + case
 /// index) on the first failing case. The base seed is fixed so CI is

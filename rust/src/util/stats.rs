@@ -98,6 +98,23 @@ impl BenchResult {
             1e9 / self.mean_ns
         }
     }
+
+    /// Machine-readable record with the stable BENCH_*.json schema:
+    /// `{"bench", "iters", "mean_ns", "p50_ns", "p99_ns", "min_ns",
+    /// "throughput_per_s"}`. Perf-tracking files (e.g. `BENCH_PR1.json`
+    /// at the repo root) are arrays of these records.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num, obj, s};
+        obj(vec![
+            ("bench", s(&self.name)),
+            ("iters", num(self.iters as f64)),
+            ("mean_ns", num(self.mean_ns)),
+            ("p50_ns", num(self.p50_ns)),
+            ("p99_ns", num(self.p99_ns)),
+            ("min_ns", num(self.min_ns)),
+            ("throughput_per_s", num(self.throughput_per_sec())),
+        ])
+    }
 }
 
 impl std::fmt::Display for BenchResult {
@@ -194,6 +211,19 @@ mod tests {
         });
         assert_eq!(r.iters, 10);
         assert!(r.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn bench_result_json_schema() {
+        let r = bench("noop-json", 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        let j = r.to_json();
+        assert_eq!(j.get("bench").as_str(), Some("noop-json"));
+        assert_eq!(j.get("iters").as_usize(), Some(5));
+        for key in ["mean_ns", "p50_ns", "p99_ns", "min_ns", "throughput_per_s"] {
+            assert!(j.get(key).as_f64().is_some(), "missing {key}");
+        }
     }
 
     #[test]

@@ -8,16 +8,11 @@ use eaco_rag::config::{QosPreset, SystemConfig};
 use eaco_rag::coordinator::Coordinator;
 use eaco_rag::corpus::Profile;
 use eaco_rag::sim::workload_for;
+use eaco_rag::testutil::artifacts_dir;
 use eaco_rag::workload::Workload;
 
 fn artifacts() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
-        None
-    }
+    artifacts_dir()
 }
 
 fn small_cfg() -> SystemConfig {

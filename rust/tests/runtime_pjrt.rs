@@ -5,15 +5,10 @@
 use std::path::PathBuf;
 
 use eaco_rag::runtime::{tokenizer::PAD, FeatureHasher, Runtime, Tokenizer};
+use eaco_rag::testutil::artifacts_dir;
 
 fn artifacts() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
-        None
-    }
+    artifacts_dir()
 }
 
 #[test]

@@ -1,0 +1,147 @@
+//! Minimal offline subset of the `anyhow` crate.
+//!
+//! The offline image has no crates.io access, so this vendored shim
+//! provides exactly the surface the workspace uses: [`Error`],
+//! [`Result`], the [`anyhow!`]/[`bail!`] macros, and the [`Context`]
+//! extension trait for `Result`/`Option`. Errors are a message chain
+//! (context frames prepended), which matches how the codebase consumes
+//! them (`{e}` / `{e:?}` formatting, never downcasting).
+
+use std::fmt;
+
+/// An error: a human-readable message with optional context frames.
+pub struct Error {
+    /// Context frames, most recent first, ending with the root message.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Prepend a context frame (what `Context::context` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+/// Any std error converts into `Error` (enables `?` on io results etc.).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from format args.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format args.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Context extension for results and options.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_chains_context() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading manifest.json".to_string())
+            .unwrap_err();
+        let s = format!("{e}");
+        assert!(s.starts_with("reading manifest.json: "), "{s}");
+        assert!(s.contains("no such file"), "{s}");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 42);
+        assert_eq!(format!("{e}"), "bad value 42");
+        fn f() -> Result<()> {
+            bail!("boom {}", "now")
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "boom now");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn g() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(format!("{}", g().unwrap_err()).contains("no such file"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(format!("{e}"), "missing field");
+    }
+}
