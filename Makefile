@@ -5,7 +5,10 @@
 
 CARGO ?= cargo
 
-.PHONY: build test bench-json artifacts
+# Perf-trajectory output name; bump per PR (BENCH_OUT=BENCH_PR<N>.json).
+BENCH_OUT ?= BENCH_PR2.json
+
+.PHONY: build test ci bench-json artifacts
 
 build:
 	$(CARGO) build --release
@@ -13,14 +16,22 @@ build:
 test:
 	$(CARGO) test -q
 
+# Everything CI runs (see .github/workflows/ci.yml). PJRT-gated tests
+# skip themselves when artifacts/ is absent.
+ci:
+	$(CARGO) fmt --check
+	$(CARGO) clippy --all-targets -- -D warnings
+	$(CARGO) build --release
+	$(CARGO) test -q
+
 # Machine-readable perf trajectory: runs the hot-path bench in release
-# mode and writes BENCH_PR1.json at the repo root — an array of
+# mode and writes $(BENCH_OUT) at the repo root — an array of
 # {"bench", "iters", "mean_ns", "p50_ns", "p99_ns", "min_ns",
 #  "throughput_per_s"[, "gbps"]} records (see util::stats::BenchResult
-# ::to_json). EACO_BENCH_OUT overrides the output path;
+# ::to_json). Compare against the previous BENCH_PR<N-1>.json.
 # EACO_BENCH_FULL=1 adds the slow scenarios (10k-observation GP window).
 bench-json:
-	$(CARGO) bench --bench perf_hotpath
+	EACO_BENCH_OUT=$(abspath $(BENCH_OUT)) $(CARGO) bench --bench perf_hotpath
 
 # AOT-compile the L2 model artifacts into rust/artifacts/ (requires the
 # python-side JAX toolchain; PJRT tests/benches skip without this).

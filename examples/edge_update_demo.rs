@@ -56,8 +56,8 @@ fn main() {
             .map(|s| s.to_string())
             .collect();
         let kws: Vec<&str> = kws_owned.iter().map(|s| s.as_str()).collect();
-        w_overlap.0 += adaptive.edges[ev.edge_id].overlap_ratio(&kws);
-        w_overlap.1 += static_sys.edges[ev.edge_id].overlap_ratio(&kws);
+        w_overlap.0 += adaptive.edges()[ev.edge_id].overlap_ratio(&kws);
+        w_overlap.1 += static_sys.edges()[ev.edge_id].overlap_ratio(&kws);
 
         let (_, c1) = adaptive.serve(ev.qa_id, ev.edge_id, ev.step, arm);
         let (_, c2) = static_sys.serve(ev.qa_id, ev.edge_id, ev.step, arm);
@@ -100,7 +100,7 @@ fn main() {
     );
     println!(
         "cloud pushed {} updates; edge 0 evicted {} chunks (FIFO)",
-        adaptive.cloud.updates_sent, adaptive.edges[0].stats.evicted
+        adaptive.cloud.updates_sent, adaptive.edges()[0].stats.evicted
     );
     println!("\ntakeaway: the FIFO update keeps the store aligned with drifting demand (paper Fig. 1).");
 }

@@ -75,7 +75,7 @@ fn main() -> eaco_rag::Result<()> {
         "adaptive updates:      {} pushes from cloud to edges",
         coord.sim.cloud.updates_sent
     );
-    for e in &coord.sim.edges {
+    for e in coord.sim.edges() {
         println!(
             "  edge {}: {} resident chunks, {} inserted, {} evicted, {} retrievals",
             e.id,

@@ -2,13 +2,16 @@
 //! real PJRT execution path (criterion substitute; see DESIGN.md §7).
 //!
 //! Measured here, tracked in EXPERIMENTS.md §Perf, and **emitted as a
-//! machine-readable trajectory file** (`BENCH_PR1.json` at the repo
-//! root — see `make bench-json`) so every future PR has a baseline to
-//! beat:
+//! machine-readable trajectory file** (`BENCH_PR2.json` at the repo
+//! root — see `make bench-json`, `BENCH_OUT=` to override) so every
+//! future PR has a baseline to beat:
 //!   * gate decision latency vs GP observation count (target ≪ 1 ms)
 //!   * GP posterior update (incremental Cholesky extend) and predict at
 //!     large observation windows (2k default; 10k with EACO_BENCH_FULL=1)
 //!   * edge keyword retrieval + overlap scan
+//!   * cluster summary routing at 4/16/64 edges — bounded-degree and
+//!     full-mesh probes vs the retained `best_edge_for` all-edges
+//!     index broadcast (the committed PR-2 before/after evidence)
 //!   * vector-store top-k at 2k / 100k / 1M × 64-dim rows — heap scan
 //!     (auto-sharded at ≥16k rows), serial scan, and the pre-PR
 //!     full-sort reference, with effective GB/s
@@ -21,10 +24,12 @@
 
 use std::path::PathBuf;
 
-use eaco_rag::config::SystemConfig;
-use eaco_rag::corpus::{Corpus, Profile};
+use eaco_rag::cluster::EdgeCluster;
+use eaco_rag::config::{ClusterConfig, SystemConfig};
+use eaco_rag::corpus::{ChunkId, Corpus, Profile};
 use eaco_rag::coordinator::batcher::{DynamicBatcher, GenRequest};
-use eaco_rag::edge::EdgeNode;
+use eaco_rag::edge::{best_edge_for, EdgeNode};
+use eaco_rag::netsim::{NetSim, NetSpec};
 use eaco_rag::gating::gp::{Gp, GpScratch, Kernel};
 use eaco_rag::gating::safeobo::{Observation, Qos, SafeObo};
 use eaco_rag::gating::{standard_arms, GateContext};
@@ -42,6 +47,7 @@ fn ctx(rng: &mut Rng) -> GateContext {
         best_overlap: rng.f64(),
         best_edge_is_local: rng.chance(0.5),
         local_overlap: rng.f64(),
+        neighbor_overlap: rng.f64(),
         hops: 1 + rng.below(3),
         length_tokens: 8 + rng.below(20),
         entity_count: 2 + rng.below(5),
@@ -84,7 +90,7 @@ impl Report {
                 PathBuf::from(env!("CARGO_MANIFEST_DIR"))
                     .parent()
                     .expect("manifest dir has a parent")
-                    .join("BENCH_PR1.json")
+                    .join("BENCH_PR2.json")
             });
         let doc = Json::Arr(self.entries.clone());
         match std::fs::write(&out, doc.to_string() + "\n") {
@@ -141,6 +147,78 @@ fn bench_vecstore(report: &mut Report, rows: usize, iters: usize, fullsort_iters
         std::hint::black_box(vs.above_threshold(&q, 0.5));
     });
     report.push_scan(&r, bytes);
+}
+
+/// Provision an n-edge cluster (chunks striped round-robin, ~200 per
+/// store) and bench query routing three ways: bounded-degree summary
+/// probes, full-mesh summary probes, and the retained `best_edge_for`
+/// all-edges keyword-index broadcast (the pre-PR2 serving path).
+fn bench_cluster_routing(report: &mut Report, num_edges: usize, iters: usize) {
+    let corpus = Corpus::generate(Profile::Wiki, 3);
+    let net = NetSim::new(num_edges, NetSpec::default(), 9);
+    let ccfg = ClusterConfig::default();
+    let cap = 200;
+    let provision = |cluster: &mut EdgeCluster| {
+        for e in 0..num_edges {
+            let chunks: Vec<ChunkId> = corpus
+                .chunks
+                .iter()
+                .filter(|c| c.id % num_edges == e)
+                .take(cap)
+                .map(|c| c.id)
+                .collect();
+            cluster.nodes[e].apply_update(&corpus, &chunks);
+        }
+    };
+    let mut deg2 = EdgeCluster::new(
+        &ccfg, None, num_edges, cap, corpus.spec.topics, corpus.chunks.len(), &net,
+    );
+    provision(&mut deg2);
+    let mut full = EdgeCluster::new(
+        &ccfg,
+        Some(num_edges - 1),
+        num_edges,
+        cap,
+        corpus.spec.topics,
+        corpus.chunks.len(),
+        &net,
+    );
+    provision(&mut full);
+
+    let qas: Vec<_> = corpus.qa.iter().collect();
+    // One fresh Rng per scenario, same seed: all three replay the
+    // identical query/local-edge sequence, so the before/after ratio
+    // compares like with like.
+    let rng_seed = 12 + num_edges as u64;
+    let mut rng = Rng::new(rng_seed);
+    let deg_name = format!("cluster.route deg{} {num_edges} edges", deg2.topology.degree);
+    let r = bench(&deg_name, iters, || {
+        let qa = qas[rng.below(qas.len())];
+        let kws = corpus.qa_keywords(qa);
+        let local = rng.below(num_edges);
+        std::hint::black_box(deg2.route(local, &kws));
+    });
+    report.push(&r);
+    let mut rng = Rng::new(rng_seed);
+    let r = bench(&format!("cluster.route full-mesh {num_edges} edges"), iters, || {
+        let qa = qas[rng.below(qas.len())];
+        let kws = corpus.qa_keywords(qa);
+        let local = rng.below(num_edges);
+        std::hint::black_box(full.route(local, &kws));
+    });
+    report.push(&r);
+    let mut rng = Rng::new(rng_seed);
+    let r = bench(
+        &format!("cluster.best_edge_for_broadcast_ref {num_edges} edges"),
+        iters,
+        || {
+            let qa = qas[rng.below(qas.len())];
+            let kws = corpus.qa_keywords(qa);
+            let local = rng.below(num_edges);
+            std::hint::black_box(best_edge_for(&full.nodes, local, &kws));
+        },
+    );
+    report.push(&r);
 }
 
 /// Build a GP with `n` observations over a 4-d feature space, then
@@ -264,6 +342,11 @@ fn main() {
         });
         report.push(&r);
     }
+
+    // --- cluster summary routing vs the all-edges index broadcast ---
+    bench_cluster_routing(&mut report, 4, 2000);
+    bench_cluster_routing(&mut report, 16, 1000);
+    bench_cluster_routing(&mut report, 64, 400);
 
     // --- vector store scans: paper-prototype scale and beyond ---
     bench_vecstore(&mut report, 2000, 500, 200);

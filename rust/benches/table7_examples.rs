@@ -71,6 +71,7 @@ fn main() {
         best_overlap: 1.0,
         best_edge_is_local: true,
         local_overlap: 1.0,
+        neighbor_overlap: 0.0,
         hops: 1,
         length_tokens: 15,
         entity_count: 3,
@@ -90,6 +91,7 @@ fn main() {
         best_overlap: 0.25,
         best_edge_is_local: false,
         local_overlap: 0.1,
+        neighbor_overlap: 0.25,
         hops: 3,
         length_tokens: 21,
         entity_count: 4,

@@ -1,0 +1,159 @@
+//! Exponentially-decayed topic/chunk popularity counters.
+//!
+//! The paper's cloud distributor reacts to raw query counts; the cluster
+//! plane wants a *recency-weighted* demand signal so placement can evict
+//! cold-first and gossip can advertise what is hot *now*. Counters decay
+//! with a configurable half-life in virtual-time steps and are updated
+//! lazily (value and last-touched step per cell, decay applied on read)
+//! so the steady state does no allocation and no periodic sweep — the
+//! same discipline as the PR-1 retrieval scratch buffers.
+
+use std::collections::HashMap;
+
+use crate::corpus::{ChunkId, TopicId};
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Cell {
+    value: f64,
+    last_step: usize,
+}
+
+impl Cell {
+    fn decayed(&self, decay_per_step: f64, step: usize) -> f64 {
+        if self.value == 0.0 {
+            return 0.0;
+        }
+        let dt = step.saturating_sub(self.last_step).min(100_000) as i32;
+        self.value * decay_per_step.powi(dt)
+    }
+
+    fn bump(&mut self, decay_per_step: f64, step: usize, weight: f64) {
+        self.value = self.decayed(decay_per_step, step) + weight;
+        self.last_step = step.max(self.last_step);
+    }
+}
+
+/// Per-edge popularity tracker (one per cluster, cells keyed by edge
+/// implicitly via the caller owning one tracker — the sim owns a single
+/// cluster-wide tracker since demand is what placement shares).
+#[derive(Clone, Debug)]
+pub struct HotnessTracker {
+    /// Multiplicative decay per step: 0.5^(1/half_life).
+    decay_per_step: f64,
+    pub half_life_steps: f64,
+    topics: Vec<Cell>,
+    chunks: HashMap<ChunkId, Cell>,
+    /// Total recorded observations (observability).
+    pub observations: u64,
+}
+
+impl HotnessTracker {
+    pub fn new(num_topics: usize, half_life_steps: f64) -> HotnessTracker {
+        let hl = half_life_steps.max(1.0);
+        HotnessTracker {
+            decay_per_step: 0.5f64.powf(1.0 / hl),
+            half_life_steps: hl,
+            topics: vec![Cell::default(); num_topics],
+            chunks: HashMap::new(),
+            observations: 0,
+        }
+    }
+
+    /// Record one query against a topic at `step`.
+    pub fn record_topic(&mut self, topic: TopicId, step: usize) {
+        if let Some(c) = self.topics.get_mut(topic) {
+            c.bump(self.decay_per_step, step, 1.0);
+            self.observations += 1;
+        }
+    }
+
+    /// Record retrieval demand for a chunk at `step`.
+    pub fn record_chunk(&mut self, chunk: ChunkId, step: usize) {
+        self.chunks
+            .entry(chunk)
+            .or_default()
+            .bump(self.decay_per_step, step, 1.0);
+        self.observations += 1;
+    }
+
+    /// Current (decayed) topic popularity.
+    pub fn topic_hotness(&self, topic: TopicId, step: usize) -> f64 {
+        self.topics
+            .get(topic)
+            .map(|c| c.decayed(self.decay_per_step, step))
+            .unwrap_or(0.0)
+    }
+
+    /// Current (decayed) chunk demand; 0 for never-requested chunks.
+    pub fn chunk_hotness(&self, chunk: ChunkId, step: usize) -> f64 {
+        self.chunks
+            .get(&chunk)
+            .map(|c| c.decayed(self.decay_per_step, step))
+            .unwrap_or(0.0)
+    }
+
+    /// Number of chunks with any recorded demand.
+    pub fn tracked_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hotness_accumulates_and_decays() {
+        let mut h = HotnessTracker::new(4, 100.0);
+        for _ in 0..10 {
+            h.record_topic(1, 0);
+        }
+        assert!((h.topic_hotness(1, 0) - 10.0).abs() < 1e-12);
+        // One half-life later: half the mass.
+        let at_hl = h.topic_hotness(1, 100);
+        assert!((at_hl - 5.0).abs() < 1e-9, "at half-life {at_hl}");
+        // Far future: cold.
+        assert!(h.topic_hotness(1, 5000) < 1e-9);
+        // Untouched topic stays exactly zero.
+        assert_eq!(h.topic_hotness(2, 50), 0.0);
+    }
+
+    #[test]
+    fn recency_beats_stale_volume() {
+        let mut h = HotnessTracker::new(1, 50.0);
+        // Chunk 7: heavy traffic long ago. Chunk 8: light traffic now.
+        for _ in 0..20 {
+            h.record_chunk(7, 0);
+        }
+        for _ in 0..3 {
+            h.record_chunk(8, 400);
+        }
+        assert!(h.chunk_hotness(8, 400) > h.chunk_hotness(7, 400));
+        assert_eq!(h.tracked_chunks(), 2);
+    }
+
+    #[test]
+    fn lazy_decay_matches_eager() {
+        let mut a = HotnessTracker::new(1, 80.0);
+        let mut b = HotnessTracker::new(1, 80.0);
+        // a: bumps at steps 0 and 60 read at 90; b: same bumps, extra
+        // interleaved reads (reads must not perturb state).
+        for h in [&mut a, &mut b] {
+            h.record_chunk(0, 0);
+        }
+        let _ = b.chunk_hotness(0, 30);
+        for h in [&mut a, &mut b] {
+            h.record_chunk(0, 60);
+        }
+        let _ = b.chunk_hotness(0, 75);
+        assert!((a.chunk_hotness(0, 90) - b.chunk_hotness(0, 90)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn out_of_range_topic_ignored() {
+        let mut h = HotnessTracker::new(2, 10.0);
+        h.record_topic(99, 0);
+        assert_eq!(h.observations, 0);
+        assert_eq!(h.topic_hotness(99, 0), 0.0);
+    }
+}

@@ -1,0 +1,463 @@
+//! Pluggable chunk placement: the paper's FIFO baseline + hotness-aware
+//! eviction, with versioned chunks so staleness is observable.
+//!
+//! The seed repo hard-wired the §5 FIFO policy into the edge store. The
+//! placement engine keeps that policy available — and bit-identical to
+//! the seed, see `tests/cluster_equivalence.rs` — while adding
+//! `HotnessLru`, which evicts the *coldest* resident (by the decayed
+//! demand counters in [`super::hotness`]) and pins in-flight gossip
+//! replicas so a chunk cannot be evicted in the same breath it was
+//! replicated. Every admitted chunk carries a version from the cloud's
+//! [`super::replicate::VersionAuthority`]; a resident copy older than
+//! the authority's latest is *stale*, and [`PlacementEngine::staleness`]
+//! counts exactly that.
+
+use std::collections::HashMap;
+
+use crate::corpus::{ChunkId, Corpus};
+use crate::edge::EdgeNode;
+
+use super::hotness::HotnessTracker;
+use super::replicate::VersionAuthority;
+
+/// Eviction policy for edge chunk stores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Paper §5: evict the oldest resident (insertion order).
+    Fifo,
+    /// Evict the coldest resident by decayed demand; oldest-first on
+    /// ties; pinned (in-flight) replicas are skipped while any unpinned
+    /// resident remains.
+    HotnessLru,
+}
+
+impl PlacementPolicy {
+    pub fn parse(s: &str) -> Option<PlacementPolicy> {
+        match s {
+            "fifo" => Some(PlacementPolicy::Fifo),
+            "hotness-lru" | "hotness_lru" | "lru" => Some(PlacementPolicy::HotnessLru),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::Fifo => "fifo",
+            PlacementPolicy::HotnessLru => "hotness-lru",
+        }
+    }
+}
+
+/// What happened to an admitted chunk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admitted {
+    Inserted,
+    /// Already resident; recency refreshed, version raised if newer.
+    Refreshed,
+}
+
+/// Drives insert/evict decisions for every edge store in a cluster.
+/// Owns the per-edge replica metadata (versions, pins) that the bare
+/// [`EdgeNode`] — kept paper-minimal — does not carry.
+#[derive(Clone, Debug)]
+pub struct PlacementEngine {
+    pub policy: PlacementPolicy,
+    /// Per-edge resident chunk versions (absent ⇒ version 0, the
+    /// pre-deployment provisioning version).
+    versions: Vec<HashMap<ChunkId, u64>>,
+    /// Per-edge pinned replicas: chunk → gossip round the pin expires at.
+    pins: Vec<HashMap<ChunkId, usize>>,
+    pub evictions_fifo: u64,
+    pub evictions_cold: u64,
+    pub pin_saves: u64,
+}
+
+impl PlacementEngine {
+    pub fn new(num_edges: usize, policy: PlacementPolicy) -> PlacementEngine {
+        PlacementEngine {
+            policy,
+            versions: vec![HashMap::new(); num_edges],
+            pins: vec![HashMap::new(); num_edges],
+            evictions_fifo: 0,
+            evictions_cold: 0,
+            pin_saves: 0,
+        }
+    }
+
+    /// Version of an edge's resident copy (0 if untracked/provisioned).
+    pub fn version_of(&self, edge: usize, chunk: ChunkId) -> u64 {
+        self.versions[edge].get(&chunk).copied().unwrap_or(0)
+    }
+
+    /// Apply a knowledge push to one edge store — the engine-driven
+    /// analogue of [`EdgeNode::apply_update`], and bit-identical to it
+    /// under [`PlacementPolicy::Fifo`] (same order, same `EdgeStats`;
+    /// pins never influence the FIFO victim). `pin_until_round` covers
+    /// every admitted chunk: a freshly-pushed chunk has no demand
+    /// history yet (hotness 0), so without a pin `HotnessLru` would
+    /// evict it right back out of a warmed store in the same call.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_update(
+        &mut self,
+        node: &mut EdgeNode,
+        corpus: &Corpus,
+        hot: &HotnessTracker,
+        step: usize,
+        chunks: &[ChunkId],
+        versions: &VersionAuthority,
+        pin_until_round: Option<usize>,
+        current_round: usize,
+    ) {
+        node.stats.updates += 1;
+        match self.policy {
+            // Interleaved insert/evict — the seed's exact FIFO order.
+            PlacementPolicy::Fifo => {
+                for &cid in chunks {
+                    self.admit(
+                        node,
+                        corpus,
+                        hot,
+                        step,
+                        cid,
+                        versions.latest(cid),
+                        pin_until_round,
+                        current_round,
+                    );
+                }
+            }
+            // Batch path: admit everything, then pick all victims in a
+            // single scan — O(batch + capacity log capacity) instead of
+            // the per-eviction rescan's O(batch × capacity).
+            PlacementPolicy::HotnessLru => {
+                for &cid in chunks {
+                    self.admit_unbounded(node, corpus, cid, versions.latest(cid), pin_until_round);
+                }
+                self.evict_to_capacity(node, hot, step, current_round);
+            }
+        }
+    }
+
+    /// Insert or refresh without enforcing capacity (the batch path
+    /// evicts once at the end; [`Self::admit`] evicts immediately).
+    fn admit_unbounded(
+        &mut self,
+        node: &mut EdgeNode,
+        corpus: &Corpus,
+        cid: ChunkId,
+        version: u64,
+        pin_until_round: Option<usize>,
+    ) -> Admitted {
+        let e = node.id;
+        let admitted = if node.contains(cid) {
+            node.refresh_resident(cid);
+            let v = self.versions[e].entry(cid).or_insert(0);
+            if version > *v {
+                *v = version;
+            }
+            Admitted::Refreshed
+        } else {
+            node.insert_resident(corpus, cid);
+            if version > 0 {
+                self.versions[e].insert(cid, version);
+            }
+            Admitted::Inserted
+        };
+        // In-flight replicas (gossip transfers, fresh cloud pushes) get
+        // pinned on refresh too: the transfer deserves the protection.
+        if let Some(round) = pin_until_round {
+            self.pins[e].insert(cid, round);
+        }
+        admitted
+    }
+
+    /// Evict until the store fits, selecting every victim in one scan:
+    /// coldest-first among unpinned residents (ties → oldest), then —
+    /// only if the store still overflows — among pinned ones, so
+    /// capacity is never violated.
+    pub fn evict_to_capacity(
+        &mut self,
+        node: &mut EdgeNode,
+        hot: &HotnessTracker,
+        step: usize,
+        current_round: usize,
+    ) {
+        let over = node.len().saturating_sub(node.capacity());
+        if over == 0 {
+            return;
+        }
+        let e = node.id;
+        let mut cand: Vec<(bool, f64, usize, ChunkId)> = node
+            .resident_chunks()
+            .enumerate()
+            .map(|(pos, cid)| {
+                let pinned = self.pins[e]
+                    .get(&cid)
+                    .is_some_and(|&until| until >= current_round);
+                (pinned, hot.chunk_hotness(cid, step), pos, cid)
+            })
+            .collect();
+        cand.sort_by(|a, b| {
+            a.0.cmp(&b.0)
+                .then(a.1.partial_cmp(&b.1).unwrap())
+                .then(a.2.cmp(&b.2))
+        });
+        // Pin accounting, same meaning as the per-admit path: did pin
+        // protection change the outcome? (A pinned chunk colder than an
+        // evicted unpinned one was spared.)
+        let coldest_pinned = cand
+            .iter()
+            .filter(|c| c.0)
+            .map(|c| (c.1, c.2))
+            .next(); // cand is sorted: first pinned entry is its coldest
+        if let Some(cp) = coldest_pinned {
+            if cand
+                .iter()
+                .take(over)
+                .any(|c| !c.0 && (c.1, c.2) > cp)
+            {
+                self.pin_saves += 1;
+            }
+        }
+        for &(_, _, _, cid) in cand.iter().take(over) {
+            self.evictions_cold += 1;
+            self.versions[e].remove(&cid);
+            self.pins[e].remove(&cid);
+            node.evict_resident(cid);
+        }
+    }
+
+    /// Admit one chunk (insert or refresh), then evict per policy until
+    /// the store fits. `pin_until_round` marks an in-flight replica that
+    /// eviction must skip until the given gossip round passes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn admit(
+        &mut self,
+        node: &mut EdgeNode,
+        corpus: &Corpus,
+        hot: &HotnessTracker,
+        step: usize,
+        cid: ChunkId,
+        version: u64,
+        pin_until_round: Option<usize>,
+        current_round: usize,
+    ) -> Admitted {
+        let e = node.id;
+        let admitted = self.admit_unbounded(node, corpus, cid, version, pin_until_round);
+        while node.len() > node.capacity() {
+            let victim = self.pick_victim(node, hot, step, current_round);
+            self.versions[e].remove(&victim);
+            self.pins[e].remove(&victim);
+            node.evict_resident(victim);
+        }
+        admitted
+    }
+
+    /// Eviction victim per policy. Deterministic: scans residents in
+    /// insertion order; `HotnessLru` keeps the first (oldest) resident
+    /// among equally-cold candidates, so a fully-cold store degrades to
+    /// exact FIFO behavior.
+    fn pick_victim(
+        &mut self,
+        node: &EdgeNode,
+        hot: &HotnessTracker,
+        step: usize,
+        current_round: usize,
+    ) -> ChunkId {
+        let oldest = node
+            .oldest_resident()
+            .expect("eviction requested on empty store");
+        match self.policy {
+            PlacementPolicy::Fifo => {
+                self.evictions_fifo += 1;
+                oldest
+            }
+            PlacementPolicy::HotnessLru => {
+                let e = node.id;
+                let mut best: Option<(ChunkId, f64)> = None;
+                let mut best_any: Option<(ChunkId, f64)> = None;
+                let mut saw_pinned = false;
+                for cid in node.resident_chunks() {
+                    let h = hot.chunk_hotness(cid, step);
+                    match best_any {
+                        Some((_, bh)) if h >= bh => {}
+                        _ => best_any = Some((cid, h)),
+                    }
+                    if self.pins[e]
+                        .get(&cid)
+                        .is_some_and(|&until| until >= current_round)
+                    {
+                        saw_pinned = true;
+                        continue;
+                    }
+                    match best {
+                        Some((_, bh)) if h >= bh => {}
+                        _ => best = Some((cid, h)),
+                    }
+                }
+                match best {
+                    Some((cid, _)) => {
+                        // Pin protection "saved" something only if the
+                        // overall-coldest resident was pinned (i.e. the
+                        // pin actually changed the outcome).
+                        if saw_pinned && best_any.map(|(c, _)| c) != Some(cid) {
+                            self.pin_saves += 1;
+                        }
+                        self.evictions_cold += 1;
+                        cid
+                    }
+                    // Everything pinned: still evict coldest-first
+                    // (ties → oldest) so a pinned influx keeps its
+                    // hottest chunks rather than FIFO-thrashing them;
+                    // capacity is never violated.
+                    None => {
+                        self.evictions_cold += 1;
+                        best_any.map(|(cid, _)| cid).unwrap_or(oldest)
+                    }
+                }
+            }
+        }
+    }
+
+    /// (stale, resident) counts for one edge: residents whose version
+    /// trails the authority's latest publication.
+    pub fn staleness(
+        &self,
+        node: &EdgeNode,
+        authority: &VersionAuthority,
+    ) -> (usize, usize) {
+        let e = node.id;
+        let mut stale = 0;
+        let mut resident = 0;
+        for cid in node.resident_chunks() {
+            resident += 1;
+            if self.version_of(e, cid) < authority.latest(cid) {
+                stale += 1;
+            }
+        }
+        (stale, resident)
+    }
+
+    /// Drop pins that expired before `current_round` (bounded memory).
+    pub fn expire_pins(&mut self, current_round: usize) {
+        for p in self.pins.iter_mut() {
+            p.retain(|_, &mut until| until >= current_round);
+        }
+    }
+
+    pub fn pinned_count(&self, edge: usize) -> usize {
+        self.pins[edge].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::Profile;
+
+    fn setup(policy: PlacementPolicy, cap: usize) -> (Corpus, EdgeNode, PlacementEngine) {
+        let c = Corpus::generate(Profile::Wiki, 2);
+        let node = EdgeNode::new(0, cap);
+        let eng = PlacementEngine::new(1, policy);
+        (c, node, eng)
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [PlacementPolicy::Fifo, PlacementPolicy::HotnessLru] {
+            assert_eq!(PlacementPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(PlacementPolicy::parse("lru"), Some(PlacementPolicy::HotnessLru));
+        assert!(PlacementPolicy::parse("random").is_none());
+    }
+
+    #[test]
+    fn fifo_policy_matches_bare_edge_node() {
+        let (c, mut node, mut eng) = setup(PlacementPolicy::Fifo, 30);
+        let mut reference = EdgeNode::new(0, 30);
+        let hot = HotnessTracker::new(c.spec.topics, 100.0);
+        let auth = VersionAuthority::new(c.chunks.len());
+        let batches: Vec<Vec<ChunkId>> =
+            vec![(0..40).collect(), vec![3, 5, 41], (20..55).collect()];
+        for b in &batches {
+            eng.apply_update(&mut node, &c, &hot, 0, b, &auth, None, 0);
+            reference.apply_update(&c, b);
+            let a: Vec<ChunkId> = node.resident_chunks().collect();
+            let r: Vec<ChunkId> = reference.resident_chunks().collect();
+            assert_eq!(a, r, "resident order diverged");
+        }
+        assert_eq!(node.stats.inserted, reference.stats.inserted);
+        assert_eq!(node.stats.evicted, reference.stats.evicted);
+        assert_eq!(node.stats.updates, reference.stats.updates);
+    }
+
+    #[test]
+    fn hotness_lru_evicts_coldest_not_oldest() {
+        let (c, mut node, mut eng) = setup(PlacementPolicy::HotnessLru, 3);
+        let mut hot = HotnessTracker::new(c.spec.topics, 100.0);
+        let auth = VersionAuthority::new(c.chunks.len());
+        eng.apply_update(&mut node, &c, &hot, 0, &[0, 1, 2], &auth, None, 0);
+        // Chunk 0 is oldest but hot; chunk 1 is cold.
+        hot.record_chunk(0, 1);
+        hot.record_chunk(0, 1);
+        hot.record_chunk(2, 1);
+        eng.apply_update(&mut node, &c, &hot, 1, &[9], &auth, None, 0);
+        assert!(node.contains(0), "hot oldest survived");
+        assert!(!node.contains(1), "cold chunk evicted");
+        assert!(node.contains(9));
+        assert_eq!(eng.evictions_cold, 1);
+    }
+
+    #[test]
+    fn pinned_replicas_survive_eviction() {
+        let (c, mut node, mut eng) = setup(PlacementPolicy::HotnessLru, 2);
+        let hot = HotnessTracker::new(c.spec.topics, 100.0);
+        // Chunk 5 arrives via gossip, pinned through round 3.
+        eng.admit(&mut node, &c, &hot, 0, 5, 1, Some(3), 1);
+        eng.admit(&mut node, &c, &hot, 0, 6, 1, None, 1);
+        // Everything cold — without the pin, 5 (oldest) would evict.
+        eng.admit(&mut node, &c, &hot, 1, 7, 1, None, 1);
+        assert!(node.contains(5), "pinned replica evicted");
+        assert!(!node.contains(6));
+        // After the pin expires the chunk is fair game again.
+        eng.admit(&mut node, &c, &hot, 2, 8, 1, None, 9);
+        assert!(!node.contains(5));
+        assert_eq!(node.len(), 2);
+    }
+
+    #[test]
+    fn batch_eviction_single_scan_respects_pins_and_capacity() {
+        let (c, mut node, mut eng) = setup(PlacementPolicy::HotnessLru, 4);
+        let hot = HotnessTracker::new(c.spec.topics, 100.0);
+        let mut auth = VersionAuthority::new(c.chunks.len());
+        auth.publish(&(0..8).collect::<Vec<_>>());
+        // Chunk 0 arrives via gossip (pinned through round 5), then a
+        // cloud batch twice the capacity lands in one push.
+        eng.admit(&mut node, &c, &hot, 0, 0, 1, Some(5), 1);
+        let batch: Vec<ChunkId> = (1..8).collect();
+        eng.apply_update(&mut node, &c, &hot, 1, &batch, &auth, None, 1);
+        assert_eq!(node.len(), 4, "capacity restored in one pass");
+        assert!(node.contains(0), "pinned replica survived batch eviction");
+        // Cold unpinned victims went oldest-first: 1..4 evicted, tail kept.
+        for cid in [5, 6, 7] {
+            assert!(node.contains(cid), "chunk {cid} should survive");
+        }
+    }
+
+    #[test]
+    fn versions_track_staleness() {
+        let (c, mut node, mut eng) = setup(PlacementPolicy::Fifo, 50);
+        let hot = HotnessTracker::new(c.spec.topics, 100.0);
+        let mut auth = VersionAuthority::new(c.chunks.len());
+        auth.publish(&[1, 2, 3]);
+        eng.apply_update(&mut node, &c, &hot, 0, &[1, 2, 3], &auth, None, 0);
+        assert_eq!(eng.staleness(&node, &auth), (0, 3));
+        assert_eq!(eng.version_of(0, 1), 1);
+        // Cloud republishes chunk 2: resident copy goes stale…
+        auth.publish(&[2]);
+        assert_eq!(eng.staleness(&node, &auth), (1, 3));
+        // …until the fresh copy is admitted (refresh path raises version).
+        eng.apply_update(&mut node, &c, &hot, 1, &[2], &auth, None, 0);
+        assert_eq!(eng.staleness(&node, &auth), (0, 3));
+        assert_eq!(eng.version_of(0, 2), 2);
+    }
+}

@@ -1,0 +1,124 @@
+//! Edge graph: neighbor sets + netsim-derived link costs.
+//!
+//! The cluster does not treat the edge tier as a flat broadcast domain:
+//! each edge gossips with and routes to a bounded *neighbor set* — the
+//! `degree` cheapest peers by [`crate::netsim::NetSim::pair_cost_ms`]
+//! (a static ring-distance metric over the same base inter-edge latency
+//! the delay simulation uses). This is what turns the per-query
+//! all-edges scan into an O(degree) probe and bounds gossip fan-out as
+//! the fleet grows.
+
+use crate::netsim::NetSim;
+
+/// Static edge graph for one cluster.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub num_edges: usize,
+    /// Neighbors actually wired per edge (min(requested, n-1)).
+    pub degree: usize,
+    /// Per-edge neighbor ids, each list sorted ascending by id so
+    /// routing iterates candidates in the same order the
+    /// `best_edge_for` oracle scans edges (determinism + equivalence).
+    neighbors: Vec<Vec<usize>>,
+    /// Flattened n×n link-cost matrix (ms).
+    cost_ms: Vec<f64>,
+}
+
+impl Topology {
+    /// Wire each edge to its `degree` cheapest peers (ties broken by
+    /// lower id). Costs come from the network simulator so the graph
+    /// reflects the same world the delay model samples.
+    pub fn build(net: &NetSim, degree: usize) -> Topology {
+        let n = net.num_edges.max(1);
+        let degree = degree.min(n.saturating_sub(1));
+        let mut cost_ms = vec![0.0; n * n];
+        for a in 0..n {
+            for b in 0..n {
+                cost_ms[a * n + b] = net.pair_cost_ms(a, b);
+            }
+        }
+        let mut neighbors = Vec::with_capacity(n);
+        for a in 0..n {
+            let mut peers: Vec<usize> = (0..n).filter(|&b| b != a).collect();
+            peers.sort_by(|&x, &y| {
+                cost_ms[a * n + x]
+                    .partial_cmp(&cost_ms[a * n + y])
+                    .unwrap()
+                    .then(x.cmp(&y))
+            });
+            peers.truncate(degree);
+            peers.sort_unstable(); // candidate iteration order = id order
+            neighbors.push(peers);
+        }
+        Topology {
+            num_edges: n,
+            degree,
+            neighbors,
+            cost_ms,
+        }
+    }
+
+    /// Neighbor ids of `e`, sorted ascending.
+    pub fn neighbors(&self, e: usize) -> &[usize] {
+        &self.neighbors[e]
+    }
+
+    pub fn link_cost_ms(&self, a: usize, b: usize) -> f64 {
+        self.cost_ms[a * self.num_edges + b]
+    }
+
+    /// Total directed links (gossip channels) in the graph.
+    pub fn num_links(&self) -> usize {
+        self.neighbors.iter().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::NetSpec;
+
+    fn topo(n: usize, degree: usize) -> Topology {
+        Topology::build(&NetSim::new(n, NetSpec::default(), 11), degree)
+    }
+
+    #[test]
+    fn degree_bounded_and_self_free() {
+        let t = topo(8, 3);
+        assert_eq!(t.degree, 3);
+        for e in 0..8 {
+            assert_eq!(t.neighbors(e).len(), 3);
+            assert!(!t.neighbors(e).contains(&e), "self-loop at {e}");
+        }
+        assert_eq!(t.num_links(), 24);
+    }
+
+    #[test]
+    fn full_degree_covers_all_peers() {
+        let t = topo(5, 99);
+        assert_eq!(t.degree, 4);
+        for e in 0..5 {
+            let mut expect: Vec<usize> = (0..5).filter(|&b| b != e).collect();
+            expect.sort_unstable();
+            assert_eq!(t.neighbors(e), expect.as_slice());
+        }
+    }
+
+    #[test]
+    fn neighbors_are_cheapest_links() {
+        let t = topo(8, 2);
+        // Ring costs: edge 0's cheapest peers are 1 and 7.
+        assert_eq!(t.neighbors(0), &[1, 7]);
+        let worst = t.link_cost_ms(0, 4);
+        for &nb in t.neighbors(0) {
+            assert!(t.link_cost_ms(0, nb) < worst);
+        }
+    }
+
+    #[test]
+    fn single_edge_cluster_degenerates() {
+        let t = topo(1, 2);
+        assert_eq!(t.degree, 0);
+        assert!(t.neighbors(0).is_empty());
+    }
+}

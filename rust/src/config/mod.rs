@@ -10,6 +10,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::cluster::placement::PlacementPolicy;
 use crate::corpus::Profile;
 use crate::cost::CostWeights;
 use crate::netsim::NetSpec;
@@ -107,6 +108,39 @@ impl QosPreset {
     }
 }
 
+/// Knobs for the distributed knowledge plane ([`crate::cluster`]).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Neighbors per edge in collaborative mode (summary routing and
+    /// gossip both fan out to this many peers; the legacy paper modes
+    /// always use a full mesh so their behavior is unchanged).
+    pub degree: usize,
+    /// Edge-store eviction policy. `HotnessLru` is the collaborative
+    /// default; `fifo` restores the paper-faithful §5 baseline.
+    pub placement: PlacementPolicy,
+    /// Virtual-time steps between gossip rounds.
+    pub gossip_interval: usize,
+    /// Hottest residents advertised per gossip digest.
+    pub gossip_hot_k: usize,
+    /// Gossip rounds a fresh replica stays pinned against eviction.
+    pub pin_rounds: usize,
+    /// Half-life (steps) of the popularity counters.
+    pub hotness_half_life: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            degree: 2,
+            placement: PlacementPolicy::HotnessLru,
+            gossip_interval: 25,
+            gossip_hot_k: 64,
+            pin_rounds: 2,
+            hotness_half_life: 200.0,
+        }
+    }
+}
+
 /// Full system configuration.
 #[derive(Clone, Debug)]
 pub struct SystemConfig {
@@ -135,6 +169,7 @@ pub struct SystemConfig {
     pub qos: QosPreset,
     pub cost_weights: CostWeights,
     pub net: NetSpec,
+    pub cluster: ClusterConfig,
     pub seed: u64,
 }
 
@@ -156,6 +191,7 @@ impl Default for SystemConfig {
             qos: QosPreset::CostEfficient,
             cost_weights: CostWeights::default(),
             net: NetSpec::default(),
+            cluster: ClusterConfig::default(),
             seed: 42,
         }
     }
@@ -231,6 +267,25 @@ impl SystemConfig {
             "net.jitter_sigma" => {
                 self.net.jitter_sigma = val.parse().map_err(|_| bad(key, val))?;
             }
+            "cluster.degree" => {
+                self.cluster.degree = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "cluster.placement" => {
+                self.cluster.placement =
+                    PlacementPolicy::parse(val).ok_or_else(|| bad(key, val))?;
+            }
+            "cluster.gossip_interval" => {
+                self.cluster.gossip_interval = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "cluster.gossip_hot_k" => {
+                self.cluster.gossip_hot_k = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "cluster.pin_rounds" => {
+                self.cluster.pin_rounds = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "cluster.hotness_half_life" => {
+                self.cluster.hotness_half_life = val.parse().map_err(|_| bad(key, val))?;
+            }
             other => return Err(format!("unknown config key {other:?}")),
         }
         Ok(())
@@ -296,6 +351,35 @@ mod tests {
     fn config_rejects_unknown_keys() {
         assert!(SystemConfig::from_toml("[edge]\nbogus = 1").is_err());
         assert!(SystemConfig::from_toml("dataset = \"nope\"").is_err());
+        assert!(SystemConfig::from_toml("[cluster]\nbogus = 1").is_err());
+    }
+
+    #[test]
+    fn cluster_knobs_from_toml() {
+        let cfg = SystemConfig::from_toml(
+            r#"
+            [cluster]
+            degree = 3
+            placement = "fifo"
+            gossip_interval = 40
+            gossip_hot_k = 16
+            pin_rounds = 4
+            hotness_half_life = 90.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.degree, 3);
+        assert_eq!(cfg.cluster.placement, PlacementPolicy::Fifo);
+        assert_eq!(cfg.cluster.gossip_interval, 40);
+        assert_eq!(cfg.cluster.gossip_hot_k, 16);
+        assert_eq!(cfg.cluster.pin_rounds, 4);
+        assert_eq!(cfg.cluster.hotness_half_life, 90.5);
+        assert!(SystemConfig::from_toml("[cluster]\nplacement = \"nope\"").is_err());
+        // Untouched default.
+        assert_eq!(
+            SystemConfig::default().cluster.placement,
+            PlacementPolicy::HotnessLru
+        );
     }
 
     #[test]

@@ -10,7 +10,7 @@
 use std::collections::VecDeque;
 
 use crate::corpus::{ChunkId, Corpus};
-use crate::index::{KeywordIndex, RetrieveScratch};
+use crate::index::{KeywordIndex, KeywordSummary, RetrieveScratch};
 
 /// Counters for observability / tests.
 #[derive(Clone, Copy, Debug, Default)]
@@ -25,10 +25,16 @@ pub struct EdgeStats {
 pub struct EdgeNode {
     pub id: usize,
     capacity: usize,
-    /// FIFO order of resident chunks (front = oldest).
+    /// Insertion order of resident chunks (front = oldest). Under the
+    /// paper's FIFO policy this *is* the eviction order; pluggable
+    /// placement policies ([`crate::cluster::placement`]) drive eviction
+    /// explicitly through [`Self::evict_resident`] instead.
     fifo: VecDeque<ChunkId>,
     /// Keyword index over resident chunks.
     pub index: KeywordIndex,
+    /// Compact keyword digest kept in lock-step with `index` — what the
+    /// cluster routing layer probes instead of the full index.
+    pub summary: KeywordSummary,
     pub stats: EdgeStats,
     /// Reusable retrieval workspace (allocation-free steady state).
     scratch: RetrieveScratch,
@@ -41,6 +47,7 @@ impl EdgeNode {
             capacity,
             fifo: VecDeque::new(),
             index: KeywordIndex::new(),
+            summary: KeywordSummary::new(),
             stats: EdgeStats::default(),
             scratch: RetrieveScratch::default(),
         }
@@ -66,6 +73,61 @@ impl EdgeNode {
         self.fifo.iter().copied()
     }
 
+    /// Insert a chunk without evicting (returns false if already
+    /// resident). Placement engines compose this with
+    /// [`Self::evict_resident`] to realize their own eviction order; the
+    /// built-in [`Self::apply_update`] composes them into the paper's
+    /// FIFO policy.
+    pub fn insert_resident(&mut self, corpus: &Corpus, cid: ChunkId) -> bool {
+        if self.contains(cid) {
+            return false;
+        }
+        self.fifo.push_back(cid);
+        self.index.add_chunk(cid, &corpus.chunks[cid].keywords);
+        for kw in &corpus.chunks[cid].keywords {
+            self.summary.add(kw);
+        }
+        self.stats.inserted += 1;
+        true
+    }
+
+    /// Evict a specific resident chunk (index, summary, and order queue
+    /// all updated). Returns false if the chunk is not resident.
+    pub fn evict_resident(&mut self, cid: ChunkId) -> bool {
+        if !self.contains(cid) {
+            return false;
+        }
+        if self.fifo.front() == Some(&cid) {
+            self.fifo.pop_front();
+        } else {
+            self.fifo.retain(|&c| c != cid);
+        }
+        if let Some(kws) = self.index.chunk_keywords(cid) {
+            for kw in kws {
+                self.summary.remove(kw);
+            }
+        }
+        self.index.remove_chunk(cid);
+        self.stats.evicted += 1;
+        true
+    }
+
+    /// Refresh a resident chunk's recency (move to the back of the
+    /// insertion-order queue). Returns false if not resident.
+    pub fn refresh_resident(&mut self, cid: ChunkId) -> bool {
+        if !self.contains(cid) {
+            return false;
+        }
+        self.fifo.retain(|&c| c != cid);
+        self.fifo.push_back(cid);
+        true
+    }
+
+    /// Oldest resident by insertion order — the FIFO policy's victim.
+    pub fn oldest_resident(&self) -> Option<ChunkId> {
+        self.fifo.front().copied()
+    }
+
     /// Adaptive knowledge update: insert distributed chunks, evicting the
     /// oldest residents when over capacity (paper §5 FIFO policy).
     /// Re-inserted chunks are refreshed (moved to the back of the queue).
@@ -73,18 +135,13 @@ impl EdgeNode {
         self.stats.updates += 1;
         for &cid in chunks {
             if self.contains(cid) {
-                // Refresh recency.
-                self.fifo.retain(|&c| c != cid);
-                self.fifo.push_back(cid);
+                self.refresh_resident(cid);
                 continue;
             }
-            self.fifo.push_back(cid);
-            self.index.add_chunk(cid, &corpus.chunks[cid].keywords);
-            self.stats.inserted += 1;
+            self.insert_resident(corpus, cid);
             while self.fifo.len() > self.capacity {
-                if let Some(old) = self.fifo.pop_front() {
-                    self.index.remove_chunk(old);
-                    self.stats.evicted += 1;
+                if let Some(old) = self.oldest_resident() {
+                    self.evict_resident(old);
                 }
             }
         }
@@ -118,6 +175,15 @@ impl EdgeNode {
 /// preferring the local edge on ties (paper §3.3 "selects retrieval
 /// sources from local, edge, or cloud datasets"). Returns
 /// `(edge_id, overlap)`.
+///
+/// **Retained as the equivalence-test oracle and bench reference only.**
+/// This probes every edge's full keyword index on every query — an
+/// O(#edges × |query|) string-hashing broadcast that serving no longer
+/// does: the hot path goes through [`crate::cluster::EdgeCluster::route`],
+/// which scores candidates against compact per-edge
+/// [`crate::index::KeywordSummary`] digests (pre-hashed integer probes)
+/// and matches this function's choice (see
+/// `tests/cluster_equivalence.rs`).
 pub fn best_edge_for(
     edges: &[EdgeNode],
     local_edge: usize,
@@ -221,6 +287,45 @@ mod tests {
         let (best, overlap) = best_edge_for(&edges, 0, &["nothing"]);
         assert_eq!(best, 0);
         assert_eq!(overlap, 0.0);
+    }
+
+    #[test]
+    fn placement_primitives_keep_summary_in_sync() {
+        let (c, mut e) = setup();
+        e.insert_resident(&c, 3);
+        e.insert_resident(&c, 9);
+        assert!(!e.insert_resident(&c, 3), "double insert rejected");
+        assert_eq!(e.len(), 2);
+        // Summary agrees with the index on every keyword of a resident
+        // chunk, and forgets evicted content.
+        let mut buf = String::new();
+        for kw in &c.chunks[3].keywords {
+            let h = crate::index::keyword_sig(kw, &mut buf);
+            assert!(e.summary.contains_hash(h), "missing {kw}");
+        }
+        assert!(e.evict_resident(3));
+        assert!(!e.evict_resident(3), "double evict rejected");
+        for kw in &c.chunks[3].keywords {
+            if c.chunks[9].keywords.contains(kw) {
+                continue; // still held by the other resident
+            }
+            let h = crate::index::keyword_sig(kw, &mut buf);
+            assert!(!e.summary.contains_hash(h), "stale {kw}");
+        }
+        assert_eq!(e.stats.inserted, 2);
+        assert_eq!(e.stats.evicted, 1);
+    }
+
+    #[test]
+    fn evict_specific_chunk_mid_queue() {
+        let (c, mut e) = setup();
+        e.apply_update(&c, &[1, 2, 3]);
+        assert!(e.evict_resident(2));
+        let order: Vec<ChunkId> = e.resident_chunks().collect();
+        assert_eq!(order, vec![1, 3], "order of survivors preserved");
+        assert_eq!(e.oldest_resident(), Some(1));
+        assert!(e.refresh_resident(1));
+        assert_eq!(e.oldest_resident(), Some(3));
     }
 
     #[test]

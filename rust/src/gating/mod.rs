@@ -95,6 +95,11 @@ pub struct GateContext {
     pub best_overlap: f64,
     pub best_edge_is_local: bool,
     pub local_overlap: f64,
+    /// Best summary-estimated overlap among the local edge's cluster
+    /// *neighbors* (collaborative runs; 0.0 in the legacy paper modes,
+    /// which — the RBF kernels being distance-based — leaves their GP
+    /// posteriors bit-identical to the pre-cluster gate).
+    pub neighbor_overlap: f64,
     /// q_t: query complexity — reasoning depth, length, entity count.
     pub hops: usize,
     pub length_tokens: usize,
@@ -110,6 +115,7 @@ impl GateContext {
             self.best_overlap,
             if self.best_edge_is_local { 1.0 } else { 0.0 },
             self.local_overlap,
+            self.neighbor_overlap,
             (self.hops as f64 - 1.0) / 2.0,
             (self.length_tokens as f64 / 30.0).min(2.0),
             (self.entity_count as f64 / 6.0).min(2.0),
@@ -123,6 +129,7 @@ impl GateContext {
         vec![
             self.best_overlap,
             self.local_overlap,
+            self.neighbor_overlap,
             if self.best_edge_is_local { 1.0 } else { 0.0 },
             (self.hops as f64 - 1.0) / 2.0,
             (self.entity_count as f64 / 6.0).min(2.0),
@@ -171,6 +178,7 @@ mod tests {
             best_overlap: 0.8,
             best_edge_is_local: true,
             local_overlap: 0.8,
+            neighbor_overlap: 0.4,
             hops: 1,
             length_tokens: 15,
             entity_count: 3,
@@ -198,16 +206,29 @@ mod tests {
     #[test]
     fn features_bounded() {
         let f = ctx().features();
-        assert_eq!(f.len(), 8);
+        assert_eq!(f.len(), 9);
         assert!(f.iter().all(|&x| (0.0..=2.0).contains(&x)), "{f:?}");
     }
 
     #[test]
     fn arm_features_one_hot() {
         let f = arm_features(&ctx(), 2, 5);
-        assert_eq!(f.len(), 8 + 5);
-        assert_eq!(f[8 + 2], 1.0);
-        assert_eq!(f[8..].iter().sum::<f64>(), 1.0);
+        assert_eq!(f.len(), 9 + 5);
+        assert_eq!(f[9 + 2], 1.0);
+        assert_eq!(f[9..].iter().sum::<f64>(), 1.0);
+    }
+
+    #[test]
+    fn neighbor_overlap_feeds_accuracy_subspace() {
+        let mut a = ctx();
+        let mut b = ctx();
+        a.neighbor_overlap = 0.0;
+        b.neighbor_overlap = 0.9;
+        assert_ne!(a.acc_features(), b.acc_features());
+        // Legacy runs pin the signal to 0.0: equal vectors ⇒ the RBF
+        // kernel sees unchanged distances ⇒ bit-identical posteriors.
+        b.neighbor_overlap = 0.0;
+        assert_eq!(a.acc_features(), b.acc_features());
     }
 
     #[test]

@@ -277,6 +277,7 @@ mod tests {
             best_overlap: overlap,
             best_edge_is_local: true,
             local_overlap: overlap,
+            neighbor_overlap: 0.0,
             hops,
             length_tokens: 12,
             entity_count: 3,

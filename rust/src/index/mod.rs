@@ -51,6 +51,13 @@ impl KeywordIndex {
         self.chunk_keywords.contains_key(&chunk_id)
     }
 
+    /// The normalized keyword multiset indexed for a chunk (None if the
+    /// chunk is not resident). The edge store uses this on eviction to
+    /// keep its [`KeywordSummary`] in lock-step with the index.
+    pub fn chunk_keywords(&self, chunk_id: usize) -> Option<&[String]> {
+        self.chunk_keywords.get(&chunk_id).map(|v| v.as_slice())
+    }
+
     /// Index a chunk's keywords (idempotent per chunk id: re-adding
     /// replaces the previous keyword set).
     pub fn add_chunk(&mut self, chunk_id: usize, keywords: &[String]) {
@@ -154,6 +161,105 @@ impl KeywordIndex {
     }
 }
 
+/// FNV-1a over a byte slice — the keyword fingerprint the cluster's
+/// per-edge summaries use. 64 bits make cross-keyword collisions
+/// negligible at edge-store scale (a few thousand distinct keywords).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of one query keyword: normalize (same rules the index
+/// applies) into the caller's buffer, then hash. Allocation-free when
+/// the buffer's capacity suffices.
+pub fn keyword_sig(kw: &str, buf: &mut String) -> u64 {
+    normalize_into(kw, buf);
+    fnv1a(buf.as_bytes())
+}
+
+/// Compact per-store keyword digest: a refcounted set of 64-bit keyword
+/// fingerprints, kept in lock-step with a store's [`KeywordIndex`] by the
+/// edge node's insert/evict paths. Probing it costs one integer-set
+/// lookup per query keyword — no string normalization or postings access
+/// — which is what lets [`crate::cluster::EdgeCluster`] score many
+/// candidate edges per query without touching their full indexes.
+#[derive(Clone, Debug, Default)]
+pub struct KeywordSummary {
+    /// fingerprint -> number of resident (chunk, keyword) occurrences.
+    counts: HashMap<u64, u32>,
+    /// normalization buffer (no fresh String per keyword).
+    norm_buf: String,
+}
+
+impl KeywordSummary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Distinct keyword fingerprints currently present.
+    pub fn distinct_keywords(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Approximate wire size of the summary (what a control plane would
+    /// ship to peers): fingerprint (8 B) + refcount (4 B) per entry.
+    pub fn wire_bytes(&self) -> usize {
+        const SUMMARY_ENTRY_BYTES: usize = 12;
+        self.counts.len() * SUMMARY_ENTRY_BYTES
+    }
+
+    /// Record one (chunk, keyword) occurrence.
+    pub fn add(&mut self, kw: &str) {
+        let mut buf = std::mem::take(&mut self.norm_buf);
+        let h = keyword_sig(kw, &mut buf);
+        self.norm_buf = buf;
+        *self.counts.entry(h).or_insert(0) += 1;
+    }
+
+    /// Remove one (chunk, keyword) occurrence; drops the fingerprint when
+    /// its last occurrence goes.
+    pub fn remove(&mut self, kw: &str) {
+        let mut buf = std::mem::take(&mut self.norm_buf);
+        let h = keyword_sig(kw, &mut buf);
+        self.norm_buf = buf;
+        if let Some(c) = self.counts.get_mut(&h) {
+            *c -= 1;
+            if *c == 0 {
+                self.counts.remove(&h);
+            }
+        }
+    }
+
+    pub fn contains_hash(&self, h: u64) -> bool {
+        self.counts.contains_key(&h)
+    }
+
+    /// Number of query fingerprints present in this summary — the
+    /// integer numerator of [`KeywordIndex::overlap_ratio`], computed
+    /// without touching the index.
+    pub fn hits(&self, query_sig: &[u64]) -> usize {
+        query_sig
+            .iter()
+            .filter(|&h| self.counts.contains_key(h))
+            .count()
+    }
+
+    /// Estimated overlap ratio for a pre-hashed query. Matches
+    /// [`KeywordIndex::overlap_ratio`] exactly (same per-occurrence
+    /// counting, same `hits / len` arithmetic) up to 64-bit fingerprint
+    /// collisions.
+    pub fn overlap_ratio_est(&self, query_sig: &[u64]) -> f64 {
+        if query_sig.is_empty() {
+            return 0.0;
+        }
+        self.hits(query_sig) as f64 / query_sig.len() as f64
+    }
+}
+
 /// Keyword normalization: lowercase, trim punctuation.
 pub fn normalize(kw: &str) -> String {
     let mut out = String::new();
@@ -232,6 +338,58 @@ mod tests {
         assert!(!ix.has_keyword("old"));
         assert!(ix.has_keyword("new"));
         assert_eq!(ix.len(), 1);
+    }
+
+    #[test]
+    fn summary_tracks_membership_like_postings() {
+        let mut ix = KeywordIndex::new();
+        let mut sum = KeywordSummary::new();
+        for (cid, kws_) in [(0usize, ["Alohomora", "spell"]), (1, ["spell", "door"])] {
+            ix.add_chunk(cid, &kws(&kws_));
+            for k in kws_ {
+                sum.add(k);
+            }
+        }
+        let mut buf = String::new();
+        for probe in ["alohomora", "SPELL.", "door", "dragon"] {
+            let h = keyword_sig(probe, &mut buf);
+            assert_eq!(
+                sum.contains_hash(h),
+                ix.has_keyword(probe),
+                "summary and postings disagree on {probe:?}"
+            );
+        }
+        // Removing one of two "spell" occurrences keeps the fingerprint.
+        sum.remove("spell");
+        assert!(sum.contains_hash(keyword_sig("spell", &mut buf)));
+        sum.remove("spell");
+        assert!(!sum.contains_hash(keyword_sig("spell", &mut buf)));
+    }
+
+    #[test]
+    fn summary_overlap_matches_index_overlap() {
+        let mut ix = KeywordIndex::new();
+        let mut sum = KeywordSummary::new();
+        let chunk = ["Hermione", "wand", "library"];
+        ix.add_chunk(0, &kws(&chunk));
+        for k in chunk {
+            sum.add(k);
+        }
+        let query = ["hermione", "wand", "dragon", "dragon"];
+        let mut buf = String::new();
+        let sig: Vec<u64> = query.iter().map(|k| keyword_sig(k, &mut buf)).collect();
+        assert_eq!(sum.overlap_ratio_est(&sig), ix.overlap_ratio(&query));
+        assert_eq!(sum.overlap_ratio_est(&[]), 0.0);
+        assert_eq!(sum.hits(&sig), 2);
+    }
+
+    #[test]
+    fn fnv1a_stable_and_distinct() {
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a(b"alohomora"), fnv1a(b"hermione"));
+        let mut buf = String::new();
+        // Normalization folds into the fingerprint.
+        assert_eq!(keyword_sig("Hermione.", &mut buf), keyword_sig("hermione", &mut buf));
     }
 
     #[test]

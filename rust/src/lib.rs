@@ -28,6 +28,11 @@
 //! * [`cost`] — Pope-et-al TFLOPs cost model + Table-3 GPU constants.
 //! * [`oracle`] — answer-accuracy oracle (GPT-4o grading substitute).
 //! * [`edge`] — edge node: FIFO chunk store + adaptive knowledge update.
+//! * [`cluster`] — the distributed knowledge plane: edge topology with
+//!   netsim-derived link costs, decayed popularity counters, pluggable
+//!   versioned placement (FIFO / hotness-LRU), round-based delta gossip
+//!   between neighbors, and summary-routed collaborative retrieval
+//!   (replacing the per-query all-edges index broadcast).
 //! * [`cloud`] — cloud node: GraphRAG retrieval + knowledge distributor.
 //! * [`gating`] — GP regression + SafeOBO collaborative gate (Alg. 1).
 //! * [`runtime`] — PJRT artifact loading/execution, tokenizer, generation.
@@ -36,6 +41,7 @@
 //! * [`testutil`] — mini property-testing framework.
 
 pub mod cloud;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod corpus;

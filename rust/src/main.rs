@@ -148,6 +148,20 @@ fn simulate(argv: Vec<String>) -> i32 {
             .zip(stats.arm_counts.iter())
             .collect::<Vec<_>>()
     );
+    // The distributed knowledge plane: summary routing over a bounded
+    // neighbor topology + versioned placement + delta gossip.
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+    let wl = Workload::generate(&sys.corpus, workload_for(&cfg, steps), cfg.seed);
+    let (stats, _) = sys.run_eaco(&wl);
+    println!("{:>12}: {}", "eaco-cluster", stats.row());
+    let (stale, resident) = sys.cluster.staleness();
+    println!(
+        "         tiers: {}\n         gossip: {} rounds, {} chunks, {:.1} KiB; staleness {stale}/{resident}",
+        stats.tier_row(),
+        sys.cluster.gossiper.stats.rounds,
+        sys.cluster.gossiper.stats.chunks_transferred,
+        stats.bytes_replicated as f64 / 1024.0,
+    );
     0
 }
 

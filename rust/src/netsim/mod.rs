@@ -120,6 +120,23 @@ impl NetSim {
     pub fn expected_delay_ms(&self, link: Link, step: usize) -> f64 {
         self.base(link) * self.congestion(link, step)
     }
+
+    /// Static cost (ms) of the a↔b inter-edge link, used by the cluster
+    /// topology to pick neighbor sets. Derived from the base inter-edge
+    /// latency scaled by a virtual *ring distance* between the edge
+    /// sites (nearby ids are topologically close — same metro, adjacent
+    /// rack rows), so gossip and collaborative retrieval prefer cheap
+    /// links. Symmetric, deterministic (no jitter), 0 for `a == b`.
+    pub fn pair_cost_ms(&self, a: usize, b: usize) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        let n = self.num_edges.max(2).max(a.max(b) + 1);
+        let raw = a.abs_diff(b);
+        let ring = raw.min(n - raw) as f64;
+        let half = (n as f64 / 2.0).max(1.0);
+        self.spec.edge_edge_base_ms * (0.5 + ring / half)
+    }
 }
 
 #[cfg(test)]
@@ -180,6 +197,21 @@ mod tests {
             let d = s.delay_ms(Link::UserToEdge(0), step);
             assert!(d > 0.0 && d < 200.0, "delay {d}");
         }
+    }
+
+    #[test]
+    fn pair_cost_symmetric_and_ring_shaped() {
+        let s = NetSim::new(8, NetSpec::default(), 3);
+        assert_eq!(s.pair_cost_ms(2, 2), 0.0);
+        for a in 0..8 {
+            for b in 0..8 {
+                assert_eq!(s.pair_cost_ms(a, b), s.pair_cost_ms(b, a));
+            }
+        }
+        // Adjacent edges cheaper than antipodal ones; wraparound counts.
+        assert!(s.pair_cost_ms(0, 1) < s.pair_cost_ms(0, 4));
+        assert_eq!(s.pair_cost_ms(0, 7), s.pair_cost_ms(0, 1));
+        assert!(s.pair_cost_ms(0, 1) > 0.0);
     }
 
     #[test]

@@ -10,6 +10,9 @@
 //! hashing (the `all-MiniLM` stand-in geometry — shared n-grams ⇒ shared
 //! buckets ⇒ cosine similarity tracks lexical overlap).
 
+// One FNV-1a for the crate: the keyword-summary fingerprint hash.
+use crate::index::fnv1a;
+
 pub const PAD: i32 = 0;
 pub const BOS: i32 = 1;
 const RESERVED: u64 = 2;
@@ -105,16 +108,6 @@ impl FeatureHasher {
             (dot / (na * nb)) as f64
         }
     }
-}
-
-#[inline]
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
-    }
-    h
 }
 
 #[cfg(test)]

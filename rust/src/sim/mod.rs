@@ -11,10 +11,11 @@
 pub mod strategy;
 
 use crate::cloud::{CloudNode, CloudSpec};
+use crate::cluster::EdgeCluster;
 use crate::config::SystemConfig;
 use crate::corpus::{ChunkId, Corpus, QaId};
 use crate::cost::CostModel;
-use crate::edge::{best_edge_for, EdgeNode};
+use crate::edge::EdgeNode;
 use crate::gating::safeobo::{Observation, Qos, SafeObo};
 use crate::gating::{standard_arms, Arm, GateContext, GenLoc, Retrieval};
 use crate::netsim::{Link, NetSim};
@@ -31,7 +32,21 @@ pub enum KnowledgeMode {
     Static,
     /// EACO-RAG adaptive updates (cloud-triggered, FIFO).
     Adaptive,
+    /// The distributed knowledge plane ([`crate::cluster`]): cloud
+    /// updates flow through the versioned placement engine, neighbors
+    /// exchange hot chunks via delta gossip, and edge-assisted
+    /// retrieval routes by per-edge keyword summaries over the
+    /// configured neighbor topology.
+    Collaborative,
 }
+
+/// Retrieval-tier indices for [`RunStats::tier_queries`] /
+/// [`RunStats::tier_hits`].
+pub const TIER_NONE: usize = 0;
+pub const TIER_LOCAL: usize = 1;
+pub const TIER_NEIGHBOR: usize = 2;
+pub const TIER_CLOUD: usize = 3;
+pub const TIER_NAMES: [&str; 4] = ["none", "local", "neighbor", "cloud"];
 
 /// Aggregated run metrics (one Table-4 style row).
 #[derive(Clone, Debug, Default)]
@@ -45,9 +60,33 @@ pub struct RunStats {
     pub out_tokens: Running,
     /// Arm usage histogram (gate runs only).
     pub arm_counts: Vec<usize>,
+    /// Queries served per retrieval tier (none/local/neighbor/cloud).
+    pub tier_queries: [usize; 4],
+    /// Queries per tier whose retrieval contained a supporting chunk.
+    pub tier_hits: [usize; 4],
+    /// Chunk payload bytes gossiped edge↔edge during this run
+    /// (collaborative mode; 0 otherwise).
+    pub bytes_replicated: usize,
 }
 
 impl RunStats {
+    /// Per-tier traffic/hit-rate row (collaborative observability).
+    pub fn tier_row(&self) -> String {
+        let mut parts = Vec::new();
+        for t in 0..4 {
+            if self.tier_queries[t] == 0 {
+                continue;
+            }
+            parts.push(format!(
+                "{} {:4.1}% (hit {:4.1}%)",
+                TIER_NAMES[t],
+                self.tier_queries[t] as f64 / self.queries.max(1) as f64 * 100.0,
+                self.tier_hits[t] as f64 / self.tier_queries[t] as f64 * 100.0,
+            ));
+        }
+        parts.join(" | ")
+    }
+
     pub fn row(&self) -> String {
         format!(
             "acc {:5.2}%  delay {:5.2}s ± {:4.2}  cost {:8.2} ± {:6.2} TFLOPs  (n={})",
@@ -65,7 +104,11 @@ impl RunStats {
 pub struct SimSystem {
     pub cfg: SystemConfig,
     pub corpus: Corpus,
-    pub edges: Vec<EdgeNode>,
+    /// The edge fleet + its control plane (topology, hotness, versioned
+    /// placement, gossip, summary routing). The legacy paper modes use
+    /// only its data plane (`cluster.nodes`) plus full-mesh summary
+    /// routing, which reproduces the seed behavior bit-for-bit.
+    pub cluster: EdgeCluster,
     pub cloud: CloudNode,
     pub net: NetSim,
     pub oracle: Oracle,
@@ -74,6 +117,10 @@ pub struct SimSystem {
     pub mode: KnowledgeMode,
     /// Chunks that arrived via community distribution, per edge.
     community_marked: Vec<std::collections::HashSet<ChunkId>>,
+    /// Tier + support-hit of the most recent [`Self::serve`] call (the
+    /// run loops fold these into [`RunStats`]).
+    last_tier: usize,
+    last_hit: bool,
     rng: Rng,
     /// Tier parameters (emulated billions) — from the manifest when
     /// available, else the defaults matching `python/compile/model.py`.
@@ -109,10 +156,22 @@ impl SimSystem {
             top_k_communities: cfg.top_k_communities,
         };
         let cloud = CloudNode::new(&corpus, cfg.num_edges, cloud_spec);
-        let edges: Vec<EdgeNode> = (0..cfg.num_edges)
-            .map(|i| EdgeNode::new(i, cfg.edge_capacity))
-            .collect();
         let net = NetSim::new(cfg.num_edges, cfg.net.clone(), cfg.seed);
+        // Legacy modes keep the seed's all-edges semantics by wiring a
+        // full mesh; collaborative runs use the configured degree.
+        let degree_override = match mode {
+            KnowledgeMode::Collaborative => None,
+            _ => Some(cfg.num_edges.saturating_sub(1)),
+        };
+        let cluster = EdgeCluster::new(
+            &cfg.cluster,
+            degree_override,
+            cfg.num_edges,
+            cfg.edge_capacity,
+            corpus.spec.topics,
+            corpus.chunks.len(),
+            &net,
+        );
         let oracle = Oracle::new(cfg.seed ^ 0x5eed);
         let cost = CostModel::new(cfg.cost_weights);
         let (edge_params_b, edge_capability) =
@@ -124,7 +183,7 @@ impl SimSystem {
         let mut sys = SimSystem {
             cfg,
             corpus,
-            edges,
+            cluster,
             cloud,
             net,
             oracle,
@@ -132,6 +191,8 @@ impl SimSystem {
             rates: GenRates::default(),
             mode,
             community_marked,
+            last_tier: TIER_NONE,
+            last_hit: false,
             rng,
             edge_params_b,
             cloud_params_b,
@@ -160,22 +221,41 @@ impl SimSystem {
                 .take(self.cfg.edge_capacity)
                 .map(|c| c.id)
                 .collect();
-            self.edges[e].apply_update(&self.corpus, &chunks);
+            // Pre-deployment fill (below capacity, version 0): identical
+            // under every placement policy, so it bypasses the engine.
+            // Gossip needs no notification: digests fingerprint store
+            // content directly, so the first round advertises this.
+            self.cluster.nodes[e].apply_update(&self.corpus, &chunks);
         }
     }
 
-    /// Assemble the gate context for a query event.
-    pub fn gate_context(&self, qa_id: QaId, edge_id: usize, step: usize) -> GateContext {
+    /// The edge fleet (compatibility accessor; the stores live in the
+    /// cluster's data plane).
+    pub fn edges(&self) -> &[EdgeNode] {
+        &self.cluster.nodes
+    }
+
+    /// Assemble the gate context for a query event. Edge coverage comes
+    /// from cluster summary routing — in the legacy modes the full-mesh
+    /// topology makes this equal to the retained `best_edge_for` oracle,
+    /// and the neighbor signal is pinned to 0.0 so their GP posteriors
+    /// stay bit-identical to the pre-cluster gate.
+    pub fn gate_context(&mut self, qa_id: QaId, edge_id: usize, step: usize) -> GateContext {
+        let kws = self.corpus.qa_keywords(&self.corpus.qa[qa_id]);
+        let dec = self.cluster.route(edge_id, &kws);
+        let local_overlap = self.cluster.nodes[edge_id].overlap_ratio(&kws);
         let qa = &self.corpus.qa[qa_id];
-        let kws = self.corpus.qa_keywords(qa);
-        let (best_edge, best_overlap) = best_edge_for(&self.edges, edge_id, &kws);
-        let local_overlap = self.edges[edge_id].overlap_ratio(&kws);
         GateContext {
             cloud_delay_ms: self.net.expected_delay_ms(Link::EdgeToCloud(edge_id), step),
             edge_delay_ms: self.net.expected_delay_ms(Link::UserToEdge(edge_id), step),
-            best_overlap,
-            best_edge_is_local: best_edge == edge_id,
+            best_overlap: dec.overlap,
+            best_edge_is_local: dec.edge == edge_id,
             local_overlap,
+            neighbor_overlap: if self.mode == KnowledgeMode::Collaborative {
+                dec.neighbor_overlap
+            } else {
+                0.0
+            },
             hops: qa.hops,
             length_tokens: qa.length_tokens,
             entity_count: qa.entities.len(),
@@ -190,46 +270,69 @@ impl SimSystem {
         step: usize,
         arm: Arm,
     ) -> (Outcome, bool) {
+        // Collaborative background work first: a due gossip round runs
+        // before the query sees the stores (virtual-time cadence).
+        if self.mode == KnowledgeMode::Collaborative {
+            self.cluster.maybe_gossip(&self.corpus, step);
+        }
+
         // Borrow keywords straight from the corpus: retrieval mutates
-        // `self.edges`/`self.cloud`/`self.net` only, all disjoint from
+        // `self.cluster`/`self.cloud`/`self.net` only, all disjoint from
         // `self.corpus`, so the per-query String clone the seed did here
         // was pure hot-path allocation overhead.
         let kws: Vec<&str> = self.corpus.qa_keywords(&self.corpus.qa[qa_id]);
 
         // --- retrieval ---
-        let (retrieved, context_chars, community, edge_edge_s) = match arm.retrieval {
-            Retrieval::None => (Vec::new(), 0, false, 0.0),
+        let (retrieved, context_chars, community, edge_edge_s, tier) = match arm.retrieval {
+            Retrieval::None => (Vec::new(), 0, false, 0.0, TIER_NONE),
             Retrieval::LocalNaive => {
-                let chunks = self.edges[edge_id].retrieve(&kws, self.cfg.retrieve_k);
-                let chars = self.edges[edge_id].retrieval_context_chars(&self.corpus, &chunks);
+                let chunks = self.cluster.nodes[edge_id].retrieve(&kws, self.cfg.retrieve_k);
+                let chars =
+                    self.cluster.nodes[edge_id].retrieval_context_chars(&self.corpus, &chunks);
                 let community = chunks
                     .iter()
                     .any(|c| self.community_marked[edge_id].contains(c));
-                (chunks, chars, community, 0.0)
+                (chunks, chars, community, 0.0, TIER_LOCAL)
             }
             Retrieval::EdgeAssisted => {
-                let (best, _) = best_edge_for(&self.edges, edge_id, &kws);
-                let chunks = self.edges[best].retrieve(&kws, self.cfg.retrieve_k);
-                let chars = self.edges[best].retrieval_context_chars(&self.corpus, &chunks);
+                // Summary routing over the cluster topology (full mesh
+                // in the legacy modes ⇒ the oracle's choice).
+                let best = self.cluster.route(edge_id, &kws).edge;
+                self.cluster.note_served_route(best == edge_id);
+                let chunks = self.cluster.nodes[best].retrieve(&kws, self.cfg.retrieve_k);
+                let chars =
+                    self.cluster.nodes[best].retrieval_context_chars(&self.corpus, &chunks);
                 let community = chunks
                     .iter()
                     .any(|c| self.community_marked[best].contains(c));
-                let hop = if best == edge_id {
-                    0.0
+                let (hop, tier) = if best == edge_id {
+                    (0.0, TIER_LOCAL)
                 } else {
-                    self.net.delay_ms(Link::EdgeToEdge(edge_id, best), step) / 1000.0
+                    (
+                        self.net.delay_ms(Link::EdgeToEdge(edge_id, best), step) / 1000.0,
+                        TIER_NEIGHBOR,
+                    )
                 };
-                (chunks, chars, community, hop)
+                (chunks, chars, community, hop, tier)
             }
             Retrieval::CloudGraph => {
                 let (chunks, chars) =
                     self.cloud
                         .retrieve_graph(&self.corpus, &kws, self.cfg.retrieve_k);
-                (chunks, chars, false, 0.0)
+                (chunks, chars, false, 0.0, TIER_CLOUD)
             }
         };
 
         let qa = &self.corpus.qa[qa_id];
+        self.last_tier = tier;
+        self.last_hit = tier != TIER_NONE
+            && retrieved
+                .iter()
+                .any(|c| qa.supporting_chunks.contains(c));
+        if self.mode == KnowledgeMode::Collaborative {
+            // Demand signals feed hotness-aware placement + gossip.
+            self.cluster.observe_query(qa.topic, &retrieved, step);
+        }
         let inputs = StrategyInputs {
             arm,
             retrieved,
@@ -261,12 +364,27 @@ impl SimSystem {
         );
 
         // --- adaptive knowledge update ---
-        if self.mode == KnowledgeMode::Adaptive {
-            if let Some(plan) = self.cloud.record_query(&self.corpus, edge_id, qa_id) {
-                self.edges[plan.edge_id].apply_update(&self.corpus, &plan.chunks);
-                let marked = &mut self.community_marked[plan.edge_id];
-                for &c in &plan.chunks {
-                    marked.insert(c);
+        match self.mode {
+            KnowledgeMode::Static => {}
+            KnowledgeMode::Adaptive => {
+                if let Some(plan) = self.cloud.record_query(&self.corpus, edge_id, qa_id) {
+                    // Paper-faithful direct FIFO push (seed semantics).
+                    self.cluster.nodes[plan.edge_id].apply_update(&self.corpus, &plan.chunks);
+                    let marked = &mut self.community_marked[plan.edge_id];
+                    for &c in &plan.chunks {
+                        marked.insert(c);
+                    }
+                }
+            }
+            KnowledgeMode::Collaborative => {
+                if let Some(plan) = self.cloud.record_query(&self.corpus, edge_id, qa_id) {
+                    // Versioned publication through the placement
+                    // engine; gossip spreads it onward from here.
+                    self.cluster.apply_cloud_update(&self.corpus, step, &plan);
+                    let marked = &mut self.community_marked[plan.edge_id];
+                    for &c in &plan.chunks {
+                        marked.insert(c);
+                    }
                 }
             }
         }
@@ -280,12 +398,21 @@ impl SimSystem {
             arm_counts: vec![0; 1],
             ..Default::default()
         };
+        let bytes0 = self.cluster.bytes_gossiped();
         let mut correct_n = 0usize;
         for ev in workload.events.clone() {
             let (outcome, correct) = self.serve(ev.qa_id, ev.edge_id, ev.step, arm);
-            accumulate(&mut stats, &outcome, correct, &mut correct_n);
+            accumulate(
+                &mut stats,
+                &outcome,
+                correct,
+                &mut correct_n,
+                self.last_tier,
+                self.last_hit,
+            );
         }
         finalize(&mut stats, correct_n);
+        stats.bytes_replicated = self.cluster.bytes_gossiped() - bytes0;
         stats
     }
 
@@ -308,8 +435,16 @@ impl SimSystem {
             arm_counts: vec![0; gate.arms.len()],
             ..Default::default()
         };
+        let bytes0 = self.cluster.bytes_gossiped();
         let mut correct_n = 0usize;
         for ev in workload.events.clone() {
+            // Run any due gossip round *before* building the gate
+            // context, so the gate trains on the same store state the
+            // serve-time routing will see (serve's own maybe_gossip is
+            // then a no-op for this step).
+            if self.mode == KnowledgeMode::Collaborative {
+                self.cluster.maybe_gossip(&self.corpus, ev.step);
+            }
             let ctx = self.gate_context(ev.qa_id, ev.edge_id, ev.step);
             let decision = gate.decide(&ctx);
             let arm = gate.arms[decision.arm_idx];
@@ -326,10 +461,18 @@ impl SimSystem {
             );
             if !decision.explored {
                 stats.arm_counts[decision.arm_idx] += 1;
-                accumulate(&mut stats, &outcome, correct, &mut correct_n);
+                accumulate(
+                    &mut stats,
+                    &outcome,
+                    correct,
+                    &mut correct_n,
+                    self.last_tier,
+                    self.last_hit,
+                );
             }
         }
         finalize(&mut stats, correct_n);
+        stats.bytes_replicated = self.cluster.bytes_gossiped() - bytes0;
         (stats, gate)
     }
 
@@ -345,7 +488,14 @@ impl SimSystem {
     }
 }
 
-fn accumulate(stats: &mut RunStats, o: &Outcome, correct: bool, correct_n: &mut usize) {
+fn accumulate(
+    stats: &mut RunStats,
+    o: &Outcome,
+    correct: bool,
+    correct_n: &mut usize,
+    tier: usize,
+    tier_hit: bool,
+) {
     stats.queries += 1;
     if correct {
         *correct_n += 1;
@@ -355,6 +505,10 @@ fn accumulate(stats: &mut RunStats, o: &Outcome, correct: bool, correct_n: &mut 
     stats.total_cost.push(o.total_cost);
     stats.in_tokens.push(o.tokens.input);
     stats.out_tokens.push(o.tokens.output);
+    stats.tier_queries[tier] += 1;
+    if tier_hit {
+        stats.tier_hits[tier] += 1;
+    }
 }
 
 fn finalize(stats: &mut RunStats, correct_n: usize) {
@@ -489,6 +643,62 @@ mod tests {
         assert_eq!(sa.queries, sb.queries);
         assert!((sa.accuracy - sb.accuracy).abs() < 1e-12);
         assert!((sa.resource_cost.mean() - sb.resource_cost.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn collaborative_mode_gossips_and_tracks_tiers() {
+        let mut cfg = small_cfg(Profile::Wiki);
+        cfg.num_edges = 6;
+        let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 900), cfg.seed);
+        let arm = Arm { retrieval: Retrieval::EdgeAssisted, gen: GenLoc::EdgeSlm };
+        let stats = sys.run_baseline(&wl, arm);
+        assert_eq!(stats.queries, 900);
+        // Every query lands in the local or neighbor tier under this arm.
+        assert_eq!(stats.tier_queries[TIER_LOCAL] + stats.tier_queries[TIER_NEIGHBOR], 900);
+        assert!(stats.bytes_replicated > 0, "no gossip traffic");
+        assert!(sys.cluster.gossiper.stats.rounds > 0);
+        // Neighbor-degree topology: routing is bounded, not broadcast.
+        assert_eq!(sys.cluster.topology.degree, cfg.cluster.degree);
+    }
+
+    #[test]
+    fn collaborative_runs_deterministic() {
+        let cfg = small_cfg(Profile::Wiki);
+        let run = || {
+            let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+            let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 500), cfg.seed);
+            sys.run_eaco(&wl).0
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.queries, b.queries);
+        assert_eq!(a.tier_queries, b.tier_queries);
+        assert_eq!(a.tier_hits, b.tier_hits);
+        assert_eq!(a.bytes_replicated, b.bytes_replicated);
+        assert!((a.accuracy - b.accuracy).abs() < 1e-12);
+        assert!((a.resource_cost.mean() - b.resource_cost.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn collaborative_gate_sees_neighbor_signal() {
+        let cfg = small_cfg(Profile::Wiki);
+        let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 200), cfg.seed);
+        let mut saw_nonzero = false;
+        for ev in wl.events.iter().take(200) {
+            let ctx = sys.gate_context(ev.qa_id, ev.edge_id, ev.step);
+            if ctx.neighbor_overlap > 0.0 {
+                saw_nonzero = true;
+                break;
+            }
+        }
+        assert!(saw_nonzero, "neighbor overlap never observed");
+        // Legacy mode pins the signal to zero.
+        let mut legacy = SimSystem::new(cfg.clone(), KnowledgeMode::Adaptive);
+        for ev in wl.events.iter().take(50) {
+            let ctx = legacy.gate_context(ev.qa_id, ev.edge_id, ev.step);
+            assert_eq!(ctx.neighbor_overlap, 0.0);
+        }
     }
 
     #[test]

@@ -1,0 +1,212 @@
+//! PR-2 equivalence + determinism guardrails for the cluster subsystem:
+//!
+//! * the placement engine's `Fifo` policy is **bit-identical** to the
+//!   seed `EdgeNode` FIFO (same resident order, same `EdgeStats`) under
+//!   randomized churn;
+//! * summary routing picks the same edge as the retained
+//!   `best_edge_for` oracle on ≥95% of a seeded 10k-query workload
+//!   (full-mesh topology, so the candidate sets match);
+//! * `KnowledgeMode::Collaborative` sim runs are reproducible from the
+//!   seed (two runs → identical `RunStats`, tier mix, gossip bytes).
+
+use eaco_rag::cluster::hotness::HotnessTracker;
+use eaco_rag::cluster::placement::{PlacementEngine, PlacementPolicy};
+use eaco_rag::cluster::replicate::VersionAuthority;
+use eaco_rag::cluster::EdgeCluster;
+use eaco_rag::config::{ClusterConfig, SystemConfig};
+use eaco_rag::corpus::{ChunkId, Corpus, Profile};
+use eaco_rag::edge::{best_edge_for, EdgeNode};
+use eaco_rag::gating::{GenLoc, Retrieval};
+use eaco_rag::netsim::{NetSim, NetSpec};
+use eaco_rag::sim::{workload_for, KnowledgeMode, RunStats, SimSystem, TIER_LOCAL, TIER_NEIGHBOR};
+use eaco_rag::util::rng::Rng;
+use eaco_rag::workload::Workload;
+
+// ---------------------------------------------------------------------------
+// (a) Fifo placement ≡ seed EdgeNode FIFO, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fifo_placement_engine_bit_identical_to_seed_fifo() {
+    let corpus = Corpus::generate(Profile::Wiki, 7);
+    let mut rng = Rng::new(0xF1F0);
+    for trial in 0..20 {
+        let cap = 20 + rng.below(150);
+        let mut seed_node = EdgeNode::new(0, cap);
+        let mut engine_node = EdgeNode::new(0, cap);
+        let mut engine = PlacementEngine::new(1, PlacementPolicy::Fifo);
+        // Hotness deliberately non-trivial: Fifo must ignore it.
+        let mut hot = HotnessTracker::new(corpus.spec.topics, 50.0);
+        let mut auth = VersionAuthority::new(corpus.chunks.len());
+        for step in 0..30 {
+            let batch: Vec<ChunkId> = (0..rng.below(60))
+                .map(|_| rng.below(corpus.chunks.len()))
+                .collect();
+            for &c in batch.iter().take(3) {
+                hot.record_chunk(c, step);
+            }
+            if step % 7 == 0 {
+                auth.publish(&batch);
+            }
+            seed_node.apply_update(&corpus, &batch);
+            engine.apply_update(&mut engine_node, &corpus, &hot, step, &batch, &auth, None, step);
+
+            let a: Vec<ChunkId> = seed_node.resident_chunks().collect();
+            let b: Vec<ChunkId> = engine_node.resident_chunks().collect();
+            assert_eq!(a, b, "trial {trial} step {step}: resident order diverged");
+        }
+        assert_eq!(seed_node.stats.updates, engine_node.stats.updates, "trial {trial}");
+        assert_eq!(seed_node.stats.inserted, engine_node.stats.inserted, "trial {trial}");
+        assert_eq!(seed_node.stats.evicted, engine_node.stats.evicted, "trial {trial}");
+        assert_eq!(seed_node.len(), engine_node.len(), "trial {trial}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) summary routing ≡ best_edge_for oracle on ≥95% of 10k queries
+// ---------------------------------------------------------------------------
+
+#[test]
+fn summary_routing_matches_broadcast_oracle_on_10k_queries() {
+    let corpus = Corpus::generate(Profile::Wiki, 2);
+    let num_edges = 8;
+    let net = NetSim::new(num_edges, NetSpec::default(), 21);
+    let mut cluster = EdgeCluster::new(
+        &ClusterConfig::default(),
+        Some(num_edges - 1), // full mesh: candidate set == the oracle's scan set
+        num_edges,
+        300,
+        corpus.spec.topics,
+        corpus.chunks.len(),
+        &net,
+    );
+    // Heterogeneous stores: topic stripes + random spill, plus churn so
+    // summaries have seen removals too.
+    let mut rng = Rng::new(0x10_000);
+    for e in 0..num_edges {
+        let stripe: Vec<ChunkId> = corpus
+            .chunks
+            .iter()
+            .filter(|c| c.topic % num_edges == e)
+            .map(|c| c.id)
+            .collect();
+        cluster.nodes[e].apply_update(&corpus, &stripe);
+        let spill: Vec<ChunkId> = (0..80).map(|_| rng.below(corpus.chunks.len())).collect();
+        cluster.nodes[e].apply_update(&corpus, &spill);
+    }
+
+    let total = 10_000;
+    let mut agree = 0usize;
+    for _ in 0..total {
+        let qa = &corpus.qa[rng.below(corpus.qa.len())];
+        let kws = corpus.qa_keywords(qa);
+        let local = rng.below(num_edges);
+        let (oracle_edge, oracle_overlap) = best_edge_for(&cluster.nodes, local, &kws);
+        let dec = cluster.route(local, &kws);
+        if dec.edge == oracle_edge {
+            agree += 1;
+            assert!(
+                (dec.overlap - oracle_overlap).abs() < 1e-12,
+                "overlap estimate drifted: {} vs {}",
+                dec.overlap,
+                oracle_overlap
+            );
+        }
+    }
+    assert!(
+        agree * 100 >= total * 95,
+        "summary routing agreed on only {agree}/{total} queries"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// (c) Collaborative sim runs are deterministic
+// ---------------------------------------------------------------------------
+
+fn collab_cfg() -> SystemConfig {
+    SystemConfig {
+        num_edges: 6,
+        edge_capacity: 400,
+        warmup_steps: 200,
+        ..SystemConfig::default()
+    }
+}
+
+fn assert_stats_identical(a: &RunStats, b: &RunStats) {
+    assert_eq!(a.queries, b.queries);
+    assert_eq!(a.tier_queries, b.tier_queries);
+    assert_eq!(a.tier_hits, b.tier_hits);
+    assert_eq!(a.bytes_replicated, b.bytes_replicated);
+    assert_eq!(a.arm_counts, b.arm_counts);
+    assert!((a.accuracy - b.accuracy).abs() < 1e-12);
+    assert!((a.delay.mean() - b.delay.mean()).abs() < 1e-12);
+    assert!((a.resource_cost.mean() - b.resource_cost.mean()).abs() < 1e-9);
+}
+
+#[test]
+fn collaborative_fixed_arm_run_reproducible() {
+    let cfg = collab_cfg();
+    let arm = eaco_rag::gating::Arm {
+        retrieval: Retrieval::EdgeAssisted,
+        gen: GenLoc::EdgeSlm,
+    };
+    let run = || {
+        let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 800), cfg.seed);
+        let stats = sys.run_baseline(&wl, arm);
+        let (stale, resident) = sys.cluster.staleness();
+        (stats, stale, resident, sys.cluster.gossiper.stats.rounds)
+    };
+    let (sa, stale_a, res_a, rounds_a) = run();
+    let (sb, stale_b, res_b, rounds_b) = run();
+    assert_stats_identical(&sa, &sb);
+    assert_eq!((stale_a, res_a, rounds_a), (stale_b, res_b, rounds_b));
+    // The collaborative plane actually did something.
+    assert!(sa.bytes_replicated > 0, "no gossip traffic");
+    assert!(rounds_a > 0);
+    assert_eq!(
+        sa.tier_queries[TIER_LOCAL] + sa.tier_queries[TIER_NEIGHBOR],
+        sa.queries,
+        "edge-assisted arm must serve from the edge tier"
+    );
+}
+
+#[test]
+fn collaborative_gated_run_reproducible() {
+    let cfg = collab_cfg();
+    let run = || {
+        let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 700), cfg.seed);
+        sys.run_eaco(&wl).0
+    };
+    assert_stats_identical(&run(), &run());
+}
+
+// ---------------------------------------------------------------------------
+// Legacy modes still route through summaries — and match the seed path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn legacy_adaptive_run_unaffected_by_cluster_plane() {
+    // The Adaptive mode now routes edge-assisted retrieval through the
+    // cluster's full-mesh summaries; the decision rule is the oracle's,
+    // so a full gated run must stay deterministic and keep the gossip
+    // plane silent.
+    let cfg = SystemConfig {
+        edge_capacity: 400,
+        warmup_steps: 200,
+        ..SystemConfig::default()
+    };
+    let run = || {
+        let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Adaptive);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 500), cfg.seed);
+        let stats = sys.run_eaco(&wl).0;
+        (stats, sys.cluster.gossiper.stats.rounds, sys.cluster.bytes_gossiped())
+    };
+    let (sa, rounds_a, bytes_a) = run();
+    let (sb, _, _) = run();
+    assert_stats_identical(&sa, &sb);
+    assert_eq!(rounds_a, 0, "legacy mode must not gossip");
+    assert_eq!(bytes_a, 0);
+    assert_eq!(sa.bytes_replicated, 0);
+}

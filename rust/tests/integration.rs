@@ -204,6 +204,7 @@ fn prop_gate_always_returns_valid_arm_and_safe_set() {
                 best_overlap: rng.f64(),
                 best_edge_is_local: rng.chance(0.5),
                 local_overlap: rng.f64(),
+                neighbor_overlap: rng.f64(),
                 hops: 1 + rng.below(3),
                 length_tokens: 5 + rng.below(30),
                 entity_count: 2 + rng.below(5),

@@ -69,7 +69,7 @@ fn adaptive_updates_flow_during_serving() {
         coord.sim.cloud.updates_sent > 0,
         "cloud never distributed knowledge"
     );
-    let resident: usize = coord.sim.edges.iter().map(|e| e.len()).sum();
+    let resident: usize = coord.sim.edges().iter().map(|e| e.len()).sum();
     assert!(resident > 0);
 }
 
