@@ -6,9 +6,9 @@
 CARGO ?= cargo
 
 # Perf-trajectory output name; bump per PR (BENCH_OUT=BENCH_PR<N>.json).
-BENCH_OUT ?= BENCH_PR2.json
+BENCH_OUT ?= BENCH_PR6.json
 
-.PHONY: build test ci bench-json artifacts
+.PHONY: build test ci bench-json bench-smoke artifacts
 
 build:
 	$(CARGO) build --release
@@ -32,6 +32,13 @@ ci:
 # EACO_BENCH_FULL=1 adds the slow scenarios (10k-observation GP window).
 bench-json:
 	EACO_BENCH_OUT=$(abspath $(BENCH_OUT)) $(CARGO) bench --bench perf_hotpath
+
+# CI smoke for the bench harness: tiny workloads, one iteration per
+# family, output to target/ (never overwrites a committed trajectory).
+# Proves the harness builds and runs; the numbers mean nothing.
+bench-smoke:
+	EACO_BENCH_SMOKE=1 EACO_BENCH_OUT=$(abspath target/bench_smoke.json) \
+		$(CARGO) bench --bench perf_hotpath
 
 # AOT-compile the L2 model artifacts into rust/artifacts/ (requires the
 # python-side JAX toolchain; PJRT tests/benches skip without this).

@@ -1,0 +1,87 @@
+//! ANN demo: exact scan vs the IVF index on a store far past edge scale.
+//!
+//! Builds a 200k×64 clustered vector store, then serves the same 200
+//! queries through the flat (sharded exact) scan and through the IVF
+//! index at three nprobe settings, printing per-query latency, recall@8
+//! against the exact answer, and the speedup. The sweep is the knob the
+//! `[ann]` config section exposes: nprobe buys recall with probed rows.
+//!
+//!   cargo run --release --example ann_demo
+
+use std::time::Instant;
+
+use eaco_rag::util::rng::Rng;
+use eaco_rag::vecstore::ivf::{IvfParams, IvfStore};
+use eaco_rag::vecstore::VecStore;
+
+const ROWS: usize = 200_000;
+const DIM: usize = 64;
+const NLIST: usize = 128;
+const K: usize = 8;
+const QUERIES: usize = 200;
+
+fn main() {
+    println!("EACO-RAG ANN demo: {ROWS} rows x {DIM} dims, nlist {NLIST}, top-{K}");
+    let mut rng = Rng::new(0xd340);
+
+    // Clustered data (what the coarse quantizer is for): 256 centers,
+    // tight noise, queries drawn near centers like real topical traffic.
+    let n_centers = 256;
+    let mut centers = vec![0.0f32; n_centers * DIM];
+    for x in centers.iter_mut() {
+        *x = rng.normal() as f32;
+    }
+    let mut flat = VecStore::with_capacity(DIM, ROWS);
+    let mut v = vec![0.0f32; DIM];
+    for id in 0..ROWS {
+        let c = rng.below(n_centers);
+        for (j, x) in v.iter_mut().enumerate() {
+            *x = centers[c * DIM + j] + 0.3 * rng.normal() as f32;
+        }
+        flat.insert(id, &v);
+    }
+    let queries: Vec<Vec<f32>> = (0..QUERIES)
+        .map(|_| {
+            let c = rng.below(n_centers);
+            (0..DIM)
+                .map(|j| centers[c * DIM + j] + 0.3 * rng.normal() as f32)
+                .collect()
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let ivf = IvfStore::from_flat(flat.clone(), IvfParams { nlist: NLIST, ..IvfParams::default() });
+    println!(
+        "    ivf build: {:.0} ms ({} lists, {} rows/list avg)",
+        t0.elapsed().as_secs_f64() * 1e3,
+        ivf.nlist_eff(),
+        ROWS / ivf.nlist_eff().max(1)
+    );
+
+    // Exact baseline (the auto-sharded flat scan) + ground truth.
+    let t0 = Instant::now();
+    let truth: Vec<Vec<(usize, f32)>> = queries.iter().map(|q| flat.top_k(q, K)).collect();
+    let exact_us = t0.elapsed().as_secs_f64() * 1e6 / QUERIES as f64;
+    println!("    exact scan: {exact_us:8.1} us/query  recall 1.000  (reference)");
+
+    for nprobe in [1usize, 8, 16] {
+        let t0 = Instant::now();
+        let approx: Vec<Vec<(usize, f32)>> =
+            queries.iter().map(|q| ivf.top_k_with(q, K, nprobe)).collect();
+        let us = t0.elapsed().as_secs_f64() * 1e6 / QUERIES as f64;
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for (t, a) in truth.iter().zip(approx.iter()) {
+            total += t.len();
+            hits += t.iter().filter(|(id, _)| a.iter().any(|(x, _)| x == id)).count();
+        }
+        let recall = hits as f64 / total.max(1) as f64;
+        println!(
+            "    ivf nprobe {nprobe:2}: {us:8.1} us/query  recall {recall:.3}  ({:.1}x vs exact)",
+            exact_us / us
+        );
+    }
+    println!("\nnprobe trades probed rows for recall: ~nprobe/nlist of the store is");
+    println!("scanned per query, so recall climbs toward 1.0 as nprobe grows while");
+    println!("latency stays a small fraction of the full scan.");
+}

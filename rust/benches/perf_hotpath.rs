@@ -2,7 +2,7 @@
 //! real PJRT execution path (criterion substitute; see DESIGN.md §7).
 //!
 //! Measured here, tracked in EXPERIMENTS.md §Perf, and **emitted as a
-//! machine-readable trajectory file** (`BENCH_PR2.json` at the repo
+//! machine-readable trajectory file** (`BENCH_PR6.json` at the repo
 //! root — see `make bench-json`, `BENCH_OUT=` to override) so every
 //! future PR has a baseline to beat:
 //!   * gate decision latency vs GP observation count (target ≪ 1 ms)
@@ -15,12 +15,16 @@
 //!   * vector-store top-k at 2k / 100k / 1M × 64-dim rows — heap scan
 //!     (auto-sharded at ≥16k rows), serial scan, and the pre-PR
 //!     full-sort reference, with effective GB/s
+//!   * IVF ANN top-k over the same 100k / 1M stores at nprobe 1/4/8 —
+//!     the sublinear path next to its flat-scan reference
 //!   * dynamic batcher push/flush throughput
 //!   * PJRT LM forward (b1 vs b8 — batching amortization) and embedder
 //!     (skipped with a notice if artifacts/ is absent)
 //!
 //! Env knobs: `EACO_BENCH_OUT` overrides the JSON output path;
-//! `EACO_BENCH_FULL=1` adds the slow scenarios (10k GP window).
+//! `EACO_BENCH_FULL=1` adds the slow scenarios (10k GP window);
+//! `EACO_BENCH_SMOKE=1` runs one tiny iteration per family (the CI
+//! `make bench-smoke` wiring — proves the harness runs, nothing more).
 
 use std::path::PathBuf;
 
@@ -38,6 +42,7 @@ use eaco_rag::testutil::artifacts_dir;
 use eaco_rag::util::json::Json;
 use eaco_rag::util::rng::Rng;
 use eaco_rag::util::stats::{bench, BenchResult};
+use eaco_rag::vecstore::ivf::{IvfParams, IvfStore};
 use eaco_rag::vecstore::VecStore;
 
 fn ctx(rng: &mut Rng) -> GateContext {
@@ -90,7 +95,7 @@ impl Report {
                 PathBuf::from(env!("CARGO_MANIFEST_DIR"))
                     .parent()
                     .expect("manifest dir has a parent")
-                    .join("BENCH_PR2.json")
+                    .join("BENCH_PR6.json")
             });
         let doc = Json::Arr(self.entries.clone());
         match std::fs::write(&out, doc.to_string() + "\n") {
@@ -147,6 +152,40 @@ fn bench_vecstore(report: &mut Report, rows: usize, iters: usize, fullsort_iters
         std::hint::black_box(vs.above_threshold(&q, 0.5));
     });
     report.push_scan(&r, bytes);
+}
+
+/// IVF ANN sweeps over the same random stores as the flat scans (same
+/// seed stream as [`bench_vecstore`], so rows match bit-for-bit): build
+/// once per (rows, nlist), then sweep nprobe. Effective bytes/iter is
+/// the probed share of the slabs, `rows/nlist · nprobe · dim · 4`.
+fn bench_ivf(report: &mut Report, rows: usize, iters: usize, nlist: usize) {
+    let dim = 64;
+    let mut rng = Rng::new(6 + rows as u64);
+    let vs = random_store(rows, dim, &mut rng);
+    let q: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+    let label = if rows >= 1_000_000 {
+        format!("{}M", rows / 1_000_000)
+    } else {
+        format!("{}k", rows / 1000)
+    };
+    let t0 = std::time::Instant::now();
+    let ivf = IvfStore::from_flat(vs, IvfParams { nlist, ..IvfParams::default() });
+    println!(
+        "(ivf build {label}x64 nlist{nlist}: {:.0} ms, {} lists)",
+        t0.elapsed().as_secs_f64() * 1e3,
+        ivf.nlist_eff(),
+    );
+    for nprobe in [1usize, 4, 8] {
+        let bytes = (rows / nlist * nprobe * dim * 4) as f64;
+        let r = bench(
+            &format!("vecstore.ivf_top_k8 {label}x64 nprobe{nprobe}"),
+            iters,
+            || {
+                std::hint::black_box(ivf.top_k_with(&q, 8, nprobe));
+            },
+        );
+        report.push_scan(&r, bytes);
+    }
 }
 
 /// Provision an n-edge cluster (chunks striped round-robin, ~200 per
@@ -253,6 +292,20 @@ fn main() {
     let full = std::env::var("EACO_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
     let mut report = Report::new();
 
+    // Smoke mode: one tiny iteration per family (CI `make bench-smoke`)
+    // — proves the harness builds and runs end to end; the numbers are
+    // not worth reading. 12k rows keeps the IVF store above its
+    // exact-scan threshold so the ANN path itself is exercised.
+    let smoke = std::env::var("EACO_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    if smoke {
+        println!("(EACO_BENCH_SMOKE=1: tiny workloads, 1 iteration each)");
+        bench_vecstore(&mut report, 2000, 1, 1);
+        bench_ivf(&mut report, 12_000, 1, 8);
+        bench_cluster_routing(&mut report, 4, 1);
+        report.write();
+        return;
+    }
+
     // --- gate decision latency vs observation count ---
     for n_obs in [100usize, 300, 500] {
         let mut gate = SafeObo::new(
@@ -352,6 +405,10 @@ fn main() {
     bench_vecstore(&mut report, 2000, 500, 200);
     bench_vecstore(&mut report, 100_000, 50, 20);
     bench_vecstore(&mut report, 1_000_000, 10, 5);
+
+    // --- IVF ANN: the sublinear path next to its flat references ---
+    bench_ivf(&mut report, 100_000, 200, 64);
+    bench_ivf(&mut report, 1_000_000, 50, 256);
 
     // --- batcher throughput ---
     {

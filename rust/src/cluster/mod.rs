@@ -26,8 +26,9 @@ pub mod replicate;
 pub mod topology;
 
 use crate::cloud::UpdatePlan;
-use crate::config::ClusterConfig;
+use crate::config::{AnnConfig, ClusterConfig};
 use crate::corpus::{ChunkId, Corpus, TopicId};
+use crate::edge::semantic::{self, CentroidDigest};
 use crate::edge::EdgeNode;
 use crate::index::keyword_sig;
 use crate::netsim::NetSim;
@@ -68,6 +69,14 @@ pub struct EdgeCluster {
     /// Per-query scratch (allocation-free steady state).
     sig_buf: Vec<u64>,
     norm_buf: String,
+    /// Weight of the coarse-centroid alignment term in
+    /// [`Self::route_blended`] (0 until [`Self::enable_ann`]).
+    route_blend: f64,
+    /// `centroid_known[r][s]`: the last centroid digest edge `r` synced
+    /// from edge `s` — the receiver-side view that [`Self::route_blended`]
+    /// scores neighbors with and that gossip version-suppresses against.
+    centroid_known: Vec<Vec<Option<CentroidDigest>>>,
+    ann_enabled: bool,
 }
 
 impl EdgeCluster {
@@ -105,7 +114,29 @@ impl EdgeCluster {
             routed_neighbor: 0,
             sig_buf: Vec::new(),
             norm_buf: String::new(),
+            route_blend: 0.0,
+            centroid_known: Vec::new(),
+            ann_enabled: false,
         }
+    }
+
+    /// Turn on the dense retrieval plane: every node gets a semantic
+    /// (IVF) store over its residents, routing gains the centroid-blend
+    /// term, and gossip rounds start shipping centroid digests. Nodes
+    /// get distinct k-means seeds so their list structures decorrelate.
+    pub fn enable_ann(&mut self, corpus: &Corpus, ann: &AnnConfig, seed: u64) {
+        for n in &mut self.nodes {
+            let node_seed = seed ^ ((n.id as u64 + 1) << 32);
+            n.enable_semantic(corpus, ann, node_seed);
+        }
+        let num = self.nodes.len();
+        self.centroid_known = vec![vec![None; num]; num];
+        self.route_blend = ann.route_blend;
+        self.ann_enabled = true;
+    }
+
+    pub fn ann_enabled(&self) -> bool {
+        self.ann_enabled
     }
 
     pub fn num_edges(&self) -> usize {
@@ -119,6 +150,25 @@ impl EdgeCluster {
     /// integer probes instead of an all-edges string-hashing scan.
     /// Query keywords are normalized+hashed exactly once.
     pub fn route(&mut self, local: usize, query_keywords: &[&str]) -> RouteDecision {
+        self.route_blended(local, query_keywords, None)
+    }
+
+    /// [`Self::route`] plus an optional coarse-centroid term: each
+    /// candidate's score is its keyword hit count plus `route_blend ×`
+    /// the query's alignment with that edge's centroid digest (its own
+    /// live centroids for the local edge, the last gossiped digest for
+    /// neighbors — stale by at most one gossip interval). With no
+    /// embedding, no digests, or a zero blend the alignment term is 0
+    /// for every candidate, so the f64 comparisons reduce to the legacy
+    /// integer decision exactly (integer hit counts are exact in f64).
+    /// The overlap fields stay keyword-derived either way — they feed
+    /// the gate's coverage features, which keep keyword semantics.
+    pub fn route_blended(
+        &mut self,
+        local: usize,
+        query_keywords: &[&str],
+        q_emb: Option<&[f32]>,
+    ) -> RouteDecision {
         self.sig_buf.clear();
         for kw in query_keywords {
             self.sig_buf.push(keyword_sig(kw, &mut self.norm_buf));
@@ -127,8 +177,10 @@ impl EdgeCluster {
         if len == 0 {
             return RouteDecision { edge: local, overlap: 0.0, neighbor_overlap: 0.0 };
         }
+        let qn = q_emb.map(semantic::query_norm).unwrap_or(1.0);
         let local_hits = self.nodes[local].summary.hits(&self.sig_buf);
-        let mut best = (local, local_hits);
+        let local_score = local_hits as f64 + self.centroid_bonus(local, local, q_emb, qn);
+        let mut best = (local, local_score, local_hits);
         let mut neighbor_best = 0usize;
         // Neighbor lists are sorted ascending by id, so ties resolve to
         // the lowest id — the oracle's scan order.
@@ -137,15 +189,38 @@ impl EdgeCluster {
             if hits > neighbor_best {
                 neighbor_best = hits;
             }
-            if hits > best.1 {
-                best = (nb, hits);
+            let score = hits as f64 + self.centroid_bonus(local, nb, q_emb, qn);
+            if score > best.1 {
+                best = (nb, score, hits);
             }
         }
         RouteDecision {
             edge: best.0,
-            overlap: best.1 as f64 / len as f64,
+            overlap: best.2 as f64 / len as f64,
             neighbor_overlap: neighbor_best as f64 / len as f64,
         }
+    }
+
+    /// `route_blend ×` alignment of the query with `cand`'s centroids,
+    /// as seen from `local` (live for self, last-gossiped for peers).
+    fn centroid_bonus(&self, local: usize, cand: usize, q_emb: Option<&[f32]>, qn: f32) -> f64 {
+        let Some(q) = q_emb else { return 0.0 };
+        if !self.ann_enabled || self.route_blend <= 0.0 {
+            return 0.0;
+        }
+        let alignment = if cand == local {
+            self.nodes[cand]
+                .semantic
+                .as_ref()
+                .map(|s| s.alignment(q, qn))
+                .unwrap_or(0.0)
+        } else {
+            self.centroid_known[local][cand]
+                .as_ref()
+                .map(|d| d.alignment(q, qn))
+                .unwrap_or(0.0)
+        };
+        self.route_blend * alignment
     }
 
     /// Record one *served* edge-assisted routing decision (the serving
@@ -204,6 +279,10 @@ impl EdgeCluster {
             corpus,
             step,
         );
+        if self.ann_enabled {
+            self.gossiper
+                .sync_centroids(&self.topology, &self.nodes, &mut self.centroid_known);
+        }
         true
     }
 
@@ -305,6 +384,93 @@ mod tests {
         let kws = c.qa_keywords(qa);
         let dec = cl.route(0, &kws);
         assert_ne!(dec.edge, 3, "routed outside the neighbor set");
+    }
+
+    #[test]
+    fn blended_routing_matches_legacy_without_digests() {
+        use crate::edge::semantic::embed_keywords;
+        use crate::runtime::FeatureHasher;
+        let c = Corpus::generate(Profile::Wiki, 6);
+        let mut cl = cluster(4, 3, 300, &c);
+        let mut rng = Rng::new(11);
+        for e in 0..4 {
+            let chunks: Vec<ChunkId> = (0..200).map(|_| rng.below(c.chunks.len())).collect();
+            cl.nodes[e].apply_update(&c, &chunks);
+        }
+        // Default exact_below (4096) keeps every store untrained: no
+        // centroids anywhere, so the blend term is identically zero and
+        // blended decisions must equal the legacy keyword decisions.
+        let ann = AnnConfig::default();
+        cl.enable_ann(&c, &ann, 3);
+        assert!(cl.ann_enabled());
+        let hasher = FeatureHasher::new(ann.embed_dim);
+        for i in 0..50 {
+            let qa = &c.qa[i % c.qa.len()];
+            let kws = c.qa_keywords(qa);
+            let q = embed_keywords(&hasher, &kws);
+            let local = i % 4;
+            let legacy = cl.route(local, &kws);
+            let blended = cl.route_blended(local, &kws, Some(&q));
+            assert_eq!(blended.edge, legacy.edge);
+            assert_eq!(blended.overlap, legacy.overlap);
+            assert_eq!(blended.neighbor_overlap, legacy.neighbor_overlap);
+        }
+    }
+
+    #[test]
+    fn ann_gossip_ships_centroids_and_routing_stays_in_neighbor_set() {
+        use crate::edge::semantic::embed_keywords;
+        use crate::runtime::FeatureHasher;
+        let c = Corpus::generate(Profile::Wiki, 6);
+        let mut cl = cluster(3, 2, 300, &c);
+        for e in 0..3usize {
+            let chunks: Vec<ChunkId> = c
+                .chunks
+                .iter()
+                .filter(|ch| ch.id % 3 == e)
+                .take(200)
+                .map(|ch| ch.id)
+                .collect();
+            cl.nodes[e].apply_update(&c, &chunks);
+        }
+        let ann = AnnConfig {
+            exact_below: 32,
+            nlist: 4,
+            ..AnnConfig::default()
+        };
+        cl.enable_ann(&c, &ann, 5);
+        // 200 residents ≥ exact_below → every store trained on enable.
+        for n in &cl.nodes {
+            assert!(n.semantic.as_ref().unwrap().centroid_version() >= 1);
+        }
+        // Centroid digests piggyback on the first gossip round.
+        assert!(cl.maybe_gossip(&c, 25));
+        assert!(cl.gossiper.stats.centroid_digests_sent > 0);
+        assert!(cl.gossiper.stats.centroid_bytes > 0);
+        let shipped =
+            cl.gossiper.stats.centroid_digests_sent + cl.gossiper.stats.centroid_digests_suppressed;
+        // Blended decisions stay inside {local} ∪ neighbors and keep
+        // keyword-derived overlap fields.
+        let hasher = FeatureHasher::new(ann.embed_dim);
+        for i in 0..30 {
+            let qa = &c.qa[i % c.qa.len()];
+            let kws = c.qa_keywords(qa);
+            let q = embed_keywords(&hasher, &kws);
+            let dec = cl.route_blended(0, &kws, Some(&q));
+            assert!(
+                dec.edge == 0 || cl.topology.neighbors(0).contains(&dec.edge),
+                "routed outside the neighbor set"
+            );
+            assert!((0.0..=1.0).contains(&dec.overlap));
+        }
+        // A later round either suppresses (unchanged versions) or
+        // re-ships (stores mutated during gossip) — both move the total.
+        assert!(cl.maybe_gossip(&c, 50));
+        assert!(
+            cl.gossiper.stats.centroid_digests_sent
+                + cl.gossiper.stats.centroid_digests_suppressed
+                > shipped
+        );
     }
 
     #[test]

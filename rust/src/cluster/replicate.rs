@@ -72,6 +72,13 @@ pub struct ReplicationStats {
     pub bytes_transferred: usize,
     /// Digest overhead bytes ([`DIGEST_ENTRY_BYTES`] per entry).
     pub digest_bytes: usize,
+    /// Centroid digests shipped to neighbors (ANN routing plane).
+    pub centroid_digests_sent: u64,
+    /// Centroid digests skipped because the receiver already held the
+    /// sender's current centroid version.
+    pub centroid_digests_suppressed: u64,
+    /// Centroid digest bytes on the wire (~`nlist · dim · 4` each).
+    pub centroid_bytes: usize,
 }
 
 /// Monotone per-chunk publication counter — the cloud bumps a chunk's
@@ -233,6 +240,38 @@ impl Gossiper {
         }
         placement.expire_pins(self.round);
     }
+
+    /// Ship coarse-centroid digests along the same neighbor links,
+    /// version-suppressed like the chunk digests: a receiver that
+    /// already holds the sender's current centroid version gets
+    /// nothing. Untrained stores (version 0) never advertise. Runs
+    /// piggybacked on each gossip round when the ANN plane is enabled.
+    pub fn sync_centroids(
+        &mut self,
+        topo: &Topology,
+        nodes: &[EdgeNode],
+        known: &mut [Vec<Option<crate::edge::semantic::CentroidDigest>>],
+    ) {
+        for (s, node) in nodes.iter().enumerate() {
+            let Some(sem) = node.semantic.as_ref() else {
+                continue;
+            };
+            let version = sem.centroid_version();
+            if version == 0 {
+                continue;
+            }
+            for &r in topo.neighbors(s) {
+                if known[r][s].as_ref().map(|d| d.version) == Some(version) {
+                    self.stats.centroid_digests_suppressed += 1;
+                    continue;
+                }
+                let digest = sem.digest().expect("trained store has a digest");
+                self.stats.centroid_digests_sent += 1;
+                self.stats.centroid_bytes += digest.wire_bytes();
+                known[r][s] = Some(digest);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -328,6 +367,46 @@ mod tests {
         g.run_round(&topo, &mut nodes, &mut eng, &hot, &c, 50);
         assert!(nodes[1].contains(7), "hot chunk never replicated");
         assert!(g.stats.digests_sent > sent_first);
+    }
+
+    #[test]
+    fn centroid_sync_versions_and_suppresses() {
+        use crate::config::AnnConfig;
+        let (c, mut nodes, topo, _eng, _hot) = world(3, 200);
+        nodes[0].apply_update(&c, &(0..80).collect::<Vec<_>>());
+        let ann = AnnConfig {
+            exact_below: 16,
+            nlist: 4,
+            ..AnnConfig::default()
+        };
+        // Only edge 0 is trained; edge 1 has a tiny (untrained) store.
+        nodes[0].enable_semantic(&c, &ann, 1);
+        nodes[1].apply_update(&c, &[0, 1]);
+        nodes[1].enable_semantic(&c, &ann, 2);
+        let mut g = Gossiper::new(3, GossipConfig::default());
+        let mut known: Vec<Vec<Option<crate::edge::semantic::CentroidDigest>>> =
+            vec![vec![None; 3]; 3];
+        g.sync_centroids(&topo, &nodes, &mut known);
+        // Edge 0's digest reached both neighbors; untrained edges sent
+        // nothing.
+        assert_eq!(g.stats.centroid_digests_sent, 2);
+        assert!(g.stats.centroid_bytes > 0);
+        assert!(known[1][0].is_some() && known[2][0].is_some());
+        assert!(known[0][1].is_none(), "untrained store advertised");
+        let ver = known[1][0].as_ref().unwrap().version;
+        assert!(ver >= 1);
+        // Second sync with unchanged centroids is pure suppression.
+        g.sync_centroids(&topo, &nodes, &mut known);
+        assert_eq!(g.stats.centroid_digests_sent, 2);
+        assert_eq!(g.stats.centroid_digests_suppressed, 2);
+        // A version bump (fresh content re-centers lists) re-ships.
+        nodes[0].apply_update(&c, &(80..140).collect::<Vec<_>>());
+        if nodes[0].semantic.as_ref().unwrap().centroid_version() > ver {
+            g.sync_centroids(&topo, &nodes, &mut known);
+            assert!(g.stats.centroid_digests_sent > 2);
+            assert_eq!(known[1][0].as_ref().unwrap().version,
+                nodes[0].semantic.as_ref().unwrap().centroid_version());
+        }
     }
 
     #[test]

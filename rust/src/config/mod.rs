@@ -141,6 +141,41 @@ impl Default for ClusterConfig {
     }
 }
 
+/// Knobs for the IVF ANN retrieval layer ([`crate::vecstore::ivf`])
+/// and the centroid-blended routing built on it.
+#[derive(Clone, Debug)]
+pub struct AnnConfig {
+    /// k-means posting lists per edge store.
+    pub nlist: usize,
+    /// Lists probed per query (recall-vs-latency dial).
+    pub nprobe: usize,
+    /// Stores below this many rows always take the exact flat scan —
+    /// bit-identical to the pre-ANN path, so small edge stores are
+    /// unaffected by enabling ANN.
+    pub exact_below: usize,
+    /// A posting list re-centers and re-assigns its members once its
+    /// insert/remove churn exceeds this fraction of its size.
+    pub retrain_drift: f64,
+    /// Feature-hashed embedding width (the MiniLM stand-in geometry).
+    pub embed_dim: usize,
+    /// Weight of the coarse-centroid alignment term in
+    /// `EdgeCluster::route_blended`; 0 disables the blend.
+    pub route_blend: f64,
+}
+
+impl Default for AnnConfig {
+    fn default() -> Self {
+        AnnConfig {
+            nlist: 32,
+            nprobe: 4,
+            exact_below: 4096,
+            retrain_drift: 0.5,
+            embed_dim: 64,
+            route_blend: 0.25,
+        }
+    }
+}
+
 /// Full system configuration.
 #[derive(Clone, Debug)]
 pub struct SystemConfig {
@@ -170,6 +205,7 @@ pub struct SystemConfig {
     pub cost_weights: CostWeights,
     pub net: NetSpec,
     pub cluster: ClusterConfig,
+    pub ann: AnnConfig,
     pub seed: u64,
 }
 
@@ -192,6 +228,7 @@ impl Default for SystemConfig {
             cost_weights: CostWeights::default(),
             net: NetSpec::default(),
             cluster: ClusterConfig::default(),
+            ann: AnnConfig::default(),
             seed: 42,
         }
     }
@@ -285,6 +322,20 @@ impl SystemConfig {
             }
             "cluster.hotness_half_life" => {
                 self.cluster.hotness_half_life = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "ann.nlist" => self.ann.nlist = val.parse().map_err(|_| bad(key, val))?,
+            "ann.nprobe" => self.ann.nprobe = val.parse().map_err(|_| bad(key, val))?,
+            "ann.exact_below" => {
+                self.ann.exact_below = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "ann.retrain_drift" => {
+                self.ann.retrain_drift = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "ann.embed_dim" => {
+                self.ann.embed_dim = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "ann.route_blend" => {
+                self.ann.route_blend = val.parse().map_err(|_| bad(key, val))?;
             }
             other => return Err(format!("unknown config key {other:?}")),
         }
@@ -380,6 +431,31 @@ mod tests {
             SystemConfig::default().cluster.placement,
             PlacementPolicy::HotnessLru
         );
+    }
+
+    #[test]
+    fn ann_knobs_from_toml() {
+        let cfg = SystemConfig::from_toml(
+            r#"
+            [ann]
+            nlist = 64
+            nprobe = 8
+            exact_below = 512
+            retrain_drift = 0.3
+            embed_dim = 128
+            route_blend = 0.6
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.ann.nlist, 64);
+        assert_eq!(cfg.ann.nprobe, 8);
+        assert_eq!(cfg.ann.exact_below, 512);
+        assert_eq!(cfg.ann.retrain_drift, 0.3);
+        assert_eq!(cfg.ann.embed_dim, 128);
+        assert_eq!(cfg.ann.route_blend, 0.6);
+        assert!(SystemConfig::from_toml("[ann]\nbogus = 1").is_err());
+        // Untouched defaults: exact fallback covers paper-scale stores.
+        assert!(SystemConfig::default().ann.exact_below > 1000);
     }
 
     #[test]

@@ -7,10 +7,15 @@
 //! also exposes the signals the collaborative gate consumes: its current
 //! overlap ratio against a query and its store occupancy.
 
+pub mod semantic;
+
 use std::collections::VecDeque;
 
+use crate::config::AnnConfig;
 use crate::corpus::{ChunkId, Corpus};
 use crate::index::{KeywordIndex, KeywordSummary, RetrieveScratch};
+
+use semantic::{AnnProbe, SemanticStore};
 
 /// Counters for observability / tests.
 #[derive(Clone, Copy, Debug, Default)]
@@ -38,6 +43,10 @@ pub struct EdgeNode {
     pub stats: EdgeStats,
     /// Reusable retrieval workspace (allocation-free steady state).
     scratch: RetrieveScratch,
+    /// Dense (IVF ANN) store over resident chunks, kept in lock-step
+    /// with the keyword index by the residency primitives. `None` until
+    /// the collaborative knowledge plane enables it.
+    pub semantic: Option<SemanticStore>,
 }
 
 impl EdgeNode {
@@ -50,7 +59,18 @@ impl EdgeNode {
             summary: KeywordSummary::new(),
             stats: EdgeStats::default(),
             scratch: RetrieveScratch::default(),
+            semantic: None,
         }
+    }
+
+    /// Attach a semantic store, embedding every already-resident chunk.
+    /// Subsequent inserts/evictions keep it in sync automatically.
+    pub fn enable_semantic(&mut self, corpus: &Corpus, ann: &AnnConfig, seed: u64) {
+        let mut sem = SemanticStore::new(ann, seed);
+        for &cid in &self.fifo {
+            sem.insert_chunk(&corpus.chunks[cid]);
+        }
+        self.semantic = Some(sem);
     }
 
     pub fn capacity(&self) -> usize {
@@ -87,6 +107,9 @@ impl EdgeNode {
         for kw in &corpus.chunks[cid].keywords {
             self.summary.add(kw);
         }
+        if let Some(sem) = self.semantic.as_mut() {
+            sem.insert_chunk(&corpus.chunks[cid]);
+        }
         self.stats.inserted += 1;
         true
     }
@@ -108,6 +131,9 @@ impl EdgeNode {
             }
         }
         self.index.remove_chunk(cid);
+        if let Some(sem) = self.semantic.as_mut() {
+            sem.remove_chunk(cid);
+        }
         self.stats.evicted += 1;
         true
     }
@@ -157,6 +183,62 @@ impl EdgeNode {
             .iter()
             .map(|&(c, _)| c)
             .collect()
+    }
+
+    /// Hybrid retrieval: keyword hits first, the remainder of the k
+    /// budget filled from the semantic (IVF) top-k. Returns the chunks
+    /// plus what the ANN probe observed (recall@k vs the exact scan,
+    /// and whether the exact fallback answered). `None` probe means the
+    /// semantic store is not enabled and this degenerates to
+    /// [`Self::retrieve`].
+    pub fn retrieve_hybrid(
+        &mut self,
+        query_keywords: &[&str],
+        q_emb: &[f32],
+        k: usize,
+    ) -> (Vec<ChunkId>, Option<AnnProbe>) {
+        self.stats.retrievals += 1;
+        let mut out: Vec<ChunkId> = self
+            .index
+            .retrieve_with(query_keywords, k, &mut self.scratch)
+            .iter()
+            .map(|&(c, _)| c)
+            .collect();
+        let Some(sem) = self.semantic.as_ref() else {
+            return (out, None);
+        };
+        let approx = sem.top_k(q_emb, k);
+        let probe = if sem.uses_exact() {
+            // The fallback *is* the exact scan — recall is 1 by
+            // construction, no need to score the store twice.
+            AnnProbe {
+                recall_at_k: 1.0,
+                exact_fallback: true,
+            }
+        } else {
+            let exact = sem.top_k_exact(q_emb, k);
+            let hits = exact
+                .iter()
+                .filter(|(id, _)| approx.iter().any(|(a, _)| a == id))
+                .count();
+            AnnProbe {
+                recall_at_k: if exact.is_empty() {
+                    1.0
+                } else {
+                    hits as f64 / exact.len() as f64
+                },
+                exact_fallback: false,
+            }
+        };
+        for &(cid, _) in &approx {
+            if out.len() >= k {
+                break;
+            }
+            if !out.contains(&cid) {
+                out.push(cid);
+            }
+        }
+        (out, Some(probe))
     }
 
     /// The paper's edge-selection signal: share of query keywords this
@@ -326,6 +408,45 @@ mod tests {
         assert_eq!(e.oldest_resident(), Some(1));
         assert!(e.refresh_resident(1));
         assert_eq!(e.oldest_resident(), Some(3));
+    }
+
+    #[test]
+    fn semantic_store_tracks_residency() {
+        use crate::runtime::FeatureHasher;
+        let (c, mut e) = setup();
+        e.apply_update(&c, &[1, 2]);
+        e.enable_semantic(&c, &AnnConfig::default(), 9);
+        // Pre-existing residents were embedded; new churn stays in sync.
+        assert_eq!(e.semantic.as_ref().unwrap().len(), 2);
+        e.apply_update(&c, &[3, 4, 5]);
+        assert_eq!(e.semantic.as_ref().unwrap().len(), 5);
+        e.evict_resident(4);
+        assert_eq!(e.semantic.as_ref().unwrap().len(), 4);
+        let qa = &c.qa[0];
+        let kws = c.qa_keywords(qa);
+        let hasher = FeatureHasher::new(AnnConfig::default().embed_dim);
+        let q = semantic::embed_keywords(&hasher, &kws);
+        let (got, probe) = e.retrieve_hybrid(&kws, &q, 6);
+        assert!(got.len() <= 6);
+        let p = probe.expect("semantic enabled → probe reported");
+        assert!(p.exact_fallback, "tiny store must use the exact fallback");
+        assert_eq!(p.recall_at_k, 1.0);
+        // Semantic fill never duplicates a chunk.
+        let mut dedup = got.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), got.len());
+    }
+
+    #[test]
+    fn hybrid_without_semantic_matches_retrieve() {
+        let (c, mut e) = setup();
+        e.apply_update(&c, &c.qa[0].supporting_chunks.clone());
+        let kws = c.qa_keywords(&c.qa[0]);
+        let plain = e.retrieve(&kws, 6);
+        let (hybrid, probe) = e.retrieve_hybrid(&kws, &[], 6);
+        assert_eq!(plain, hybrid);
+        assert!(probe.is_none());
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //! * [`corpus`] — synthetic corpora + QA datasets (wiki / hp profiles).
 //! * [`workload`] — query streams with temporal drift and spatial skew.
 //! * [`index`] — inverted keyword index and overlap-ratio scoring.
-//! * [`vecstore`] — cosine top-k vector store.
+//! * [`vecstore`] — cosine top-k vector store (+ IVF ANN sublayer).
 //! * [`graphrag`] — entity graph, communities, local/global search.
 //! * [`netsim`] — deterministic network delay simulation.
 //! * [`cost`] — Pope-et-al TFLOPs cost model + Table-3 GPU constants.

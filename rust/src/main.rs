@@ -162,6 +162,7 @@ fn simulate(argv: Vec<String>) -> i32 {
         sys.cluster.gossiper.stats.chunks_transferred,
         stats.bytes_replicated as f64 / 1024.0,
     );
+    println!("         {}", stats.ann_row());
     0
 }
 

@@ -15,11 +15,13 @@ use crate::cluster::EdgeCluster;
 use crate::config::SystemConfig;
 use crate::corpus::{ChunkId, Corpus, QaId};
 use crate::cost::CostModel;
+use crate::edge::semantic::{embed_keywords, AnnProbe};
 use crate::edge::EdgeNode;
 use crate::gating::safeobo::{Observation, Qos, SafeObo};
 use crate::gating::{standard_arms, Arm, GateContext, GenLoc, Retrieval};
 use crate::netsim::{Link, NetSim};
 use crate::oracle::Oracle;
+use crate::runtime::FeatureHasher;
 use crate::util::rng::Rng;
 use crate::util::stats::Running;
 use crate::workload::{Workload, WorkloadSpec};
@@ -67,6 +69,13 @@ pub struct RunStats {
     /// Chunk payload bytes gossiped edge↔edge during this run
     /// (collaborative mode; 0 otherwise).
     pub bytes_replicated: usize,
+    /// Queries whose retrieval went through the semantic (ANN) path.
+    pub ann_queries: usize,
+    /// Per-query recall@k of the IVF probe vs the exact scan.
+    pub ann_recall: Running,
+    /// ANN queries answered by the exact-scan fallback (store below
+    /// `ann.exact_below`).
+    pub ann_exact_fallbacks: usize,
 }
 
 impl RunStats {
@@ -85,6 +94,20 @@ impl RunStats {
             ));
         }
         parts.join(" | ")
+    }
+
+    /// ANN observability row: probe volume, mean recall@k, and how
+    /// often the exact-scan fallback answered.
+    pub fn ann_row(&self) -> String {
+        if self.ann_queries == 0 {
+            return "ann: off".into();
+        }
+        format!(
+            "ann: {} probes  recall@k {:5.3}  exact-fallback {:4.1}%",
+            self.ann_queries,
+            self.ann_recall.mean(),
+            self.ann_exact_fallbacks as f64 / self.ann_queries as f64 * 100.0,
+        )
     }
 
     pub fn row(&self) -> String {
@@ -121,6 +144,12 @@ pub struct SimSystem {
     /// run loops fold these into [`RunStats`]).
     last_tier: usize,
     last_hit: bool,
+    /// ANN probe outcome of the most recent serve (collaborative
+    /// local/edge-assisted retrieval only; `None` otherwise).
+    last_ann: Option<AnnProbe>,
+    /// Query embedder for the collaborative dense path (shares hasher
+    /// geometry with every edge's chunk embeddings).
+    query_hasher: Option<FeatureHasher>,
     rng: Rng,
     /// Tier parameters (emulated billions) — from the manifest when
     /// available, else the defaults matching `python/compile/model.py`.
@@ -163,7 +192,7 @@ impl SimSystem {
             KnowledgeMode::Collaborative => None,
             _ => Some(cfg.num_edges.saturating_sub(1)),
         };
-        let cluster = EdgeCluster::new(
+        let mut cluster = EdgeCluster::new(
             &cfg.cluster,
             degree_override,
             cfg.num_edges,
@@ -172,6 +201,16 @@ impl SimSystem {
             corpus.chunks.len(),
             &net,
         );
+        // Collaborative mode gets the dense/ANN retrieval plane: stores
+        // attach now (empty) and stay in sync through the insert/evict
+        // hooks, so provisioning below also fills them.
+        if mode == KnowledgeMode::Collaborative {
+            cluster.enable_ann(&corpus, &cfg.ann, cfg.seed);
+        }
+        let query_hasher = match mode {
+            KnowledgeMode::Collaborative => Some(FeatureHasher::new(cfg.ann.embed_dim)),
+            _ => None,
+        };
         let oracle = Oracle::new(cfg.seed ^ 0x5eed);
         let cost = CostModel::new(cfg.cost_weights);
         let (edge_params_b, edge_capability) =
@@ -193,6 +232,8 @@ impl SimSystem {
             community_marked,
             last_tier: TIER_NONE,
             last_hit: false,
+            last_ann: None,
+            query_hasher,
             rng,
             edge_params_b,
             cloud_params_b,
@@ -282,11 +323,34 @@ impl SimSystem {
         // was pure hot-path allocation overhead.
         let kws: Vec<&str> = self.corpus.qa_keywords(&self.corpus.qa[qa_id]);
 
+        // Dense query embedding for the collaborative ANN path. Legacy
+        // modes (no hasher) skip the hashing work entirely and every
+        // call below degenerates to the keyword-only seed behavior.
+        let q_emb: Option<Vec<f32>> = match arm.retrieval {
+            Retrieval::LocalNaive | Retrieval::EdgeAssisted => self
+                .query_hasher
+                .as_ref()
+                .map(|h| embed_keywords(h, &kws)),
+            _ => None,
+        };
+        self.last_ann = None;
+
         // --- retrieval ---
         let (retrieved, context_chars, community, edge_edge_s, tier) = match arm.retrieval {
             Retrieval::None => (Vec::new(), 0, false, 0.0, TIER_NONE),
             Retrieval::LocalNaive => {
-                let chunks = self.cluster.nodes[edge_id].retrieve(&kws, self.cfg.retrieve_k);
+                let chunks = match q_emb.as_deref() {
+                    Some(q) => {
+                        let (chunks, probe) = self.cluster.nodes[edge_id].retrieve_hybrid(
+                            &kws,
+                            q,
+                            self.cfg.retrieve_k,
+                        );
+                        self.last_ann = probe;
+                        chunks
+                    }
+                    None => self.cluster.nodes[edge_id].retrieve(&kws, self.cfg.retrieve_k),
+                };
                 let chars =
                     self.cluster.nodes[edge_id].retrieval_context_chars(&self.corpus, &chunks);
                 let community = chunks
@@ -296,10 +360,26 @@ impl SimSystem {
             }
             Retrieval::EdgeAssisted => {
                 // Summary routing over the cluster topology (full mesh
-                // in the legacy modes ⇒ the oracle's choice).
-                let best = self.cluster.route(edge_id, &kws).edge;
+                // in the legacy modes ⇒ the oracle's choice). With ANN
+                // enabled the decision also blends coarse-centroid
+                // alignment from gossiped digests.
+                let best = self
+                    .cluster
+                    .route_blended(edge_id, &kws, q_emb.as_deref())
+                    .edge;
                 self.cluster.note_served_route(best == edge_id);
-                let chunks = self.cluster.nodes[best].retrieve(&kws, self.cfg.retrieve_k);
+                let chunks = match q_emb.as_deref() {
+                    Some(q) => {
+                        let (chunks, probe) = self.cluster.nodes[best].retrieve_hybrid(
+                            &kws,
+                            q,
+                            self.cfg.retrieve_k,
+                        );
+                        self.last_ann = probe;
+                        chunks
+                    }
+                    None => self.cluster.nodes[best].retrieve(&kws, self.cfg.retrieve_k),
+                };
                 let chars =
                     self.cluster.nodes[best].retrieval_context_chars(&self.corpus, &chunks);
                 let community = chunks
@@ -409,6 +489,7 @@ impl SimSystem {
                 &mut correct_n,
                 self.last_tier,
                 self.last_hit,
+                self.last_ann,
             );
         }
         finalize(&mut stats, correct_n);
@@ -468,6 +549,7 @@ impl SimSystem {
                     &mut correct_n,
                     self.last_tier,
                     self.last_hit,
+                    self.last_ann,
                 );
             }
         }
@@ -495,6 +577,7 @@ fn accumulate(
     correct_n: &mut usize,
     tier: usize,
     tier_hit: bool,
+    ann: Option<AnnProbe>,
 ) {
     stats.queries += 1;
     if correct {
@@ -508,6 +591,13 @@ fn accumulate(
     stats.tier_queries[tier] += 1;
     if tier_hit {
         stats.tier_hits[tier] += 1;
+    }
+    if let Some(p) = ann {
+        stats.ann_queries += 1;
+        stats.ann_recall.push(p.recall_at_k);
+        if p.exact_fallback {
+            stats.ann_exact_fallbacks += 1;
+        }
     }
 }
 
@@ -660,6 +750,37 @@ mod tests {
         assert!(sys.cluster.gossiper.stats.rounds > 0);
         // Neighbor-degree topology: routing is bounded, not broadcast.
         assert_eq!(sys.cluster.topology.degree, cfg.cluster.degree);
+    }
+
+    #[test]
+    fn collaborative_ann_recall_accounted() {
+        let mut cfg = small_cfg(Profile::Wiki);
+        // Stores hold 400 chunks; push exact_below under that so the
+        // real IVF probe path (not the exact fallback) serves queries.
+        cfg.ann.exact_below = 64;
+        cfg.ann.nlist = 8;
+        cfg.ann.nprobe = 4;
+        let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 400), cfg.seed);
+        let arm = Arm { retrieval: Retrieval::EdgeAssisted, gen: GenLoc::EdgeSlm };
+        let stats = sys.run_baseline(&wl, arm);
+        assert_eq!(stats.ann_queries, 400, "every query probes the ANN path");
+        assert!(
+            stats.ann_exact_fallbacks < stats.ann_queries,
+            "stores above exact_below must take the IVF path"
+        );
+        assert!(
+            stats.ann_recall.mean() > 0.5,
+            "ivf recall@k mean {:.3}",
+            stats.ann_recall.mean()
+        );
+        assert!(stats.ann_row().starts_with("ann: 400 probes"));
+
+        // Legacy modes never touch the ANN path.
+        let mut legacy = SimSystem::new(cfg, KnowledgeMode::Adaptive);
+        let s = legacy.run_baseline(&wl, arm);
+        assert_eq!(s.ann_queries, 0);
+        assert_eq!(s.ann_row(), "ann: off");
     }
 
     #[test]

@@ -1,0 +1,782 @@
+//! IVF (inverted-file) ANN layer over [`VecStore`] — sublinear top-k.
+//!
+//! The flat scan in the parent module is O(n·d) per query; fine for the
+//! paper's 1,000-chunk prototype, the dominant serving cost at the
+//! 100k/1M-row scales the ROADMAP targets. This module adds the classic
+//! IVF construction (the same partition-then-probe idea CoEdge-RAG and
+//! other distributed-RAG systems lean on):
+//!
+//! * **Offline spherical k-means** — a deterministic Lloyd's loop
+//!   (seeded via [`crate::util::rng::Rng`], fixed iteration count, f64
+//!   accumulation, empty clusters keep their previous centroid) trains
+//!   up to `nlist` unit-norm centroids on a size-capped sample, then a
+//!   final full pass assigns every row to its nearest list. Rows are
+//!   L2-normalized, so "nearest by cosine" is "max dot".
+//! * **Contiguous posting lists** — each list owns a flat `Vec<f32>`
+//!   slab plus a parallel id array; probing a list is the same
+//!   cache-friendly strided [`dot_f32`] scan as the flat path, feeding
+//!   the same bounded-heap `TopK`. Slab rows are byte copies of the
+//!   flat store's normalized rows, so scores are bitwise identical.
+//! * **nprobe-bounded queries** — score all centroids (O(nlist·d)),
+//!   probe the best `nprobe` lists, merge under [`rank_desc`]. Probed
+//!   volume is ≈ `nprobe/nlist` of the store; when it crosses
+//!   [`SHARD_MIN_ROWS`] the probed lists shard across scoped threads
+//!   exactly like the flat scan, with the same deterministic merge.
+//! * **Exact fallback** — stores below `exact_below` rows (or not yet
+//!   trained) delegate to `VecStore::top_k`, so small edge stores keep
+//!   bit-identical behavior to PR 1. Probing *all* lists is also
+//!   bit-identical to the exact scan (same scores, same total order),
+//!   which is what `tests/ann_equivalence.rs` pins.
+//! * **Incremental maintenance** — `insert`/`remove` keep an
+//!   id→(list,slot) map in sync with the parent's id→slot map using the
+//!   same swap-remove discipline. A per-list mutation counter triggers
+//!   a cheap single-list refresh (re-center + re-assign members, no
+//!   global retrain) once churn exceeds `retrain_drift` of the list.
+//!
+//! Memory: rows are stored twice (flat store + slabs) — the standard
+//! IVF trade; the flat copy keeps the exact fallback and the recall
+//! accounting in `sim` allocation-free.
+
+use std::collections::HashMap;
+
+use crate::util::rng::Rng;
+
+use super::{dot_f32, rank_desc, TopK, VecStore, SHARD_MIN_ROWS};
+
+/// Tuning knobs for [`IvfStore`]. `SystemConfig`'s `[ann]` section maps
+/// onto the first four; the k-means knobs stay internal (tests shrink
+/// them so debug-profile runs stay fast).
+#[derive(Clone, Copy, Debug)]
+pub struct IvfParams {
+    /// Posting lists to train (effective count is `min(nlist, rows)`).
+    pub nlist: usize,
+    /// Lists probed per query — the recall-vs-latency dial.
+    pub nprobe: usize,
+    /// Below this many rows queries use the exact flat scan, and the
+    /// store auto-trains when an insert first crosses it.
+    pub exact_below: usize,
+    /// A list is refreshed (re-centered + members re-assigned) once its
+    /// insert/remove churn exceeds this fraction of its size.
+    pub retrain_drift: f64,
+    /// Lloyd iterations per (re)train; fixed for determinism.
+    pub kmeans_iters: usize,
+    /// Max rows sampled for the k-means loop (the final assignment pass
+    /// always covers every row).
+    pub train_sample: usize,
+    /// Seed for sampling and initialization.
+    pub seed: u64,
+}
+
+impl Default for IvfParams {
+    fn default() -> Self {
+        IvfParams {
+            nlist: 32,
+            nprobe: 4,
+            exact_below: 4096,
+            retrain_drift: 0.5,
+            kmeans_iters: 8,
+            train_sample: 65_536,
+            seed: 0x1fa6,
+        }
+    }
+}
+
+/// Maintenance counters (observability; not part of the query path).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IvfStats {
+    /// Full k-means (re)trains.
+    pub trains: u64,
+    /// Drift-triggered single-list refreshes.
+    pub list_refreshes: u64,
+    /// Rows moved between lists by refreshes.
+    pub reassigned_rows: u64,
+}
+
+/// One inverted list: parallel id array + contiguous row slab.
+#[derive(Clone, Debug, Default)]
+struct PostingList {
+    ids: Vec<usize>,
+    /// Row-major slab, `ids.len() × dim`; rows are byte copies of the
+    /// flat store's normalized rows.
+    data: Vec<f32>,
+    /// Inserts/removes since the list's centroid was last computed.
+    mutations: usize,
+}
+
+impl PostingList {
+    #[inline]
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    #[inline]
+    fn row(&self, slot: usize, dim: usize) -> &[f32] {
+        &self.data[slot * dim..(slot + 1) * dim]
+    }
+
+    fn push(&mut self, id: usize, row: &[f32]) {
+        self.ids.push(id);
+        self.data.extend_from_slice(row);
+    }
+
+    /// Swap-remove `slot`; returns the id that moved into `slot`, if
+    /// any, so the caller can fix its location entry.
+    fn swap_remove(&mut self, slot: usize, dim: usize) -> Option<usize> {
+        let last = self.ids.len() - 1;
+        self.ids.swap_remove(slot);
+        if slot != last {
+            let (head, tail) = self.data.split_at_mut(last * dim);
+            head[slot * dim..(slot + 1) * dim].copy_from_slice(&tail[..dim]);
+        }
+        self.data.truncate(last * dim);
+        if slot < self.ids.len() {
+            Some(self.ids[slot])
+        } else {
+            None
+        }
+    }
+}
+
+/// Index of the centroid with max dot against `v` (ties → lowest index,
+/// making assignment deterministic).
+fn nearest_list(centroids: &[f32], dim: usize, v: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_dot = f32::NEG_INFINITY;
+    for (c, row) in centroids.chunks_exact(dim).enumerate() {
+        let d = dot_f32(row, v);
+        if d > best_dot {
+            best = c;
+            best_dot = d;
+        }
+    }
+    best
+}
+
+/// An IVF index wrapping a flat [`VecStore`]. Same ranking contract as
+/// the parent: score descending, ties by ascending id.
+#[derive(Clone, Debug)]
+pub struct IvfStore {
+    params: IvfParams,
+    flat: VecStore,
+    /// `nlist_eff × dim` unit-norm centroid matrix; empty ⇒ untrained.
+    centroids: Vec<f32>,
+    lists: Vec<PostingList>,
+    /// id → (list, slot); populated iff trained.
+    loc_of: HashMap<usize, (u32, u32)>,
+    /// Bumps on every (re)train and list refresh; 0 ⇒ untrained. The
+    /// cluster layer gossips this alongside the centroid digest so
+    /// unchanged digests are suppressed.
+    centroid_version: u64,
+    /// Scratch row so attach/refresh avoid aliasing the slabs.
+    row_buf: Vec<f32>,
+    pub stats: IvfStats,
+}
+
+impl IvfStore {
+    pub fn new(dim: usize, params: IvfParams) -> Self {
+        IvfStore {
+            params,
+            flat: VecStore::new(dim),
+            centroids: Vec::new(),
+            lists: Vec::new(),
+            loc_of: HashMap::new(),
+            centroid_version: 0,
+            row_buf: Vec::with_capacity(dim),
+            stats: IvfStats::default(),
+        }
+    }
+
+    /// Wrap an already-loaded flat store and train immediately (bulk
+    /// path: benches/demos load once, then build with the sharded
+    /// assignment pass instead of per-insert attachment).
+    pub fn from_flat(flat: VecStore, params: IvfParams) -> Self {
+        let mut s = IvfStore {
+            params,
+            row_buf: Vec::with_capacity(flat.dim()),
+            flat,
+            centroids: Vec::new(),
+            lists: Vec::new(),
+            loc_of: HashMap::new(),
+            centroid_version: 0,
+            stats: IvfStats::default(),
+        };
+        s.build();
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.flat.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.flat.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.flat.dim()
+    }
+
+    pub fn contains(&self, id: usize) -> bool {
+        self.flat.contains(id)
+    }
+
+    pub fn params(&self) -> &IvfParams {
+        &self.params
+    }
+
+    /// The wrapped flat store (exact reference).
+    pub fn exact(&self) -> &VecStore {
+        &self.flat
+    }
+
+    pub fn trained(&self) -> bool {
+        !self.centroids.is_empty()
+    }
+
+    /// Effective list count (≤ `params.nlist`; rows may be scarce).
+    pub fn nlist_eff(&self) -> usize {
+        if self.flat.dim() == 0 {
+            0
+        } else {
+            self.centroids.len() / self.flat.dim()
+        }
+    }
+
+    /// Unit-norm centroid matrix (`nlist_eff × dim`), row-major. Empty
+    /// until trained. This is what the cluster layer gossips.
+    pub fn centroids(&self) -> &[f32] {
+        &self.centroids
+    }
+
+    /// 0 ⇒ untrained; bumps on every train / list refresh.
+    pub fn centroid_version(&self) -> u64 {
+        self.centroid_version
+    }
+
+    /// Whether queries currently take the exact path (untrained, or the
+    /// store is small enough that a flat scan is already cheap).
+    pub fn uses_exact(&self) -> bool {
+        !self.trained() || self.flat.len() < self.params.exact_below
+    }
+
+    /// Insert (or replace) a vector under `id`, keeping the posting
+    /// lists in sync. First insert past `exact_below` triggers the
+    /// initial train.
+    pub fn insert(&mut self, id: usize, v: &[f32]) {
+        if self.trained() && self.flat.contains(id) {
+            self.detach(id);
+        }
+        self.flat.insert(id, v);
+        if self.trained() {
+            self.attach(id);
+        } else if self.flat.len() >= self.params.exact_below {
+            self.build();
+        }
+    }
+
+    /// Remove a vector, keeping the posting lists in sync.
+    pub fn remove(&mut self, id: usize) -> bool {
+        if self.trained() {
+            self.detach(id);
+        }
+        self.flat.remove(id)
+    }
+
+    /// Approximate top-k at the configured `nprobe`.
+    pub fn top_k(&self, q: &[f32], k: usize) -> Vec<(usize, f32)> {
+        self.top_k_with(q, k, self.params.nprobe)
+    }
+
+    /// Exact top-k via the flat store (the recall reference).
+    pub fn top_k_exact(&self, q: &[f32], k: usize) -> Vec<(usize, f32)> {
+        self.flat.top_k(q, k)
+    }
+
+    /// Approximate top-k probing the best `nprobe` lists. Probing all
+    /// lists (`nprobe ≥ nlist_eff`) is bit-identical to the exact scan:
+    /// every row is scored with the same kernel on the same bytes and
+    /// merged under the same total order.
+    pub fn top_k_with(&self, q: &[f32], k: usize, nprobe: usize) -> Vec<(usize, f32)> {
+        if self.uses_exact() {
+            return self.flat.top_k(q, k);
+        }
+        if k == 0 {
+            return Vec::new();
+        }
+        let qn = self.flat.query_norm(q);
+        let nlist = self.nlist_eff();
+        let nprobe = nprobe.clamp(1, nlist);
+
+        // Coarse stage: rank centroids, keep the best nprobe.
+        let mut coarse = TopK::new(nprobe);
+        for (c, row) in self.centroids.chunks_exact(self.flat.dim()).enumerate() {
+            coarse.push((c, dot_f32(row, q)));
+        }
+        let probes: Vec<usize> = coarse.into_sorted().into_iter().map(|(c, _)| c).collect();
+        let rows: usize = probes.iter().map(|&c| self.lists[c].len()).sum();
+
+        // Fine stage: scan the probed slabs, sharded like the flat path
+        // when the probed volume is large enough to amortize spawns.
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let shards = (rows / SHARD_MIN_ROWS).min(cores).min(8).min(probes.len());
+        if shards < 2 {
+            let mut top = TopK::new(k.min(rows));
+            for &c in &probes {
+                self.scan_list(c, q, qn, &mut top);
+            }
+            return top.into_sorted();
+        }
+        // Deal probed lists round-robin across shards; within a shard
+        // the scan order is fixed, and the merge applies the same total
+        // order as the serial path, so results are shard-invariant.
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); shards];
+        for (i, &c) in probes.iter().enumerate() {
+            groups[i % shards].push(c);
+        }
+        let partials: Vec<Vec<(usize, f32)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = groups
+                .iter()
+                .map(|grp| {
+                    scope.spawn(move || {
+                        let cap: usize = grp.iter().map(|&c| self.lists[c].len()).sum();
+                        let mut top = TopK::new(k.min(cap));
+                        for &c in grp {
+                            self.scan_list(c, q, qn, &mut top);
+                        }
+                        top.into_sorted()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("ivf probe shard panicked"))
+                .collect()
+        });
+        let mut merged: Vec<(usize, f32)> = partials.into_iter().flatten().collect();
+        merged.sort_by(rank_desc);
+        merged.truncate(k);
+        merged
+    }
+
+    /// (Re)train from scratch: sample-capped spherical k-means, then a
+    /// full assignment pass rebuilding every posting list.
+    pub fn build(&mut self) {
+        let dim = self.flat.dim();
+        let n = self.flat.len();
+        self.centroids.clear();
+        self.lists.clear();
+        self.loc_of.clear();
+        if n == 0 {
+            return; // stays untrained; queries fall back to exact
+        }
+        let k = self.params.nlist.max(1).min(n);
+        let mut rng = Rng::new(self.params.seed);
+        // Init from k distinct rows (already unit-norm).
+        let seeds = rng.sample_indices(n, k);
+        self.centroids.reserve(k * dim);
+        for &s in &seeds {
+            self.centroids.extend_from_slice(self.flat.row(s));
+        }
+        let sample: Vec<usize> = if n > self.params.train_sample {
+            rng.sample_indices(n, self.params.train_sample)
+        } else {
+            (0..n).collect()
+        };
+        let mut assign = vec![0u32; sample.len()];
+        for _ in 0..self.params.kmeans_iters {
+            self.assign_slots(&sample, &mut assign);
+            // Re-center: normalized member mean, f64 accumulation so
+            // summation order never leaks into the result.
+            let mut sums = vec![0.0f64; k * dim];
+            let mut counts = vec![0usize; k];
+            for (&slot, &c) in sample.iter().zip(&assign) {
+                let c = c as usize;
+                counts[c] += 1;
+                for (s, x) in sums[c * dim..(c + 1) * dim].iter_mut().zip(self.flat.row(slot)) {
+                    *s += *x as f64;
+                }
+            }
+            for c in 0..k {
+                if counts[c] == 0 {
+                    continue; // keep the previous centroid (deterministic)
+                }
+                let sum = &sums[c * dim..(c + 1) * dim];
+                let norm = sum.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+                for (dst, s) in self.centroids[c * dim..(c + 1) * dim].iter_mut().zip(sum) {
+                    *dst = (*s / norm) as f32;
+                }
+            }
+        }
+        // Full assignment pass (sharded): every row lands in a list.
+        let all: Vec<usize> = (0..n).collect();
+        let mut full = vec![0u32; n];
+        self.assign_slots(&all, &mut full);
+        self.lists = vec![PostingList::default(); k];
+        for (slot, &c) in full.iter().enumerate() {
+            let l = c as usize;
+            let id = self.flat.id_at(slot);
+            self.loc_of.insert(id, (l as u32, self.lists[l].len() as u32));
+            self.lists[l].ids.push(id);
+            self.lists[l].data.extend_from_slice(self.flat.row(slot));
+        }
+        self.centroid_version += 1;
+        self.stats.trains += 1;
+    }
+
+    /// Structural invariants, used by churn tests: the id→(list,slot)
+    /// map, the lists, and the flat store must agree exactly, and slab
+    /// rows must be byte copies of flat rows.
+    pub fn check_consistency(&self) -> Result<(), String> {
+        if !self.trained() {
+            if !self.lists.is_empty() || !self.loc_of.is_empty() {
+                return Err("untrained store has posting state".into());
+            }
+            return Ok(());
+        }
+        let dim = self.flat.dim();
+        let mut seen = 0usize;
+        for (l, pl) in self.lists.iter().enumerate() {
+            if pl.data.len() != pl.ids.len() * dim {
+                return Err(format!("list {l}: slab/id length mismatch"));
+            }
+            for (slot, &id) in pl.ids.iter().enumerate() {
+                seen += 1;
+                match self.loc_of.get(&id) {
+                    Some(&(ll, ss)) if (ll as usize, ss as usize) == (l, slot) => {}
+                    other => {
+                        return Err(format!("id {id}: loc {other:?} != ({l},{slot})"));
+                    }
+                }
+                let pos = self
+                    .flat
+                    .slot(id)
+                    .ok_or_else(|| format!("id {id} in list {l} but not in flat store"))?;
+                if self.flat.row(pos) != pl.row(slot, dim) {
+                    return Err(format!("id {id}: slab row diverged from flat row"));
+                }
+            }
+        }
+        if seen != self.flat.len() || self.loc_of.len() != self.flat.len() {
+            return Err(format!(
+                "coverage: {seen} listed, {} located, {} stored",
+                self.loc_of.len(),
+                self.flat.len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Scan one posting list into the running top-k.
+    fn scan_list(&self, l: usize, q: &[f32], qn: f32, top: &mut TopK) {
+        let dim = self.flat.dim();
+        let pl = &self.lists[l];
+        for slot in 0..pl.len() {
+            let s = dot_f32(pl.row(slot, dim), q) / qn;
+            top.push((pl.ids[slot], s));
+        }
+    }
+
+    /// Nearest-centroid assignment for `slots` (flat slot indices) into
+    /// `out`, sharded across scoped threads when the batch is large.
+    fn assign_slots(&self, slots: &[usize], out: &mut [u32]) {
+        let dim = self.flat.dim();
+        let n = slots.len();
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let shards = (n / SHARD_MIN_ROWS).min(cores).min(8);
+        if shards < 2 {
+            for (o, &slot) in out.iter_mut().zip(slots) {
+                *o = nearest_list(&self.centroids, dim, self.flat.row(slot)) as u32;
+            }
+            return;
+        }
+        let per = (n + shards - 1) / shards;
+        std::thread::scope(|scope| {
+            let mut rest = &mut out[..];
+            let mut handles = Vec::new();
+            for t in 0..shards {
+                let lo = t * per;
+                let hi = ((t + 1) * per).min(n);
+                if lo >= hi {
+                    break;
+                }
+                let (chunk, tail) = rest.split_at_mut(hi - lo);
+                rest = tail;
+                let span = &slots[lo..hi];
+                handles.push(scope.spawn(move || {
+                    for (o, &slot) in chunk.iter_mut().zip(span) {
+                        *o = nearest_list(&self.centroids, dim, self.flat.row(slot)) as u32;
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().expect("ivf assign shard panicked");
+            }
+        });
+    }
+
+    /// Attach `id` (already in the flat store) to its nearest list.
+    fn attach(&mut self, id: usize) {
+        let pos = self.flat.slot(id).expect("attach: id not in flat store");
+        self.row_buf.clear();
+        self.row_buf.extend_from_slice(self.flat.row(pos));
+        let l = nearest_list(&self.centroids, self.flat.dim(), &self.row_buf);
+        let slot = self.lists[l].len() as u32;
+        self.lists[l].push(id, &self.row_buf);
+        self.loc_of.insert(id, (l as u32, slot));
+        self.lists[l].mutations += 1;
+        self.maybe_refresh(l);
+    }
+
+    /// Remove `id` from its posting list (flat store untouched).
+    fn detach(&mut self, id: usize) {
+        let Some((l, slot)) = self.loc_of.remove(&id) else {
+            return;
+        };
+        let (l, slot) = (l as usize, slot as usize);
+        if let Some(moved) = self.lists[l].swap_remove(slot, self.flat.dim()) {
+            self.loc_of.insert(moved, (l as u32, slot as u32));
+        }
+        self.lists[l].mutations += 1;
+        self.maybe_refresh(l);
+    }
+
+    fn maybe_refresh(&mut self, l: usize) {
+        let len = self.lists[l].len();
+        if self.lists[l].mutations as f64 > self.params.retrain_drift * len.max(1) as f64 {
+            self.refresh_list(l);
+        }
+    }
+
+    /// Cheap drift repair for one list (no global retrain): re-center
+    /// on the current members, then move members whose nearest centroid
+    /// changed. Moves bypass the drift counters — they are rebalancing,
+    /// not fresh churn, so refreshes never cascade.
+    fn refresh_list(&mut self, l: usize) {
+        self.stats.list_refreshes += 1;
+        self.lists[l].mutations = 0;
+        let dim = self.flat.dim();
+        if self.lists[l].ids.is_empty() {
+            return; // keep the previous centroid, as in training
+        }
+        let mut mean = vec![0.0f64; dim];
+        for slot in 0..self.lists[l].len() {
+            for (m, x) in mean.iter_mut().zip(self.lists[l].row(slot, dim)) {
+                *m += *x as f64;
+            }
+        }
+        let norm = mean.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+        for (c, m) in self.centroids[l * dim..(l + 1) * dim].iter_mut().zip(&mean) {
+            *c = (*m / norm) as f32;
+        }
+        self.centroid_version += 1;
+        let mut slot = 0;
+        while slot < self.lists[l].len() {
+            let target = nearest_list(&self.centroids, dim, self.lists[l].row(slot, dim));
+            if target == l {
+                slot += 1;
+                continue;
+            }
+            let id = self.lists[l].ids[slot];
+            self.row_buf.clear();
+            self.row_buf.extend_from_slice(self.lists[l].row(slot, dim));
+            if let Some(moved) = self.lists[l].swap_remove(slot, dim) {
+                self.loc_of.insert(moved, (l as u32, slot as u32));
+            }
+            let tslot = self.lists[target].len() as u32;
+            self.lists[target].push(id, &self.row_buf);
+            self.loc_of.insert(id, (target as u32, tslot));
+            self.stats.reassigned_rows += 1;
+            // Don't advance: the swapped-in row needs checking too.
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_vec(rng: &mut Rng, dim: usize) -> Vec<f32> {
+        // Integer grid components force score ties, exercising the
+        // id tie-break on both paths.
+        (0..dim).map(|_| rng.below(9) as f32 - 4.0).collect()
+    }
+
+    fn filled(rows: usize, dim: usize, params: IvfParams, seed: u64) -> IvfStore {
+        let mut rng = Rng::new(seed);
+        let mut s = IvfStore::new(dim, params);
+        for i in 0..rows {
+            s.insert(i, &grid_vec(&mut rng, dim));
+        }
+        s
+    }
+
+    fn assert_bit_identical(a: &[(usize, f32)], b: &[(usize, f32)]) {
+        assert_eq!(a.len(), b.len(), "result lengths differ");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.0, y.0, "ids diverge");
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "score bits diverge");
+        }
+    }
+
+    #[test]
+    fn untrained_small_store_is_exact() {
+        let s = filled(
+            200,
+            8,
+            IvfParams {
+                exact_below: 1000,
+                ..IvfParams::default()
+            },
+            1,
+        );
+        assert!(!s.trained());
+        assert!(s.uses_exact());
+        let q = vec![1.0; 8];
+        assert_bit_identical(&s.top_k(&q, 10), &s.exact().top_k_serial(&q, 10));
+    }
+
+    #[test]
+    fn auto_trains_when_crossing_threshold() {
+        let params = IvfParams {
+            nlist: 4,
+            exact_below: 64,
+            kmeans_iters: 3,
+            ..IvfParams::default()
+        };
+        let s = filled(100, 8, params, 2);
+        assert!(s.trained());
+        assert_eq!(s.stats.trains, 1);
+        assert!(!s.uses_exact());
+        assert!(s.centroid_version() >= 1);
+        s.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn probing_all_lists_matches_exact_bitwise() {
+        let params = IvfParams {
+            nlist: 5,
+            nprobe: 2,
+            exact_below: 32,
+            kmeans_iters: 3,
+            ..IvfParams::default()
+        };
+        let s = filled(300, 8, params, 3);
+        assert!(s.trained());
+        let mut rng = Rng::new(99);
+        for _ in 0..10 {
+            let q = grid_vec(&mut rng, 8);
+            let full = s.top_k_with(&q, 12, s.nlist_eff());
+            let exact = s.exact().top_k_serial(&q, 12);
+            assert_bit_identical(&full, &exact);
+        }
+    }
+
+    #[test]
+    fn k_edge_cases_on_ivf_path() {
+        let params = IvfParams {
+            nlist: 4,
+            nprobe: 4,
+            exact_below: 16,
+            kmeans_iters: 2,
+            ..IvfParams::default()
+        };
+        let s = filled(50, 4, params, 4);
+        assert!(!s.uses_exact());
+        let q = vec![1.0, 0.0, 0.0, 0.0];
+        assert!(s.top_k(&q, 0).is_empty());
+        // k beyond len returns every row, same order as the reference.
+        let all = s.top_k_with(&q, usize::MAX, 4);
+        assert_eq!(all.len(), 50);
+        assert_bit_identical(&all, &s.exact().top_k_fullsort(&q, usize::MAX));
+    }
+
+    #[test]
+    fn insert_remove_keeps_lists_in_sync() {
+        let params = IvfParams {
+            nlist: 4,
+            nprobe: 4,
+            exact_below: 32,
+            kmeans_iters: 2,
+            retrain_drift: 0.4,
+            ..IvfParams::default()
+        };
+        let mut s = filled(80, 6, params, 5);
+        let mut rng = Rng::new(17);
+        for _ in 0..300 {
+            let id = rng.below(120);
+            if rng.chance(0.55) {
+                s.insert(id, &grid_vec(&mut rng, 6));
+            } else {
+                s.remove(id);
+            }
+        }
+        s.check_consistency().unwrap();
+        // Replacement keeps exactly one copy.
+        s.insert(7, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        s.insert(7, &[6.0, 5.0, 4.0, 3.0, 2.0, 1.0]);
+        s.check_consistency().unwrap();
+        let q = grid_vec(&mut rng, 6);
+        assert_bit_identical(
+            &s.top_k_with(&q, 200, s.nlist_eff()),
+            &s.exact().top_k_serial(&q, 200),
+        );
+    }
+
+    #[test]
+    fn drift_triggers_list_refresh_without_retrain() {
+        let params = IvfParams {
+            nlist: 3,
+            exact_below: 24,
+            kmeans_iters: 2,
+            retrain_drift: 0.25,
+            ..IvfParams::default()
+        };
+        let mut s = filled(60, 4, params, 6);
+        assert_eq!(s.stats.trains, 1);
+        let v0 = s.centroid_version();
+        let mut rng = Rng::new(23);
+        for step in 0..200 {
+            s.insert(1000 + step, &grid_vec(&mut rng, 4));
+            s.remove(rng.below(1000 + step));
+        }
+        assert!(s.stats.list_refreshes > 0, "drift never triggered a refresh");
+        assert!(s.centroid_version() > v0);
+        assert_eq!(s.stats.trains, 1, "refresh escalated to a full retrain");
+        s.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn from_flat_matches_incremental_contents() {
+        let mut rng = Rng::new(31);
+        let mut flat = VecStore::new(6);
+        for i in 0..150 {
+            flat.insert(i, &grid_vec(&mut rng, 6));
+        }
+        let params = IvfParams {
+            nlist: 4,
+            exact_below: 32,
+            kmeans_iters: 3,
+            ..IvfParams::default()
+        };
+        let s = IvfStore::from_flat(flat, params);
+        assert!(s.trained());
+        assert_eq!(s.len(), 150);
+        s.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn empty_and_tiny_stores() {
+        let mut s = IvfStore::new(4, IvfParams::default());
+        assert!(s.top_k(&[1.0, 0.0, 0.0, 0.0], 5).is_empty());
+        s.build(); // no rows: stays untrained, no panic
+        assert!(!s.trained());
+        s.insert(1, &[1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(s.top_k(&[1.0, 0.0, 0.0, 0.0], 5).len(), 1);
+        assert!(s.remove(1));
+        assert!(!s.remove(1));
+    }
+}

@@ -24,6 +24,12 @@
 //! Ranking order everywhere: score descending, ties broken by ascending
 //! id. Scores are finite by construction (rows are L2-normalized on
 //! insert, queries are normalized by the scan).
+//!
+//! For stores past ~10⁵ rows the [`ivf`] submodule layers an
+//! inverted-file ANN index on top: same kernel, same ranking order,
+//! sublinear probed volume, exact fallback below a size threshold.
+
+pub mod ivf;
 
 use std::collections::HashMap;
 
@@ -234,6 +240,18 @@ impl VecStore {
         &self.data[pos * self.dim..(pos + 1) * self.dim]
     }
 
+    /// Id stored at `pos` (internal: the IVF layer walks slots).
+    #[inline]
+    fn id_at(&self, pos: usize) -> usize {
+        self.ids[pos]
+    }
+
+    /// Slot of `id`, if resident (internal: used by the IVF layer).
+    #[inline]
+    fn slot(&self, id: usize) -> Option<usize> {
+        self.slot_of.get(&id).copied()
+    }
+
     #[inline]
     fn query_norm(&self, q: &[f32]) -> f32 {
         assert_eq!(q.len(), self.dim, "query dim mismatch");
@@ -323,9 +341,11 @@ impl VecStore {
         merged
     }
 
-    /// Bounded-heap scan over slots `[lo, hi)`.
+    /// Bounded-heap scan over slots `[lo, hi)`. The heap is capped at
+    /// the range size: a pathological `k` (e.g. `usize::MAX`) must not
+    /// reserve a k-sized buffer when only `hi - lo` candidates exist.
     fn scan_range(&self, q: &[f32], qn: f32, lo: usize, hi: usize, k: usize) -> TopK {
-        let mut top = TopK::new(k);
+        let mut top = TopK::new(k.min(hi - lo));
         for pos in lo..hi {
             let s = dot_f32(self.row(pos), q) / qn;
             top.push((self.ids[pos], s));
@@ -453,6 +473,24 @@ mod tests {
         vs.insert(7, &[1.0, 0.0]);
         assert!(vs.top_k(&[1.0, 0.0], 0).is_empty());
         assert_eq!(vs.top_k(&[1.0, 0.0], 10).len(), 1);
+    }
+
+    #[test]
+    fn pathological_k_no_overallocation() {
+        // k far beyond the store must neither panic nor reserve k-sized
+        // buffers (TopK caps at the scan-range size), and must keep the
+        // same tie-break order as the fullsort reference.
+        let mut vs = VecStore::new(2);
+        for i in 0..6 {
+            vs.insert(i, &[(i % 3) as f32 + 1.0, 1.0]); // duplicate rows → ties
+        }
+        let q = [1.0, 0.0];
+        let all = vs.top_k(&q, usize::MAX);
+        assert_eq!(all.len(), 6);
+        assert_eq!(all, vs.top_k_fullsort(&q, usize::MAX));
+        assert_eq!(vs.top_k_serial(&q, usize::MAX), all);
+        assert_eq!(vs.top_k_with_shards(&q, usize::MAX, 3), all);
+        assert!(vs.top_k(&q, 0).is_empty());
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! PR-6 guardrails for the IVF ANN layer (`vecstore::ivf`):
+//!
+//! * the exact-scan fallback (untrained, or trained-but-small) is
+//!   **bit-identical** to `VecStore::top_k_serial` across randomized
+//!   stores and pathological `k` values — ANN must be invisible below
+//!   `exact_below`;
+//! * IVF recall@8 ≥ 0.95 against the exact scan on a seeded clustered
+//!   50k×64 workload at `nprobe = nlist/8` — the quality floor the
+//!   collaborative retrieval path relies on;
+//! * randomized insert/remove churn keeps the id→(list,slot) map, the
+//!   posting-list slabs, and the backing flat store consistent
+//!   (mirrors the PR-1 slot-map model test, one level up).
+
+use std::collections::HashMap;
+
+use eaco_rag::testutil::proptest;
+use eaco_rag::util::rng::Rng;
+use eaco_rag::vecstore::ivf::{IvfParams, IvfStore};
+use eaco_rag::vecstore::VecStore;
+
+// ---------------------------------------------------------------------------
+// (a) exact fallback ≡ flat serial scan, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn exact_fallback_bit_identical_to_flat_serial_scan() {
+    proptest(20, |rng| {
+        let dim = 16;
+        let rows = 50 + rng.below(200);
+        // exact_below far above the store size: every query takes the
+        // fallback regardless of training state.
+        let params = IvfParams {
+            exact_below: 100_000,
+            nlist: 8,
+            kmeans_iters: 2,
+            ..IvfParams::default()
+        };
+        let mut ivf = IvfStore::new(dim, params);
+        let mut flat = VecStore::new(dim);
+        let mut v = vec![0.0f32; dim];
+        for id in 0..rows {
+            for x in v.iter_mut() {
+                // Integer grid so score ties actually occur and the
+                // id tie-break is exercised.
+                *x = rng.below(9) as f32 - 4.0;
+            }
+            ivf.insert(id, &v);
+            flat.insert(id, &v);
+        }
+        if rng.chance(0.5) {
+            // Trained but still below exact_below: must stay exact.
+            ivf.build();
+        }
+        assert!(ivf.uses_exact());
+        let q: Vec<f32> = (0..dim).map(|_| rng.below(9) as f32 - 4.0).collect();
+        for k in [0usize, 3, 8, rows, rows + 7] {
+            let a = ivf.top_k(&q, k);
+            let b = flat.top_k_serial(&q, k);
+            assert_eq!(a.len(), b.len(), "k={k} rows={rows}");
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.0, y.0, "id mismatch at k={k}");
+                assert_eq!(x.1.to_bits(), y.1.to_bits(), "score bits at k={k}");
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// (b) IVF recall@8 ≥ 0.95 on a clustered 50k×64 workload
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ivf_recall_at_8_meets_floor_on_clustered_workload() {
+    let dim = 64;
+    let rows = 50_000;
+    let n_centers = 64;
+    let mut rng = Rng::new(0xa22);
+
+    // Ground-truth cluster structure: unit-ish centers, tight noise.
+    let mut centers = vec![0.0f32; n_centers * dim];
+    for x in centers.iter_mut() {
+        *x = rng.normal() as f32;
+    }
+    let mut flat = VecStore::with_capacity(dim, rows);
+    let mut v = vec![0.0f32; dim];
+    for id in 0..rows {
+        let c = rng.below(n_centers);
+        for (j, x) in v.iter_mut().enumerate() {
+            *x = centers[c * dim + j] + 0.25 * rng.normal() as f32;
+        }
+        flat.insert(id, &v);
+    }
+
+    let params = IvfParams {
+        nlist: 64,
+        nprobe: 8, // nlist/8
+        exact_below: 1000,
+        kmeans_iters: 4,
+        train_sample: 8192,
+        ..IvfParams::default()
+    };
+    let ivf = IvfStore::from_flat(flat.clone(), params);
+    assert!(ivf.trained());
+    assert!(!ivf.uses_exact());
+    ivf.check_consistency().unwrap();
+
+    let k = 8;
+    let queries = 100;
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for _ in 0..queries {
+        // Near-center queries: the workload the coarse quantizer is for.
+        let c = rng.below(n_centers);
+        let q: Vec<f32> = (0..dim)
+            .map(|j| centers[c * dim + j] + 0.25 * rng.normal() as f32)
+            .collect();
+        let exact = flat.top_k_serial(&q, k);
+        let approx = ivf.top_k(&q, k);
+        total += exact.len();
+        hits += exact
+            .iter()
+            .filter(|(id, _)| approx.iter().any(|(a, _)| a == id))
+            .count();
+    }
+    let recall = hits as f64 / total as f64;
+    assert!(recall >= 0.95, "recall@8 {recall:.3} < 0.95 floor");
+}
+
+// ---------------------------------------------------------------------------
+// (c) insert/remove churn keeps lists, loc map, and flat store in sync
+// ---------------------------------------------------------------------------
+
+#[test]
+fn churn_keeps_posting_lists_consistent_with_model() {
+    let dim = 8;
+    let params = IvfParams {
+        nlist: 6,
+        nprobe: 2,
+        exact_below: 40,
+        retrain_drift: 0.3,
+        kmeans_iters: 4,
+        ..IvfParams::default()
+    };
+    let mut ivf = IvfStore::new(dim, params);
+    let mut model: HashMap<usize, Vec<f32>> = HashMap::new();
+    let mut rng = Rng::new(0xc4u64);
+    let id_space = 120;
+
+    for step in 0..600 {
+        let id = rng.below(id_space);
+        if rng.chance(0.6) {
+            let v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            ivf.insert(id, &v);
+            model.insert(id, v);
+        } else {
+            let removed = ivf.remove(id);
+            assert_eq!(removed, model.remove(&id).is_some(), "remove({id})");
+        }
+        assert_eq!(ivf.len(), model.len());
+        if step % 50 == 0 {
+            ivf.check_consistency().unwrap();
+        }
+    }
+    ivf.check_consistency().unwrap();
+    assert!(ivf.trained(), "churn crossed exact_below and back");
+    for &id in model.keys() {
+        assert!(ivf.contains(id));
+    }
+
+    // Full-probe query after churn is still bit-identical to exact:
+    // every surviving row is reachable through exactly one list.
+    let q: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+    let all = ivf.top_k_with(&q, 10, 6);
+    let exact = ivf.top_k_exact(&q, 10);
+    assert_eq!(all.len(), exact.len());
+    for (x, y) in all.iter().zip(exact.iter()) {
+        assert_eq!(x.0, y.0);
+        assert_eq!(x.1.to_bits(), y.1.to_bits());
+    }
+}
