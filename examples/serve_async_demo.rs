@@ -1,0 +1,78 @@
+//! Serving-plane demo: background gossip overlapping query service.
+//!
+//! Eight collaborative edges serve a gated workload through the async
+//! event loop (`SimSystem::serve_async`), once with gossip in the
+//! foreground on a single worker and once in the background on four —
+//! the exact A/B the serving plane exists for. The printout shows what
+//! moves and what must not:
+//!
+//!   * p50/p99 latency and mean queue wait drop when gossip wire time
+//!     overlaps query service instead of blocking the servers;
+//!   * the gossip-overlap ratio goes from 0 to > 0;
+//!   * the retrieved-chunk digest and tier mix are **identical** —
+//!     overlap is a latency optimization, never a behavior change.
+//!
+//!   cargo run --release --example serve_async_demo
+
+use eaco_rag::config::SystemConfig;
+use eaco_rag::serve::metrics::ServeMetrics;
+use eaco_rag::serve::Driver;
+use eaco_rag::sim::{workload_for, KnowledgeMode, RunStats, SimSystem};
+use eaco_rag::workload::Workload;
+
+const STEPS: usize = 3000;
+
+fn run(background: bool) -> (RunStats, ServeMetrics) {
+    let mut cfg = SystemConfig {
+        num_edges: 8,
+        edge_capacity: 300,
+        ..SystemConfig::default()
+    };
+    cfg.serve.workers = if background { 4 } else { 1 };
+    cfg.serve.gossip_background = background;
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+    let wl = Workload::generate(&sys.corpus, workload_for(&cfg, STEPS), cfg.seed);
+    sys.serve_async(&wl, Driver::Gated)
+}
+
+fn report(label: &str, stats: &RunStats, m: &ServeMetrics) {
+    let (p50, p99) = m.latency_p50_p99();
+    let shed = m.shed_total();
+    println!("  {label}:");
+    println!(
+        "    latency p50 {p50:7.1} ms  p99 {p99:7.1} ms  |  mean wait {:6.1} ms  |  shed {:4} ({:4.1}%)",
+        m.mean_wait_ms(),
+        shed,
+        100.0 * shed as f64 / (m.admitted + shed).max(1) as f64,
+    );
+    println!(
+        "    gossip: {} rounds, {:7.1} ms busy, overlap ratio {:5.3}  |  acc {:5.2}%",
+        m.gossip_rounds,
+        m.gossip_busy_ms,
+        m.overlap_ratio(),
+        stats.accuracy * 100.0,
+    );
+    println!("    {}", m.tier_latency_row());
+    println!("    retrieved digest: {:#018x}", m.retrieved_digest);
+}
+
+fn main() {
+    println!("serve_async demo — 8 edges, gated, {STEPS} steps\n");
+    let (fg_stats, fg) = run(false);
+    report("foreground gossip, 1 worker", &fg_stats, &fg);
+    let (bg_stats, bg) = run(true);
+    report("background gossip, 4 workers", &bg_stats, &bg);
+
+    println!();
+    assert_eq!(
+        fg.retrieved_digest, bg.retrieved_digest,
+        "background gossip changed a retrieved-chunk set"
+    );
+    assert_eq!(fg_stats.tier_queries, bg_stats.tier_queries);
+    println!(
+        "retrieval identical across modes (digest {:#018x}); overlap ratio {:.3} -> {:.3}",
+        fg.retrieved_digest,
+        fg.overlap_ratio(),
+        bg.overlap_ratio()
+    );
+}

@@ -2,7 +2,7 @@
 //! real PJRT execution path (criterion substitute; see DESIGN.md §7).
 //!
 //! Measured here, tracked in EXPERIMENTS.md §Perf, and **emitted as a
-//! machine-readable trajectory file** (`BENCH_PR6.json` at the repo
+//! machine-readable trajectory file** (`BENCH_PR7.json` at the repo
 //! root — see `make bench-json`, `BENCH_OUT=` to override) so every
 //! future PR has a baseline to beat:
 //!   * gate decision latency vs GP observation count (target ≪ 1 ms)
@@ -17,6 +17,9 @@
 //!     full-sort reference, with effective GB/s
 //!   * IVF ANN top-k over the same 100k / 1M stores at nprobe 1/4/8 —
 //!     the sublinear path next to its flat-scan reference
+//!   * serving plane: `serve.enqueue` (bounded priority-queue push/pop)
+//!     and `serve.drain 4edges` (a full collaborative workload through
+//!     the async event loop per iteration)
 //!   * dynamic batcher push/flush throughput
 //!   * PJRT LM forward (b1 vs b8 — batching amortization) and embedder
 //!     (skipped with a notice if artifacts/ is absent)
@@ -38,12 +41,16 @@ use eaco_rag::gating::gp::{Gp, GpScratch, Kernel};
 use eaco_rag::gating::safeobo::{Observation, Qos, SafeObo};
 use eaco_rag::gating::{standard_arms, GateContext};
 use eaco_rag::runtime::{FeatureHasher, Runtime, Tokenizer};
+use eaco_rag::serve::queue::{EdgeQueue, QueuedRequest};
+use eaco_rag::serve::Driver;
+use eaco_rag::sim::{workload_for, KnowledgeMode, SimSystem};
 use eaco_rag::testutil::artifacts_dir;
 use eaco_rag::util::json::Json;
 use eaco_rag::util::rng::Rng;
 use eaco_rag::util::stats::{bench, BenchResult};
 use eaco_rag::vecstore::ivf::{IvfParams, IvfStore};
 use eaco_rag::vecstore::VecStore;
+use eaco_rag::workload::Workload;
 
 fn ctx(rng: &mut Rng) -> GateContext {
     GateContext {
@@ -95,7 +102,7 @@ impl Report {
                 PathBuf::from(env!("CARGO_MANIFEST_DIR"))
                     .parent()
                     .expect("manifest dir has a parent")
-                    .join("BENCH_PR6.json")
+                    .join("BENCH_PR7.json")
             });
         let doc = Json::Arr(self.entries.clone());
         match std::fs::write(&out, doc.to_string() + "\n") {
@@ -287,6 +294,52 @@ fn bench_gp_window(report: &mut Report, n: usize, predict_iters: usize) {
     report.push(&r);
 }
 
+fn bench_serve(report: &mut Report, iters: usize, drain_iters: usize) {
+    // Queue micro: the bounded per-edge structure on the wall-clock
+    // path — push + pop round trip across the priority lanes.
+    {
+        let mut q = EdgeQueue::new(0);
+        let mut rng = Rng::new(17);
+        let mut seq = 0usize;
+        let r = bench("serve.enqueue (push+pop, 3 lanes)", iters, || {
+            seq += 1;
+            q.push(QueuedRequest {
+                seq,
+                qa_id: seq % 571,
+                edge_id: seq % 4,
+                step: seq,
+                priority: (rng.below(3)) as u8,
+                arrival_ms: seq as f64,
+            });
+            std::hint::black_box(q.pop());
+        });
+        report.push(&r);
+    }
+
+    // Event-loop drain: a fresh collaborative system per iteration,
+    // fully drained through serve_workload — the end-to-end cost of
+    // the serving plane itself (dominated by retrieval + gating, so
+    // compare against the `eaco-cluster` rows, not absolute zero).
+    {
+        let cfg = SystemConfig {
+            num_edges: 4,
+            edge_capacity: 200,
+            warmup_steps: 30,
+            ..SystemConfig::default()
+        };
+        let arm = eaco_rag::gating::Arm {
+            retrieval: eaco_rag::gating::Retrieval::EdgeAssisted,
+            gen: eaco_rag::gating::GenLoc::EdgeSlm,
+        };
+        let r = bench("serve.drain 4edges (120-step workload)", drain_iters, || {
+            let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+            let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 120), cfg.seed);
+            std::hint::black_box(sys.serve_async(&wl, Driver::Fixed(arm)));
+        });
+        report.push(&r);
+    }
+}
+
 fn main() {
     println!("\n=== §Perf hot-path benchmarks ===\n");
     let full = std::env::var("EACO_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
@@ -302,6 +355,7 @@ fn main() {
         bench_vecstore(&mut report, 2000, 1, 1);
         bench_ivf(&mut report, 12_000, 1, 8);
         bench_cluster_routing(&mut report, 4, 1);
+        bench_serve(&mut report, 1, 1);
         report.write();
         return;
     }
@@ -409,6 +463,9 @@ fn main() {
     // --- IVF ANN: the sublinear path next to its flat references ---
     bench_ivf(&mut report, 100_000, 200, 64);
     bench_ivf(&mut report, 1_000_000, 50, 256);
+
+    // --- serving plane: queue micro + full event-loop drain ---
+    bench_serve(&mut report, 20_000, 5);
 
     // --- batcher throughput ---
     {

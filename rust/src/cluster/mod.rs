@@ -53,6 +53,32 @@ pub struct RouteDecision {
     pub neighbor_overlap: f64,
 }
 
+/// Wire accounting for one executed gossip round — the serving plane
+/// treats rounds as schedulable work items and derives their virtual
+/// duration from these byte counts (see [`crate::serve`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GossipRound {
+    /// Round number after execution (1-based).
+    pub round: usize,
+    /// Digest advertisements actually sent this round.
+    pub digests_sent: u64,
+    /// Chunks transferred edge↔edge this round.
+    pub chunks: u64,
+    /// Chunk payload bytes moved this round.
+    pub payload_bytes: usize,
+    /// Digest advertisement bytes this round.
+    pub digest_bytes: usize,
+    /// Centroid digest bytes this round (ANN plane only).
+    pub centroid_bytes: usize,
+}
+
+impl GossipRound {
+    /// Total bytes on the wire for this round.
+    pub fn wire_bytes(&self) -> usize {
+        self.payload_bytes + self.digest_bytes + self.centroid_bytes
+    }
+}
+
 /// The edge fleet plus its control plane.
 pub struct EdgeCluster {
     pub nodes: Vec<EdgeNode>,
@@ -77,6 +103,10 @@ pub struct EdgeCluster {
     /// scores neighbors with and that gossip version-suppresses against.
     centroid_known: Vec<Vec<Option<CentroidDigest>>>,
     ann_enabled: bool,
+    /// Liveness per edge (churn hooks [`Self::kill_edge`] /
+    /// [`Self::revive_edge`]). All-true until a kill, in which case the
+    /// topology is rewired around the dead nodes.
+    alive: Vec<bool>,
 }
 
 impl EdgeCluster {
@@ -117,6 +147,7 @@ impl EdgeCluster {
             route_blend: 0.0,
             centroid_known: Vec::new(),
             ann_enabled: false,
+            alive: vec![true; num_edges],
         }
     }
 
@@ -265,12 +296,20 @@ impl EdgeCluster {
         );
     }
 
-    /// Run a gossip round if one is due at `step`. Returns true if a
-    /// round ran.
-    pub fn maybe_gossip(&mut self, corpus: &Corpus, step: usize) -> bool {
-        if !self.gossiper.due(step) {
-            return false;
-        }
+    /// Is a gossip round due at `step`? (Pure; the serving plane polls
+    /// this to schedule rounds as work items.)
+    pub fn gossip_due(&self, step: usize) -> bool {
+        self.gossiper.due(step)
+    }
+
+    /// Run one gossip round unconditionally and report its wire
+    /// accounting. Gossip consumes no simulation RNG, so the caller may
+    /// run a due round at any point before the step's retrieval without
+    /// perturbing the random stream — this is what lets the async
+    /// serving plane execute rounds as background work items while
+    /// staying bit-identical to the in-line cadence.
+    pub fn run_gossip_round(&mut self, corpus: &Corpus, step: usize) -> GossipRound {
+        let before = self.gossiper.stats;
         self.gossiper.run_round(
             &self.topology,
             &mut self.nodes,
@@ -283,7 +322,93 @@ impl EdgeCluster {
             self.gossiper
                 .sync_centroids(&self.topology, &self.nodes, &mut self.centroid_known);
         }
+        let after = self.gossiper.stats;
+        GossipRound {
+            round: self.gossiper.round(),
+            digests_sent: after.digests_sent - before.digests_sent,
+            chunks: after.chunks_transferred - before.chunks_transferred,
+            payload_bytes: after.bytes_transferred - before.bytes_transferred,
+            digest_bytes: after.digest_bytes - before.digest_bytes,
+            centroid_bytes: after.centroid_bytes - before.centroid_bytes,
+        }
+    }
+
+    /// Run a gossip round if one is due at `step`. Returns true if a
+    /// round ran.
+    pub fn maybe_gossip(&mut self, corpus: &Corpus, step: usize) -> bool {
+        if !self.gossiper.due(step) {
+            return false;
+        }
+        self.run_gossip_round(corpus, step);
         true
+    }
+
+    /// Is edge `e` alive (serving + gossiping)?
+    pub fn is_alive(&self, e: usize) -> bool {
+        self.alive[e]
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
+    }
+
+    /// Kill an edge mid-run: its store is wiped (a machine loss, not a
+    /// graceful drain), placement/gossip forget everything they knew
+    /// about it (so a revived edge re-syncs from scratch instead of
+    /// being digest-suppressed), and the topology rewires around it —
+    /// live edges adopt their nearest live peers and nobody keeps a
+    /// dead neighbor. No-op if already dead.
+    pub fn kill_edge(&mut self, e: usize) {
+        if !self.alive[e] {
+            return;
+        }
+        self.alive[e] = false;
+        let resident: Vec<ChunkId> = self.nodes[e].resident_chunks().collect();
+        for cid in resident {
+            self.nodes[e].evict_resident(cid);
+        }
+        self.placement.forget_edge(e);
+        self.gossiper.forget_edge(e);
+        if self.ann_enabled {
+            for row in self.centroid_known.iter_mut() {
+                row[e] = None;
+            }
+            for known in self.centroid_known[e].iter_mut() {
+                *known = None;
+            }
+        }
+        self.topology.rewire(&self.alive);
+    }
+
+    /// Revive a dead edge: it rejoins the topology with an empty store
+    /// and cold-syncs through subsequent gossip rounds (its neighbors'
+    /// digests are all unseen, so the first due round starts refilling
+    /// it). No-op if already alive.
+    pub fn revive_edge(&mut self, e: usize) {
+        if self.alive[e] {
+            return;
+        }
+        self.alive[e] = true;
+        self.topology.rewire(&self.alive);
+    }
+
+    /// The cheapest-link alive edge to serve traffic homed at `e`:
+    /// `e` itself when alive, else the alive edge with the lowest
+    /// netsim link cost (ties → lowest id), else `None` when the whole
+    /// fleet is down.
+    pub fn nearest_alive(&self, e: usize) -> Option<usize> {
+        if self.alive.get(e).copied().unwrap_or(false) {
+            return Some(e);
+        }
+        (0..self.nodes.len())
+            .filter(|&x| x != e && self.alive[x])
+            .min_by(|&a, &b| {
+                self.topology
+                    .link_cost_ms(e, a)
+                    .partial_cmp(&self.topology.link_cost_ms(e, b))
+                    .unwrap()
+                    .then(a.cmp(&b))
+            })
     }
 
     /// Aggregate (stale, resident) counts across the fleet.
@@ -492,5 +617,111 @@ mod tests {
         assert!(cl.nodes[1].contains(2) || cl.nodes[1].contains(11));
         assert!(cl.bytes_gossiped() > 0);
         assert!(!cl.maybe_gossip(&c, 26), "next round not due yet");
+    }
+
+    #[test]
+    fn gossip_round_as_work_item_reports_wire_accounting() {
+        let c = Corpus::generate(Profile::Wiki, 6);
+        let mut cl = cluster(3, 2, 400, &c);
+        let plan = UpdatePlan { edge_id: 0, chunks: (0..40).collect(), communities: vec![] };
+        cl.apply_cloud_update(&c, 0, &plan);
+        cl.observe_query(c.chunks[3].topic, &[3, 17, 25], 5);
+        assert!(cl.gossip_due(25));
+        let bytes0 = cl.bytes_gossiped();
+        let report = cl.run_gossip_round(&c, 25);
+        assert_eq!(report.round, 1);
+        assert!(report.digests_sent > 0);
+        assert!(report.chunks > 0, "hot chunks should transfer on round 1");
+        assert_eq!(report.payload_bytes, cl.bytes_gossiped() - bytes0);
+        assert!(report.digest_bytes > 0);
+        assert!(report.wire_bytes() >= report.payload_bytes + report.digest_bytes);
+        assert!(!cl.gossip_due(26), "running the round advances the cadence");
+        // Second round: deltas are per-round, not cumulative.
+        let r2 = cl.run_gossip_round(&c, 50);
+        assert_eq!(r2.round, 2);
+        assert_eq!(bytes0 + report.payload_bytes + r2.payload_bytes, cl.bytes_gossiped());
+    }
+
+    #[test]
+    fn kill_edge_wipes_and_reroutes_topology() {
+        let c = Corpus::generate(Profile::Wiki, 6);
+        let mut cl = cluster(4, 2, 300, &c);
+        let chunks: Vec<ChunkId> = (0..100).collect();
+        for e in 0..4 {
+            cl.nodes[e].apply_update(&c, &chunks);
+        }
+        assert_eq!(cl.alive_count(), 4);
+        cl.kill_edge(1);
+        assert!(!cl.is_alive(1));
+        assert_eq!(cl.alive_count(), 3);
+        assert!(cl.nodes[1].is_empty(), "dead edge's store must be wiped");
+        assert!(cl.topology.neighbors(1).is_empty());
+        for e in [0usize, 2, 3] {
+            assert!(!cl.topology.neighbors(e).contains(&1));
+        }
+        // Killing twice is a no-op.
+        cl.kill_edge(1);
+        assert_eq!(cl.alive_count(), 3);
+        // nearest_alive: self when alive, cheapest alive peer when dead.
+        assert_eq!(cl.nearest_alive(0), Some(0));
+        let alt = cl.nearest_alive(1).unwrap();
+        assert_ne!(alt, 1);
+        assert!(cl.is_alive(alt));
+        for x in [0usize, 2, 3] {
+            assert!(
+                cl.topology.link_cost_ms(1, alt) <= cl.topology.link_cost_ms(1, x),
+                "nearest_alive must pick the cheapest link"
+            );
+        }
+        // Summary routing no longer selects the dead edge either: its
+        // store (and thus summary) is empty and it is nobody's neighbor.
+        let qa = &c.qa[0];
+        let kws = c.qa_keywords(qa);
+        for e in [0usize, 2, 3] {
+            let dec = cl.route(e, &kws);
+            assert_ne!(dec.edge, 1, "routed to a dead edge");
+        }
+    }
+
+    #[test]
+    fn revived_edge_cold_syncs_via_gossip() {
+        let c = Corpus::generate(Profile::Wiki, 6);
+        let mut cl = cluster(3, 2, 400, &c);
+        let chunks: Vec<ChunkId> = (0..120).collect();
+        for e in 0..3 {
+            cl.nodes[e].apply_update(&c, &chunks);
+        }
+        // Heat some chunks so digests advertise them, then a first round
+        // populates the suppression state.
+        cl.observe_query(c.chunks[5].topic, &[5, 9, 13], 2);
+        assert!(cl.maybe_gossip(&c, 25));
+        cl.kill_edge(2);
+        assert!(cl.nodes[2].is_empty());
+        cl.revive_edge(2);
+        assert!(cl.is_alive(2));
+        assert_eq!(cl.topology.neighbors(2).len(), 2, "revived edge rejoins the graph");
+        // Keep demand warm and run the next due rounds: the revived
+        // edge's store refills from its neighbors' digests (cold sync)
+        // even though those digests were synced once before the death.
+        for step in [50usize, 75, 100] {
+            cl.observe_query(c.chunks[5].topic, &[5, 9, 13], step);
+            assert!(cl.maybe_gossip(&c, step));
+        }
+        assert!(!cl.nodes[2].is_empty(), "revived edge did not cold-sync");
+        // Revive on an alive edge is a no-op.
+        cl.revive_edge(2);
+        assert_eq!(cl.alive_count(), 3);
+    }
+
+    #[test]
+    fn nearest_alive_none_when_fleet_down() {
+        let c = Corpus::generate(Profile::Wiki, 6);
+        let mut cl = cluster(3, 2, 100, &c);
+        for e in 0..3 {
+            cl.kill_edge(e);
+        }
+        assert_eq!(cl.alive_count(), 0);
+        assert_eq!(cl.nearest_alive(0), None);
+        assert_eq!(cl.nearest_alive(2), None);
     }
 }

@@ -347,6 +347,15 @@ impl PlacementEngine {
     pub fn pinned_count(&self, edge: usize) -> usize {
         self.pins[edge].len()
     }
+
+    /// Forget everything known about `edge`'s store (churn: the machine
+    /// died and its store was wiped). Version and pin maps must not
+    /// survive the wipe — a revived edge starts from a genuinely empty
+    /// state and re-admits content through the normal gossip path.
+    pub fn forget_edge(&mut self, edge: usize) {
+        self.versions[edge].clear();
+        self.pins[edge].clear();
+    }
 }
 
 #[cfg(test)]

@@ -157,6 +157,23 @@ impl Gossiper {
         step >= self.next_step
     }
 
+    /// Forget all suppression state involving edge `e` (churn: the edge
+    /// died or was wiped). Zeroing `seen[e][*]` makes a revived `e`
+    /// re-pull every neighbor digest (cold sync), and zeroing
+    /// `seen[*][e]` makes neighbors re-evaluate whatever a revived `e`
+    /// advertises instead of trusting pre-death fingerprints.
+    pub fn forget_edge(&mut self, e: usize) {
+        for (r, row) in self.seen.iter_mut().enumerate() {
+            if r == e {
+                for f in row.iter_mut() {
+                    *f = 0;
+                }
+            } else if e < row.len() {
+                row[e] = 0;
+            }
+        }
+    }
+
     /// Run one gossip round over every directed neighbor link, in
     /// sender-id order (deterministic). Mutates receiver stores through
     /// the placement engine; a transfer changes the receiver's own

@@ -71,6 +71,33 @@ impl Topology {
     pub fn num_links(&self) -> usize {
         self.neighbors.iter().map(|v| v.len()).sum()
     }
+
+    /// Rewire the graph around dead edges: each alive edge re-selects
+    /// its `degree` cheapest peers *among alive edges* (same cost/tie
+    /// rules as [`Topology::build`], so an all-alive rewire reproduces
+    /// the built graph exactly); dead edges keep no neighbors and appear
+    /// in no one's list. Link costs are static (the machines' positions
+    /// don't move), only adjacency changes.
+    pub fn rewire(&mut self, alive: &[bool]) {
+        debug_assert_eq!(alive.len(), self.num_edges);
+        let n = self.num_edges;
+        for a in 0..n {
+            if !alive[a] {
+                self.neighbors[a].clear();
+                continue;
+            }
+            let mut peers: Vec<usize> = (0..n).filter(|&b| b != a && alive[b]).collect();
+            peers.sort_by(|&x, &y| {
+                self.cost_ms[a * n + x]
+                    .partial_cmp(&self.cost_ms[a * n + y])
+                    .unwrap()
+                    .then(x.cmp(&y))
+            });
+            peers.truncate(self.degree);
+            peers.sort_unstable();
+            self.neighbors[a] = peers;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -120,5 +147,39 @@ mod tests {
         let t = topo(1, 2);
         assert_eq!(t.degree, 0);
         assert!(t.neighbors(0).is_empty());
+    }
+
+    #[test]
+    fn rewire_routes_around_dead_edges() {
+        let mut t = topo(8, 2);
+        let built: Vec<Vec<usize>> = (0..8).map(|e| t.neighbors(e).to_vec()).collect();
+        // Kill edge 1 (a ring neighbor of 0 and 2).
+        let mut alive = vec![true; 8];
+        alive[1] = false;
+        t.rewire(&alive);
+        assert!(t.neighbors(1).is_empty(), "dead edge keeps neighbors");
+        for e in [0usize, 2, 3, 7] {
+            assert!(!t.neighbors(e).contains(&1), "edge {e} kept dead neighbor");
+            assert_eq!(t.neighbors(e).len(), 2, "degree not restored at {e}");
+        }
+        // Edge 0's replacement for 1 is its next-cheapest alive peer (2).
+        assert_eq!(t.neighbors(0), &[2, 7]);
+        // Reviving everyone reproduces the built graph exactly.
+        t.rewire(&vec![true; 8]);
+        for e in 0..8 {
+            assert_eq!(t.neighbors(e), built[e].as_slice());
+        }
+    }
+
+    #[test]
+    fn rewire_with_one_survivor_leaves_it_isolated() {
+        let mut t = topo(4, 2);
+        let mut alive = vec![false; 4];
+        alive[2] = true;
+        t.rewire(&alive);
+        for e in 0..4 {
+            assert!(t.neighbors(e).is_empty());
+        }
+        assert_eq!(t.num_links(), 0);
     }
 }

@@ -176,6 +176,42 @@ impl Default for AnnConfig {
     }
 }
 
+/// Knobs for the asynchronous serving plane ([`crate::serve`]). The
+/// defaults deliberately make `serve_async` bit-identical to the
+/// synchronous sim paths: unbounded queue, one virtual worker,
+/// admission off, gossip in the foreground.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Per-edge in-flight capacity; arrivals beyond it are shed with
+    /// backpressure accounting. 0 means unbounded (default — a finite
+    /// default would shed queries and silently break equivalence with
+    /// the synchronous path).
+    pub queue_cap: usize,
+    /// Virtual servers draining the queues (and background-pool
+    /// threads when `gossip_background` is on).
+    pub workers: usize,
+    /// End-to-end latency SLO the admission rule compares against.
+    pub slo_ms: f64,
+    /// What to do when predicted latency blows the SLO
+    /// (none / shed / downgrade).
+    pub admission: crate::serve::queue::AdmissionPolicy,
+    /// Run gossip rounds as background work items overlapping query
+    /// service instead of blocking every server (foreground).
+    pub gossip_background: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue_cap: 0,
+            workers: 1,
+            slo_ms: 2000.0,
+            admission: crate::serve::queue::AdmissionPolicy::None,
+            gossip_background: false,
+        }
+    }
+}
+
 /// Full system configuration.
 #[derive(Clone, Debug)]
 pub struct SystemConfig {
@@ -206,6 +242,7 @@ pub struct SystemConfig {
     pub net: NetSpec,
     pub cluster: ClusterConfig,
     pub ann: AnnConfig,
+    pub serve: ServeConfig,
     pub seed: u64,
 }
 
@@ -229,6 +266,7 @@ impl Default for SystemConfig {
             net: NetSpec::default(),
             cluster: ClusterConfig::default(),
             ann: AnnConfig::default(),
+            serve: ServeConfig::default(),
             seed: 42,
         }
     }
@@ -336,6 +374,20 @@ impl SystemConfig {
             }
             "ann.route_blend" => {
                 self.ann.route_blend = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "serve.queue_cap" => {
+                self.serve.queue_cap = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "serve.workers" => {
+                self.serve.workers = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "serve.slo_ms" => self.serve.slo_ms = val.parse().map_err(|_| bad(key, val))?,
+            "serve.admission" => {
+                self.serve.admission = crate::serve::queue::AdmissionPolicy::parse(val)
+                    .ok_or_else(|| bad(key, val))?;
+            }
+            "serve.gossip_background" => {
+                self.serve.gossip_background = val.parse().map_err(|_| bad(key, val))?;
             }
             other => return Err(format!("unknown config key {other:?}")),
         }
@@ -456,6 +508,36 @@ mod tests {
         assert!(SystemConfig::from_toml("[ann]\nbogus = 1").is_err());
         // Untouched defaults: exact fallback covers paper-scale stores.
         assert!(SystemConfig::default().ann.exact_below > 1000);
+    }
+
+    #[test]
+    fn serve_knobs_from_toml() {
+        use crate::serve::queue::AdmissionPolicy;
+        let cfg = SystemConfig::from_toml(
+            r#"
+            [serve]
+            queue_cap = 64
+            workers = 4
+            slo_ms = 1500.5
+            admission = "downgrade"
+            gossip_background = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.queue_cap, 64);
+        assert_eq!(cfg.serve.workers, 4);
+        assert_eq!(cfg.serve.slo_ms, 1500.5);
+        assert_eq!(cfg.serve.admission, AdmissionPolicy::Downgrade);
+        assert!(cfg.serve.gossip_background);
+        assert!(SystemConfig::from_toml("[serve]\nbogus = 1").is_err());
+        assert!(SystemConfig::from_toml("[serve]\nadmission = \"nope\"").is_err());
+        // The defaults keep serve_async ≡ the synchronous path: no cap,
+        // one worker, admission off, foreground gossip.
+        let d = SystemConfig::default().serve;
+        assert_eq!(d.queue_cap, 0);
+        assert_eq!(d.workers, 1);
+        assert_eq!(d.admission, AdmissionPolicy::None);
+        assert!(!d.gossip_background);
     }
 
     #[test]

@@ -26,9 +26,12 @@ use anyhow::{anyhow, Result};
 
 use crate::config::SystemConfig;
 use crate::gating::safeobo::{Observation, Qos, SafeObo};
-use crate::gating::{standard_arms, GenLoc};
+use crate::gating::{standard_arms, Arm, GenLoc, Retrieval};
+use crate::netsim::Link;
 use crate::runtime::{ExecTiming, Runtime};
+use crate::serve::queue::{admission_decision, Admission, AdmissionPolicy};
 use crate::sim::{KnowledgeMode, SimSystem};
+use crate::util::stats::Running;
 use crate::workload::Workload;
 use batcher::{DynamicBatcher, GenBatch, GenRequest};
 use metrics::{Metrics, RequestRecord};
@@ -146,6 +149,10 @@ pub struct Coordinator {
     executor: Executor,
     /// Max real tokens decoded per request (each one a real PJRT pass).
     pub gen_tokens: usize,
+    /// Requests shed by deadline-aware admission (`[serve]` policy).
+    pub shed_deadline: usize,
+    /// Requests downgraded to the cheap local arm by admission.
+    pub downgraded: usize,
 }
 
 impl Coordinator {
@@ -177,6 +184,8 @@ impl Coordinator {
             cfg,
             executor,
             gen_tokens,
+            shed_deadline: 0,
+            downgraded: 0,
         })
     }
 
@@ -186,20 +195,58 @@ impl Coordinator {
         let mut now_ms = 0.0f64;
         let mut pending: Vec<Option<Pending>> = Vec::new();
         let mut inflight_batches = 0usize;
+        // Deadline-aware admission (`[serve]` knobs): predicted latency
+        // = in-flight backlog × mean observed service + monitored
+        // access link + one mean service. All jitter-free, so shedding
+        // never perturbs the virtual RNG streams of admitted requests.
+        let scfg = self.cfg.serve.clone();
+        let downgrade_idx = self
+            .gate
+            .arms
+            .iter()
+            .position(|a| *a == Arm { retrieval: Retrieval::LocalNaive, gen: GenLoc::EdgeSlm });
+        let mut svc_est = Running::new();
+        const DEFAULT_SVC_MS: f64 = 500.0;
 
         for ev in workload.events.clone() {
             now_ms += ev.gap_ms;
 
+            // 0. Admission gate, ahead of any gate/sim work so a shed
+            //    request costs nothing downstream.
+            let mut downgrade = false;
+            if scfg.admission != AdmissionPolicy::None {
+                let svc_ms = if svc_est.count() > 0 { svc_est.mean() } else { DEFAULT_SVC_MS };
+                let predicted_ms = inflight_batches as f64 * svc_ms
+                    + self.sim.net.expected_delay_ms(Link::UserToEdge(ev.edge_id), ev.step)
+                    + svc_ms;
+                match admission_decision(scfg.admission, predicted_ms, scfg.slo_ms) {
+                    Admission::Accept => {}
+                    Admission::Shed => {
+                        self.shed_deadline += 1;
+                        continue;
+                    }
+                    Admission::Downgrade => {
+                        downgrade = true;
+                        self.downgraded += 1;
+                    }
+                }
+            }
+
             // 1. Context + gate decision.
             let ctx = self.sim.gate_context(ev.qa_id, ev.edge_id, ev.step);
             let decision = self.gate.decide(&ctx);
-            let arm = self.gate.arms[decision.arm_idx];
+            let arm_idx = match (downgrade, downgrade_idx) {
+                (true, Some(d)) => d,
+                _ => decision.arm_idx,
+            };
+            let arm = self.gate.arms[arm_idx];
 
             // 2. Retrieval + virtual outcome + grading + adaptive update.
             let (outcome, correct) = self.sim.serve(ev.qa_id, ev.edge_id, ev.step, arm);
+            svc_est.push(outcome.delay_s * 1000.0);
             self.gate.observe(
                 &ctx,
-                decision.arm_idx,
+                arm_idx,
                 Observation {
                     resource_cost: outcome.resource_cost,
                     delay_cost: outcome.delay_cost,

@@ -457,4 +457,49 @@ mod tests {
         assert_eq!(e.stats.updates, 2);
         assert_eq!(e.stats.inserted, 4);
     }
+
+    /// Regression for retrieve-after-churn on the hybrid path (see the
+    /// remove-then-top_k note in `vecstore`): evicting every resident
+    /// chunk leaves the semantic store empty, and a hybrid retrieve
+    /// against the empty store must answer cleanly (exact fallback,
+    /// perfect recall, no results) and recover after re-insertion.
+    #[test]
+    fn hybrid_after_full_churn_empty_semantic_store() {
+        use crate::config::AnnConfig;
+        use crate::runtime::FeatureHasher;
+        use semantic::embed_keywords;
+
+        let (c, mut e) = setup();
+        let ann = AnnConfig::default();
+        e.apply_update(&c, &c.qa[0].supporting_chunks.clone());
+        e.enable_semantic(&c, &ann, 7);
+        assert!(e.len() > 0);
+
+        // Full churn: evict every resident chunk (swap-remove path in
+        // the backing vector store runs once per eviction).
+        let resident: Vec<ChunkId> = e.resident_chunks().collect();
+        for cid in resident {
+            assert!(e.evict_resident(cid));
+        }
+        assert!(e.is_empty());
+
+        let kws = c.qa_keywords(&c.qa[0]);
+        let hasher = FeatureHasher::new(ann.embed_dim);
+        let q = embed_keywords(&hasher, &kws);
+        let (got, probe) = e.retrieve_hybrid(&kws, &q, 6);
+        assert!(got.is_empty(), "empty store yields no chunks");
+        let probe = probe.expect("semantic enabled => probe present");
+        assert_eq!(probe.recall_at_k, 1.0);
+        assert!(probe.exact_fallback, "empty store takes the exact path");
+
+        // The store recovers: re-insert support and retrieve again.
+        e.apply_update(&c, &c.qa[0].supporting_chunks.clone());
+        let (got, probe) = e.retrieve_hybrid(&kws, &q, 6);
+        assert!(!got.is_empty());
+        assert!(probe.is_some());
+        assert!(
+            c.qa[0].supporting_chunks.iter().any(|s| got.contains(s)),
+            "support retrievable after churn + refill"
+        );
+    }
 }

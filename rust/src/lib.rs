@@ -37,6 +37,9 @@
 //! * [`gating`] — GP regression + SafeOBO collaborative gate (Alg. 1).
 //! * [`runtime`] — PJRT artifact loading/execution, tokenizer, generation.
 //! * [`coordinator`] — router, dynamic batcher, serving pipeline, metrics.
+//! * [`serve`] — async serving plane: deterministic event loop with
+//!   per-edge bounded queues, deadline-aware admission, background
+//!   gossip as schedulable work, and virtual/wall clock abstraction.
 //! * [`sim`] — full-system simulation harness used by benches/examples.
 //! * [`testutil`] — mini property-testing framework.
 
@@ -54,6 +57,7 @@ pub mod linalg;
 pub mod netsim;
 pub mod oracle;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod testutil;
 pub mod util;

@@ -18,6 +18,7 @@ use eaco_rag::config::{QosPreset, SystemConfig};
 use eaco_rag::coordinator::Coordinator;
 use eaco_rag::corpus::Profile;
 use eaco_rag::runtime::Manifest;
+use eaco_rag::serve::Driver;
 use eaco_rag::sim::{workload_for, KnowledgeMode, SimSystem};
 use eaco_rag::util::cli::Args;
 use eaco_rag::workload::Workload;
@@ -74,6 +75,8 @@ fn serve(argv: Vec<String>) -> i32 {
     let a = match common("eaco-rag serve", "real PJRT serving")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("gen-tokens", "4", "real tokens decoded per request")
+        .opt("admission", "none", "admission policy: none | shed | downgrade")
+        .opt("slo-ms", "2000", "admission SLO target (ms)")
         .parse_from(argv)
     {
         Ok(a) => a,
@@ -82,14 +85,24 @@ fn serve(argv: Vec<String>) -> i32 {
             return 2;
         }
     };
-    let cfg = build_cfg(&a);
+    let mut cfg = build_cfg(&a);
+    match eaco_rag::serve::queue::AdmissionPolicy::parse(&a.get("admission")) {
+        Some(p) => cfg.serve.admission = p,
+        None => {
+            eprintln!("error: bad --admission {:?} (none | shed | downgrade)", a.get("admission"));
+            return 2;
+        }
+    }
+    cfg.serve.slo_ms = a.get_usize("slo-ms") as f64;
     let steps = a.get_usize("steps");
     let artifacts = PathBuf::from(a.get("artifacts"));
     println!(
-        "eaco-rag serve: dataset={} steps={steps} qos={} edges={}",
+        "eaco-rag serve: dataset={} steps={steps} qos={} edges={} admission={} slo={:.0}ms",
         cfg.dataset.name(),
         cfg.qos.name(),
-        cfg.num_edges
+        cfg.num_edges,
+        cfg.serve.admission.name(),
+        cfg.serve.slo_ms
     );
     let mut coord = match Coordinator::new(cfg.clone(), &artifacts, a.get_usize("gen-tokens")) {
         Ok(c) => c,
@@ -105,6 +118,13 @@ fn serve(argv: Vec<String>) -> i32 {
             println!("{}", coord.metrics.summary());
             println!("arm usage: {:?}", coord.metrics.arm_histogram());
             println!("mean batch size: {:.2}", coord.batcher.mean_batch_size());
+            println!(
+                "serve plane: admission={} slo={:.0}ms shed={} downgraded={}",
+                coord.cfg.serve.admission.name(),
+                coord.cfg.serve.slo_ms,
+                coord.shed_deadline,
+                coord.downgraded
+            );
             0
         }
         Err(e) => {
@@ -163,6 +183,19 @@ fn simulate(argv: Vec<String>) -> i32 {
         stats.bytes_replicated as f64 / 1024.0,
     );
     println!("         {}", stats.ann_row());
+    // The async serving plane over the same cluster: gated queries with
+    // background gossip on 4 workers. Tier mix / hits / bytes stay
+    // bit-identical to the synchronous row — only the latency model
+    // (queueing, overlap) is new.
+    let mut cfg_s = cfg.clone();
+    cfg_s.serve.workers = 4;
+    cfg_s.serve.gossip_background = true;
+    let mut sys = SimSystem::new(cfg_s.clone(), KnowledgeMode::Collaborative);
+    let wl = Workload::generate(&sys.corpus, workload_for(&cfg_s, steps), cfg_s.seed);
+    let (stats, serve_m) = sys.serve_async(&wl, Driver::Gated);
+    println!("{:>12}: {}", "eaco-serve", stats.row());
+    println!("         serve: {}", serve_m.row());
+    println!("         {}", serve_m.tier_latency_row());
     0
 }
 

@@ -1,0 +1,107 @@
+//! Virtual/wall clock abstraction for the serving plane.
+//!
+//! The contract (documented in ROADMAP.md §serve):
+//!
+//! * **Virtual** — a discrete-event clock owned by the serve loop. Time
+//!   only moves when [`ServeClock::advance_to`] is called with the
+//!   timestamp of the event being dispatched, and it never moves
+//!   backwards. Every timestamp is derived from workload data
+//!   (`QueryEvent::gap_ms`) and deterministic service models, so a run
+//!   under the virtual clock is **bit-reproducible**: same seed ⇒ same
+//!   event order ⇒ same `RunStats`, regardless of how many OS threads
+//!   the executor uses (see `tests/serve_determinism.rs`).
+//! * **Wall** — a monotonic real clock (`std::time::Instant`) for real
+//!   serving runs. `advance_to` is a no-op (real time cannot be set)
+//!   and `now_ms` reads elapsed wall time. Nothing derived from a wall
+//!   clock may feed determinism-checked stats — wall readings live only
+//!   in observability fields that [`super::metrics::ServeMetrics::digest`]
+//!   excludes.
+
+use std::time::Instant;
+
+/// The serving plane's single time authority.
+#[derive(Clone, Debug)]
+pub enum ServeClock {
+    /// Discrete-event time in milliseconds since run start.
+    Virtual { now_ms: f64 },
+    /// Monotonic wall time since construction.
+    Wall { start: Instant },
+}
+
+impl ServeClock {
+    /// A virtual clock starting at t = 0 ms.
+    pub fn virtual_clock() -> ServeClock {
+        ServeClock::Virtual { now_ms: 0.0 }
+    }
+
+    /// A wall clock anchored at "now".
+    pub fn wall() -> ServeClock {
+        ServeClock::Wall { start: Instant::now() }
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, ServeClock::Virtual { .. })
+    }
+
+    /// Current time in milliseconds since run start.
+    pub fn now_ms(&self) -> f64 {
+        match self {
+            ServeClock::Virtual { now_ms } => *now_ms,
+            ServeClock::Wall { start } => start.elapsed().as_secs_f64() * 1e3,
+        }
+    }
+
+    /// Advance a virtual clock to an event's timestamp. Time never runs
+    /// backwards: an earlier timestamp leaves the clock where it is (the
+    /// event heap pops in time order, so this only happens for
+    /// same-instant ties). No-op on a wall clock.
+    pub fn advance_to(&mut self, t_ms: f64) {
+        if let ServeClock::Virtual { now_ms } = self {
+            debug_assert!(t_ms + 1e-9 >= *now_ms, "clock moved backwards: {now_ms} -> {t_ms}");
+            if t_ms > *now_ms {
+                *now_ms = t_ms;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_is_set_not_sampled() {
+        let mut c = ServeClock::virtual_clock();
+        assert!(c.is_virtual());
+        assert_eq!(c.now_ms(), 0.0);
+        c.advance_to(12.5);
+        assert_eq!(c.now_ms(), 12.5);
+        // Same-instant tie: stays put.
+        c.advance_to(12.5);
+        assert_eq!(c.now_ms(), 12.5);
+        c.advance_to(100.0);
+        assert_eq!(c.now_ms(), 100.0);
+    }
+
+    #[test]
+    fn virtual_clock_deterministic_across_instances() {
+        let mut a = ServeClock::virtual_clock();
+        let mut b = ServeClock::virtual_clock();
+        for t in [3.0, 7.25, 7.25, 91.5] {
+            a.advance_to(t);
+            b.advance_to(t);
+            assert_eq!(a.now_ms().to_bits(), b.now_ms().to_bits());
+        }
+    }
+
+    #[test]
+    fn wall_clock_monotone_and_unsettable() {
+        let mut c = ServeClock::wall();
+        assert!(!c.is_virtual());
+        let t0 = c.now_ms();
+        c.advance_to(1e12); // ignored
+        let t1 = c.now_ms();
+        assert!(t1 >= t0);
+        assert!(t1 < 1e9, "advance_to must not set wall time");
+    }
+}

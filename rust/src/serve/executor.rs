@@ -1,0 +1,280 @@
+//! Offline-deps-only event-loop machinery: a deterministic event heap
+//! keyed by the serve clock, and a `std::thread` worker pool (no tokio)
+//! that absorbs background gossip wire-work.
+//!
+//! Determinism split:
+//!
+//! * [`EventHeap`] orders *logical* work. Pops are totally ordered by
+//!   `(time, insertion sequence)`, so the loop that drains it is
+//!   bit-reproducible no matter how events were interleaved at push
+//!   time.
+//! * [`WorkerPool`] absorbs *physical* work — per-round gossip wire
+//!   checksums standing in for serialization/transfer CPU. Jobs complete
+//!   in nondeterministic thread order, so every job result is designed
+//!   to be order-independent: per-job checksums are XOR-folded, and the
+//!   only order-sensitive observable (wall busy time) is excluded from
+//!   [`super::metrics::ServeMetrics::digest`].
+
+use std::collections::BinaryHeap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A min-heap of timed events. Ties at the same timestamp pop in
+/// insertion order. Timestamps must be finite and non-negative
+/// (non-negative IEEE-754 doubles order correctly by their bit
+/// patterns, which gives a total `Ord` without float comparisons).
+#[derive(Debug)]
+pub struct EventHeap<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+#[derive(Debug)]
+struct Entry<T> {
+    key: (u64, u64),
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest first.
+        other.key.cmp(&self.key)
+    }
+}
+
+impl<T> EventHeap<T> {
+    pub fn new() -> EventHeap<T> {
+        EventHeap { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `item` at `time_ms` (finite, >= 0).
+    pub fn push(&mut self, time_ms: f64, item: T) {
+        debug_assert!(time_ms.is_finite() && time_ms >= 0.0, "bad event time {time_ms}");
+        let key = (time_ms.to_bits(), self.seq);
+        self.seq += 1;
+        self.heap.push(Entry { key, item });
+    }
+
+    /// Pop the earliest event as `(time_ms, item)`.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|e| (f64::from_bits(e.key.0), e.item))
+    }
+}
+
+impl<T> Default for EventHeap<T> {
+    fn default() -> Self {
+        EventHeap::new()
+    }
+}
+
+/// Background work shipped to the pool.
+#[derive(Clone, Copy, Debug)]
+pub enum Job {
+    /// Wire-level work for one gossip round: checksum `bytes` of
+    /// payload for round `round`. Stands in for
+    /// serialization/compression CPU that real gossip would burn.
+    GossipWire { round: usize, bytes: usize },
+}
+
+/// Result of one background job.
+#[derive(Clone, Copy, Debug)]
+pub struct JobDone {
+    pub checksum: u64,
+    pub busy_ns: u128,
+}
+
+/// Deterministic per-job checksum: FNV-1a folded over a mix stream
+/// whose length scales with the payload (capped), so bigger rounds cost
+/// proportionally more CPU. Depends only on `(round, bytes)` — never on
+/// thread identity or timing.
+pub fn wire_checksum(round: usize, bytes: usize) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    let mut x = ((round as u64) << 32) ^ (bytes as u64) ^ 0x9e37_79b9_7f4a_7c15;
+    let iters = bytes.clamp(1, 1 << 14);
+    for _ in 0..iters {
+        x = x.wrapping_mul(FNV_PRIME) ^ (x >> 29);
+        h = (h ^ x).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// A fixed-size `std::thread` pool fed over channels. Workers pull jobs
+/// from a shared receiver and report [`JobDone`] results; [`WorkerPool::drain`]
+/// collects exactly the outstanding results and XOR-folds their
+/// checksums (order-independent by construction).
+pub struct WorkerPool {
+    job_tx: Option<Sender<Job>>,
+    done_rx: Receiver<JobDone>,
+    handles: Vec<JoinHandle<()>>,
+    outstanding: usize,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let (job_tx, job_rx) = channel::<Job>();
+        let (done_tx, done_rx) = channel::<JobDone>();
+        let shared_rx = Arc::new(Mutex::new(job_rx));
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = Arc::clone(&shared_rx);
+            let tx = done_tx.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().expect("serve worker rx poisoned");
+                    guard.recv()
+                };
+                let Ok(job) = job else { break };
+                let t0 = Instant::now();
+                let checksum = match job {
+                    Job::GossipWire { round, bytes } => wire_checksum(round, bytes),
+                };
+                let busy_ns = t0.elapsed().as_nanos();
+                if tx.send(JobDone { checksum, busy_ns }).is_err() {
+                    break;
+                }
+            }));
+        }
+        WorkerPool { job_tx: Some(job_tx), done_rx, handles, outstanding: 0 }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Ship a job to the pool.
+    pub fn submit(&mut self, job: Job) {
+        self.job_tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(job)
+            .expect("serve worker pool hung up");
+        self.outstanding += 1;
+    }
+
+    /// Block until every submitted job has completed. Returns
+    /// `(xor-folded checksum, total busy ns, jobs completed)` for the
+    /// jobs drained by *this* call.
+    pub fn drain(&mut self) -> (u64, u128, usize) {
+        let mut checksum = 0u64;
+        let mut busy_ns = 0u128;
+        let n = self.outstanding;
+        for _ in 0..n {
+            let done = self.done_rx.recv().expect("serve worker died mid-drain");
+            checksum ^= done.checksum;
+            busy_ns += done.busy_ns;
+        }
+        self.outstanding = 0;
+        (checksum, busy_ns, n)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Close the job channel so workers observe Err(..) and exit.
+        self.job_tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heap_pops_in_time_order_with_fifo_ties() {
+        let mut h: EventHeap<usize> = EventHeap::new();
+        h.push(5.0, 0);
+        h.push(1.0, 1);
+        h.push(5.0, 2); // same time as item 0, inserted later
+        h.push(0.0, 3);
+        h.push(2.5, 4);
+        let order: Vec<(f64, usize)> = std::iter::from_fn(|| h.pop()).collect();
+        assert_eq!(order, vec![(0.0, 3), (1.0, 1), (2.5, 4), (5.0, 0), (5.0, 2)]);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn heap_time_roundtrips_bit_exact() {
+        let mut h: EventHeap<()> = EventHeap::new();
+        let times = [0.0, 0.1 + 0.2, 123.456789, 1e-12, 9e15];
+        for &t in &times {
+            h.push(t, ());
+        }
+        let mut sorted = times;
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for &want in &sorted {
+            let (got, ()) = h.pop().unwrap();
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn wire_checksum_is_pure_and_input_sensitive() {
+        assert_eq!(wire_checksum(3, 1024), wire_checksum(3, 1024));
+        assert_ne!(wire_checksum(3, 1024), wire_checksum(4, 1024));
+        assert_ne!(wire_checksum(3, 1024), wire_checksum(3, 1025));
+        // Zero-byte rounds still mix at least once.
+        assert_eq!(wire_checksum(0, 0), wire_checksum(0, 0));
+    }
+
+    #[test]
+    fn pool_checksum_matches_serial_fold_regardless_of_thread_order() {
+        let jobs: Vec<(usize, usize)> = (0..64).map(|i| (i, 100 + 37 * i)).collect();
+        let mut want = 0u64;
+        for &(r, b) in &jobs {
+            want ^= wire_checksum(r, b);
+        }
+        for workers in [1, 4] {
+            let mut pool = WorkerPool::new(workers);
+            assert_eq!(pool.workers(), workers);
+            for &(r, b) in &jobs {
+                pool.submit(Job::GossipWire { round: r, bytes: b });
+            }
+            let (got, _busy, n) = pool.drain();
+            assert_eq!(n, jobs.len());
+            assert_eq!(got, want, "XOR fold must be order-independent");
+            // A second drain with nothing outstanding is a no-op.
+            assert_eq!(pool.drain(), (0, 0, 0));
+        }
+    }
+
+    #[test]
+    fn pool_supports_incremental_drains() {
+        let mut pool = WorkerPool::new(2);
+        pool.submit(Job::GossipWire { round: 1, bytes: 10 });
+        let (c1, _, n1) = pool.drain();
+        assert_eq!(n1, 1);
+        assert_eq!(c1, wire_checksum(1, 10));
+        pool.submit(Job::GossipWire { round: 2, bytes: 20 });
+        pool.submit(Job::GossipWire { round: 3, bytes: 30 });
+        let (c2, _, n2) = pool.drain();
+        assert_eq!(n2, 2);
+        assert_eq!(c2, wire_checksum(2, 20) ^ wire_checksum(3, 30));
+    }
+}

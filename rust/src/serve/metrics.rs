@@ -1,0 +1,476 @@
+//! Serving-plane observability: per-edge / per-tier latency
+//! distributions (p50/p99), queue depth, shed/downgrade/reroute counts,
+//! and the gossip-overlap ratio.
+//!
+//! Two export surfaces:
+//!
+//! * [`ServeSummary`] — a compact, **worker-count-invariant** digest of
+//!   the run that rides inside `RunStats` (so `eaco-rag simulate` /
+//!   `serve` can print it next to the tier mix). Only counters whose
+//!   values are independent of `serve.workers` belong here: the
+//!   determinism suite asserts `RunStats` bit-identity across worker
+//!   counts, and queue-shape numbers (latency percentiles, overlap)
+//!   legitimately change with the number of virtual servers.
+//! * [`ServeMetrics`] — the full picture, returned alongside `RunStats`
+//!   by `serve_workload`. Everything in it is deterministic under the
+//!   virtual clock except the background wall-time fields
+//!   (`bg_wall_busy_ns`), which [`ServeMetrics::digest`] excludes.
+
+use crate::config::ServeConfig;
+use crate::corpus::ChunkId;
+use crate::sim::TIER_NAMES;
+use crate::util::stats::percentile;
+
+use super::queue::AdmissionPolicy;
+use super::session::{Session, ShedReason, Stage};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_fold(h: u64, x: u64) -> u64 {
+    let mut h = h;
+    for b in x.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Worker-invariant serve counters embedded in `RunStats`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServeSummary {
+    pub admitted: usize,
+    pub completed: usize,
+    pub shed_overflow: usize,
+    pub shed_deadline: usize,
+    pub shed_dead_edge: usize,
+    pub downgraded: usize,
+    pub rerouted: usize,
+    pub gossip_rounds: usize,
+    pub gossip_background: bool,
+}
+
+impl ServeSummary {
+    pub fn shed_total(&self) -> usize {
+        self.shed_overflow + self.shed_deadline + self.shed_dead_edge
+    }
+
+    /// One-line CLI row.
+    pub fn row(&self) -> String {
+        format!(
+            "admitted {} done {} shed {} (overflow {} deadline {} dead-edge {}) downgraded {} rerouted {} gossip-rounds {}{}",
+            self.admitted,
+            self.completed,
+            self.shed_total(),
+            self.shed_overflow,
+            self.shed_deadline,
+            self.shed_dead_edge,
+            self.downgraded,
+            self.rerouted,
+            self.gossip_rounds,
+            if self.gossip_background { " (background)" } else { "" },
+        )
+    }
+}
+
+/// Full serving-plane metrics for one `serve_workload` run.
+#[derive(Clone, Debug)]
+pub struct ServeMetrics {
+    pub workers: usize,
+    pub queue_cap: usize,
+    pub admission: AdmissionPolicy,
+    pub gossip_background: bool,
+    pub slo_ms: f64,
+
+    pub admitted: usize,
+    pub completed: usize,
+    pub shed_overflow: usize,
+    pub shed_deadline: usize,
+    pub shed_dead_edge: usize,
+    pub downgraded: usize,
+    pub rerouted: usize,
+
+    /// End-to-end latency samples (queue wait + service), ms, in
+    /// completion-record order (= event order, deterministic).
+    latency_ms: Vec<f64>,
+    per_edge_ms: Vec<Vec<f64>>,
+    per_tier_ms: [Vec<f64>; 4],
+    wait_ms_sum: f64,
+
+    pub peak_depth: usize,
+    depth_sum: u64,
+    depth_polls: u64,
+
+    pub gossip_rounds: usize,
+    pub gossip_completed: usize,
+    pub gossip_busy_ms: f64,
+    pub gossip_overlap_ms: f64,
+    pub gossip_bytes: usize,
+
+    pub bg_jobs: usize,
+    pub bg_jobs_done: usize,
+    /// XOR-fold of per-round wire checksums (order-independent,
+    /// deterministic; part of the digest).
+    pub bg_checksum: u64,
+    /// Real CPU time burned by the background pool. Wall-clock —
+    /// **excluded** from [`ServeMetrics::digest`].
+    pub bg_wall_busy_ns: u128,
+
+    /// Sequential FNV-1a fold over every served query's
+    /// `(seq, retrieved chunk ids)`. Equal digests mean equal
+    /// retrieved-chunk sets per query — asserted unchanged across
+    /// background-gossip on/off and across worker counts.
+    pub retrieved_digest: u64,
+
+    /// Completed/shed sessions in event order (stage stamps included).
+    pub sessions: Vec<Session>,
+}
+
+impl ServeMetrics {
+    pub fn new(num_edges: usize, cfg: &ServeConfig) -> ServeMetrics {
+        ServeMetrics {
+            workers: cfg.workers.max(1),
+            queue_cap: cfg.queue_cap,
+            admission: cfg.admission,
+            gossip_background: cfg.gossip_background,
+            slo_ms: cfg.slo_ms,
+            admitted: 0,
+            completed: 0,
+            shed_overflow: 0,
+            shed_deadline: 0,
+            shed_dead_edge: 0,
+            downgraded: 0,
+            rerouted: 0,
+            latency_ms: Vec::new(),
+            per_edge_ms: vec![Vec::new(); num_edges],
+            per_tier_ms: [Vec::new(), Vec::new(), Vec::new(), Vec::new()],
+            wait_ms_sum: 0.0,
+            peak_depth: 0,
+            depth_sum: 0,
+            depth_polls: 0,
+            gossip_rounds: 0,
+            gossip_completed: 0,
+            gossip_busy_ms: 0.0,
+            gossip_overlap_ms: 0.0,
+            gossip_bytes: 0,
+            bg_jobs: 0,
+            bg_jobs_done: 0,
+            bg_checksum: 0,
+            bg_wall_busy_ns: 0,
+            retrieved_digest: FNV_OFFSET,
+            sessions: Vec::new(),
+        }
+    }
+
+    /// Record the queue depth observed at one arrival.
+    pub fn observe_depth(&mut self, depth: usize) {
+        self.peak_depth = self.peak_depth.max(depth);
+        self.depth_sum += depth as u64;
+        self.depth_polls += 1;
+    }
+
+    pub fn mean_depth(&self) -> f64 {
+        if self.depth_polls == 0 {
+            0.0
+        } else {
+            self.depth_sum as f64 / self.depth_polls as f64
+        }
+    }
+
+    /// Fold one served query's retrieved-chunk set into the digest.
+    pub fn fold_retrieved(&mut self, seq: usize, retrieved: &[ChunkId]) {
+        let mut h = fnv_fold(self.retrieved_digest, seq as u64);
+        h = fnv_fold(h, retrieved.len() as u64);
+        for &cid in retrieved {
+            h = fnv_fold(h, cid as u64);
+        }
+        self.retrieved_digest = h;
+    }
+
+    /// Record a completed session.
+    pub fn record_done(&mut self, session: Session) {
+        debug_assert_eq!(session.stage, Stage::Done);
+        let latency = session.latency_ms();
+        let wait = session.wait_ms();
+        self.completed += 1;
+        self.latency_ms.push(latency);
+        if let Some(edge) = self.per_edge_ms.get_mut(session.edge_id) {
+            edge.push(latency);
+        }
+        if session.tier < 4 {
+            self.per_tier_ms[session.tier].push(latency);
+        }
+        if wait.is_finite() {
+            self.wait_ms_sum += wait;
+        }
+        self.sessions.push(session);
+    }
+
+    /// Record a shed session.
+    pub fn record_shed(&mut self, session: Session) {
+        debug_assert_eq!(session.stage, Stage::Shed);
+        match session.shed {
+            Some(ShedReason::QueueFull) => self.shed_overflow += 1,
+            Some(ShedReason::Deadline) => self.shed_deadline += 1,
+            Some(ShedReason::DeadEdge) => self.shed_dead_edge += 1,
+            None => debug_assert!(false, "shed session without reason"),
+        }
+        self.sessions.push(session);
+    }
+
+    pub fn shed_total(&self) -> usize {
+        self.shed_overflow + self.shed_deadline + self.shed_dead_edge
+    }
+
+    /// Overall latency percentiles `(p50, p99)` in ms; zeros when
+    /// nothing completed.
+    pub fn latency_p50_p99(&self) -> (f64, f64) {
+        Self::p50_p99(&self.latency_ms)
+    }
+
+    pub fn edge_p50_p99(&self, edge: usize) -> (f64, f64) {
+        Self::p50_p99(self.per_edge_ms.get(edge).map(|v| v.as_slice()).unwrap_or(&[]))
+    }
+
+    pub fn tier_p50_p99(&self, tier: usize) -> (f64, f64) {
+        Self::p50_p99(&self.per_tier_ms[tier.min(3)])
+    }
+
+    fn p50_p99(xs: &[f64]) -> (f64, f64) {
+        if xs.is_empty() {
+            return (0.0, 0.0); // percentile() returns NaN on empty; callers want zeros
+        }
+        (percentile(xs, 50.0), percentile(xs, 99.0))
+    }
+
+    pub fn mean_wait_ms(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.wait_ms_sum / self.completed as f64
+        }
+    }
+
+    /// Fraction of gossip busy time that overlapped query service.
+    /// Zero when gossip runs in the foreground (service is blocked, so
+    /// nothing can overlap) or when no gossip ran.
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.gossip_busy_ms <= 0.0 {
+            0.0
+        } else {
+            self.gossip_overlap_ms / self.gossip_busy_ms
+        }
+    }
+
+    /// The worker-invariant summary embedded in `RunStats`.
+    pub fn summary(&self) -> ServeSummary {
+        ServeSummary {
+            admitted: self.admitted,
+            completed: self.completed,
+            shed_overflow: self.shed_overflow,
+            shed_deadline: self.shed_deadline,
+            shed_dead_edge: self.shed_dead_edge,
+            downgraded: self.downgraded,
+            rerouted: self.rerouted,
+            gossip_rounds: self.gossip_rounds,
+            gossip_background: self.gossip_background,
+        }
+    }
+
+    /// FNV-1a digest over every deterministic field — counters, latency
+    /// sample bit patterns in record order, depth accounting, gossip
+    /// timing, the background checksum, and the retrieved-set digest.
+    /// Excludes wall-clock observability (`bg_wall_busy_ns`). Two runs
+    /// with the same seed and virtual clock must produce equal digests.
+    pub fn digest(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for x in [
+            self.workers as u64,
+            self.queue_cap as u64,
+            self.gossip_background as u64,
+            self.slo_ms.to_bits(),
+            self.admitted as u64,
+            self.completed as u64,
+            self.shed_overflow as u64,
+            self.shed_deadline as u64,
+            self.shed_dead_edge as u64,
+            self.downgraded as u64,
+            self.rerouted as u64,
+            self.peak_depth as u64,
+            self.depth_sum,
+            self.depth_polls,
+            self.gossip_rounds as u64,
+            self.gossip_completed as u64,
+            self.gossip_busy_ms.to_bits(),
+            self.gossip_overlap_ms.to_bits(),
+            self.gossip_bytes as u64,
+            self.bg_jobs as u64,
+            self.bg_jobs_done as u64,
+            self.bg_checksum,
+            self.retrieved_digest,
+            self.wait_ms_sum.to_bits(),
+        ] {
+            h = fnv_fold(h, x);
+        }
+        for v in &self.latency_ms {
+            h = fnv_fold(h, v.to_bits());
+        }
+        for tier in &self.per_tier_ms {
+            h = fnv_fold(h, tier.len() as u64);
+        }
+        h
+    }
+
+    /// One-line CLI row: latency shape, shed rate, depth, overlap.
+    pub fn row(&self) -> String {
+        let (p50, p99) = self.latency_p50_p99();
+        let total = self.admitted + self.shed_total();
+        let shed_rate = if total == 0 { 0.0 } else { self.shed_total() as f64 / total as f64 };
+        format!(
+            "workers {} | p50 {:.0} ms p99 {:.0} ms wait {:.1} ms | shed {:.1}% | depth peak {} mean {:.2} | gossip {} rounds {:.0} ms overlap {:.0}%",
+            self.workers,
+            p50,
+            p99,
+            self.mean_wait_ms(),
+            shed_rate * 100.0,
+            self.peak_depth,
+            self.mean_depth(),
+            self.gossip_rounds,
+            self.gossip_busy_ms,
+            self.overlap_ratio() * 100.0,
+        )
+    }
+
+    /// Per-tier latency rows for verbose output.
+    pub fn tier_latency_row(&self) -> String {
+        let mut parts = Vec::new();
+        for (t, name) in TIER_NAMES.iter().enumerate() {
+            let n = self.per_tier_ms[t].len();
+            if n == 0 {
+                continue;
+            }
+            let (p50, p99) = self.tier_p50_p99(t);
+            parts.push(format!("{name} n={n} p50 {p50:.0}/p99 {p99:.0} ms"));
+        }
+        if parts.is_empty() {
+            "no completed queries".to_string()
+        } else {
+            parts.join(" | ")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig::default()
+    }
+
+    fn done_session(seq: usize, edge: usize, tier: usize, t_arr: f64, t_start: f64, t_done: f64) -> Session {
+        let mut s = Session::new(seq, seq, edge, seq, t_arr);
+        assert!(s.advance(Stage::Retrieving, t_start));
+        assert!(s.advance(Stage::Gating, t_start));
+        assert!(s.advance(Stage::Generating, t_start));
+        assert!(s.advance(Stage::Done, t_done));
+        s.tier = tier;
+        s
+    }
+
+    #[test]
+    fn percentiles_and_wait_accounting() {
+        let mut m = ServeMetrics::new(2, &cfg());
+        for i in 0..100usize {
+            // Latencies 1..=100 ms, waits all 2 ms, alternate edges/tiers.
+            let t0 = i as f64 * 10.0;
+            let s = done_session(i, i % 2, 1 + (i % 2), t0, t0 + 2.0, t0 + 2.0 + (i + 1) as f64 - 2.0);
+            m.record_done(s);
+        }
+        let (p50, p99) = m.latency_p50_p99();
+        assert!((p50 - 50.5).abs() < 1.0, "p50 {p50}");
+        assert!(p99 > 98.0 && p99 <= 100.0, "p99 {p99}");
+        assert!((m.mean_wait_ms() - 2.0).abs() < 1e-9);
+        assert_eq!(m.completed, 100);
+        // Per-edge and per-tier splits each hold half the samples.
+        assert_eq!(m.per_edge_ms[0].len() + m.per_edge_ms[1].len(), 100);
+        assert_eq!(m.per_tier_ms[1].len(), 50);
+        assert_eq!(m.per_tier_ms[2].len(), 50);
+        let (tp50, _) = m.tier_p50_p99(1);
+        assert!(tp50 > 0.0);
+        assert!(m.tier_latency_row().contains("local"));
+    }
+
+    #[test]
+    fn empty_metrics_are_zero_not_nan() {
+        let m = ServeMetrics::new(4, &cfg());
+        assert_eq!(m.latency_p50_p99(), (0.0, 0.0));
+        assert_eq!(m.edge_p50_p99(0), (0.0, 0.0));
+        assert_eq!(m.mean_depth(), 0.0);
+        assert_eq!(m.mean_wait_ms(), 0.0);
+        assert_eq!(m.overlap_ratio(), 0.0);
+        assert_eq!(m.tier_latency_row(), "no completed queries");
+        assert!(m.row().contains("p50 0 ms"));
+    }
+
+    #[test]
+    fn shed_counters_split_by_reason() {
+        let mut m = ServeMetrics::new(1, &cfg());
+        for (i, reason) in
+            [ShedReason::QueueFull, ShedReason::Deadline, ShedReason::Deadline, ShedReason::DeadEdge]
+                .iter()
+                .enumerate()
+        {
+            let mut s = Session::new(i, i, 0, i, 0.0);
+            assert!(s.mark_shed(*reason, 1.0));
+            m.record_shed(s);
+        }
+        assert_eq!(m.shed_overflow, 1);
+        assert_eq!(m.shed_deadline, 2);
+        assert_eq!(m.shed_dead_edge, 1);
+        assert_eq!(m.shed_total(), 4);
+        assert_eq!(m.summary().shed_total(), 4);
+        assert!(m.summary().row().contains("deadline 2"));
+    }
+
+    #[test]
+    fn digest_is_stable_and_sensitive() {
+        let build = |latency: f64, fold_extra: bool| {
+            let mut m = ServeMetrics::new(1, &cfg());
+            m.record_done(done_session(0, 0, 1, 0.0, 0.0, latency));
+            m.fold_retrieved(0, &[7, 9]);
+            if fold_extra {
+                m.fold_retrieved(1, &[11]);
+            }
+            m
+        };
+        let a = build(10.0, false);
+        let b = build(10.0, false);
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.retrieved_digest, b.retrieved_digest);
+        // Different latency or retrieved set changes the digest.
+        assert_ne!(a.digest(), build(11.0, false).digest());
+        assert_ne!(a.digest(), build(10.0, true).digest());
+        // Wall-time field is excluded.
+        let mut c = build(10.0, false);
+        c.bg_wall_busy_ns = 123_456_789;
+        assert_eq!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn overlap_ratio_clamps_to_busy_time() {
+        let mut m = ServeMetrics::new(1, &cfg());
+        m.gossip_busy_ms = 200.0;
+        m.gossip_overlap_ms = 50.0;
+        assert!((m.overlap_ratio() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn depth_accounting() {
+        let mut m = ServeMetrics::new(1, &cfg());
+        for d in [0usize, 3, 1, 5, 1] {
+            m.observe_depth(d);
+        }
+        assert_eq!(m.peak_depth, 5);
+        assert!((m.mean_depth() - 2.0).abs() < 1e-12);
+    }
+}

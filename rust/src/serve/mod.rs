@@ -1,0 +1,451 @@
+//! The asynchronous serving plane: a deterministic event loop in front
+//! of [`SimSystem`]/[`crate::cluster::EdgeCluster`].
+//!
+//! The synchronous sim paths (`run_baseline`/`run_eaco`) drive every
+//! query to completion in-line — retrieval, gossip, and generation
+//! never overlap, which is exactly the wall-clock concurrency the
+//! paper's delay/cost trade-offs assume away. This subsystem adds that
+//! layer:
+//!
+//! * [`clock`] — virtual/wall clock abstraction (discrete-event time
+//!   for tests, monotonic wall time for real runs).
+//! * [`queue`] — bounded per-edge queues, FIFO-within-priority, and
+//!   deadline-aware admission (shed/downgrade against the SLO using
+//!   `NetSim::expected_delay_ms` — the jitter-free predictor, so
+//!   admission consumes no simulation RNG).
+//! * [`executor`] — event heap + `std::thread` worker pool (no tokio).
+//! * [`session`] — per-query state machine with per-stage stamps.
+//! * [`metrics`] — latency histograms, depth, sheds, gossip overlap.
+//!
+//! ## The determinism argument
+//!
+//! [`serve_workload`] is a discrete-event simulation: arrivals are
+//! scheduled at their cumulative `gap_ms` offsets and *all
+//! simulator-mutating work runs at arrival processing, in strict event
+//! order* — gossip rounds (which consume no RNG) fire under the exact
+//! due-at-arrival rule the synchronous loops use, then gating and
+//! service execute immediately. Worker count and background gossip only
+//! shape the *virtual queueing model* (when servers free up, what
+//! overlaps what) and the physical thread pool — never the order of
+//! logical calls. Hence, with admission off and an unbounded queue:
+//!
+//! 1. `RunStats` is bit-identical to the synchronous path on the same
+//!    seeded workload (tier mix, hits, bytes replicated, cost streams);
+//! 2. runs are bit-identical across repeats *and across worker counts*;
+//! 3. toggling `gossip_background` changes latency/overlap metrics but
+//!    not any query's retrieved-chunk set
+//!    ([`metrics::ServeMetrics::retrieved_digest`]).
+//!
+//! All three are asserted in `tests/serve_determinism.rs`.
+
+pub mod clock;
+pub mod executor;
+pub mod metrics;
+pub mod queue;
+pub mod session;
+
+use crate::gating::safeobo::{Observation, Qos, SafeObo};
+use crate::gating::{standard_arms, Arm, GenLoc, Retrieval};
+use crate::netsim::{Link, NetSpec};
+use crate::sim::{KnowledgeMode, RunStats, SimSystem};
+use crate::util::stats::Running;
+use crate::workload::Workload;
+
+use clock::ServeClock;
+use executor::{EventHeap, Job, WorkerPool};
+use metrics::ServeMetrics;
+use queue::{admission_decision, Admission, AdmissionPolicy};
+use session::{Session, ShedReason, Stage};
+
+/// Prior mean service time used by the admission predictor before any
+/// query has completed (ms).
+const DEFAULT_SVC_MS: f64 = 500.0;
+
+/// Modeled edge uplink throughput for gossip wire time (bytes per ms;
+/// 10 MB/s — a conservative edge NIC share).
+const GOSSIP_BYTES_PER_MS: f64 = 10_000.0;
+
+/// Who picks the arm for each query.
+pub enum Driver {
+    /// Fixed arm for every query (the `run_baseline` counterpart).
+    Fixed(Arm),
+    /// SafeOBO gate, constructed exactly as `run_eaco` does (same QoS
+    /// preset, warm-up, β, and seed — equivalence by construction).
+    Gated,
+}
+
+/// Events on the virtual timeline.
+enum Tick {
+    /// Workload arrival (index into `workload.events`).
+    Arrival(usize),
+    /// A gossip round's modeled wire time elapsed.
+    GossipDone,
+}
+
+/// Virtual wire time of one gossip round: a neighbor round trip plus
+/// the payload at the modeled uplink rate. Pure function of the round's
+/// byte accounting — no RNG.
+fn gossip_service_ms(spec: &NetSpec, wire_bytes: usize) -> f64 {
+    2.0 * spec.edge_edge_base_ms + wire_bytes as f64 / GOSSIP_BYTES_PER_MS
+}
+
+/// Overlap (ms) of two half-open intervals.
+fn overlap(a: (f64, f64), b: (f64, f64)) -> f64 {
+    (a.1.min(b.1) - a.0.max(b.0)).max(0.0)
+}
+
+/// Drive a workload through the serving plane. Returns the run's
+/// `RunStats` (with the worker-invariant [`metrics::ServeSummary`]
+/// attached) plus the full [`ServeMetrics`].
+pub fn serve_workload(
+    sys: &mut SimSystem,
+    workload: &Workload,
+    driver: Driver,
+) -> (RunStats, ServeMetrics) {
+    let scfg = sys.cfg.serve.clone();
+    let workers = scfg.workers.max(1);
+    let collaborative = sys.mode == KnowledgeMode::Collaborative;
+
+    // Gate setup mirrors `run_eaco` exactly (same constructor inputs ⇒
+    // same GP streams ⇒ same decisions on the same contexts).
+    let mut gate = match driver {
+        Driver::Gated => {
+            let (min_acc, max_delay) = sys.cfg.qos.constraints_for(sys.cfg.dataset);
+            Some(SafeObo::new(
+                standard_arms(),
+                Qos { min_accuracy: min_acc, max_delay_s: max_delay },
+                sys.cfg.warmup_steps,
+                sys.cfg.beta,
+                sys.cfg.seed,
+            ))
+        }
+        Driver::Fixed(_) => None,
+    };
+    let downgrade_arm = Arm { retrieval: Retrieval::LocalNaive, gen: GenLoc::EdgeSlm };
+    let downgrade_idx = gate
+        .as_ref()
+        .and_then(|g| g.arms.iter().position(|a| *a == downgrade_arm));
+
+    let mut stats = RunStats {
+        arm_counts: vec![0; gate.as_ref().map(|g| g.arms.len()).unwrap_or(1)],
+        ..Default::default()
+    };
+    let bytes0 = sys.cluster.bytes_gossiped();
+    let mut correct_n = 0usize;
+
+    let mut m = ServeMetrics::new(sys.cfg.num_edges, &scfg);
+    let mut clk = ServeClock::virtual_clock();
+
+    // Schedule every arrival at its cumulative inter-arrival offset.
+    // Ties (zero gaps) pop in event order — the heap is FIFO at equal
+    // timestamps — so arrival processing order equals workload order.
+    let mut heap: EventHeap<Tick> = EventHeap::new();
+    let mut t_arr = 0.0f64;
+    for (i, ev) in workload.events.iter().enumerate() {
+        t_arr += ev.gap_ms;
+        heap.push(t_arr, Tick::Arrival(i));
+    }
+
+    // Virtual queueing state: `workers` servers and the set of
+    // in-flight (start, done) intervals (per-edge id attached for the
+    // bounded per-edge occupancy check). This is the analytic form of
+    // the per-edge `queue::EdgeQueue` contract under virtual time.
+    let mut server_free = vec![0.0f64; workers];
+    let mut in_flight: Vec<(f64, f64, usize)> = Vec::new();
+    let mut gossip_windows: Vec<(f64, f64)> = Vec::new();
+    let mut svc_est = Running::new();
+    let mut pool = scfg.gossip_background.then(|| WorkerPool::new(workers));
+
+    while let Some((now, tick)) = heap.pop() {
+        clk.advance_to(now);
+        let i = match tick {
+            Tick::GossipDone => {
+                m.gossip_completed += 1;
+                continue;
+            }
+            Tick::Arrival(i) => i,
+        };
+        let ev = &workload.events[i];
+
+        // Gossip as a schedulable work item, under the exact trigger
+        // rule of the synchronous loops (due-at-arrival, before the
+        // query touches the stores) — rounds consume no RNG, so store
+        // state and the byte stream stay bit-identical to
+        // `run_baseline`/`run_eaco`. `sys.serve`'s own in-line
+        // `maybe_gossip` then no-ops for this step.
+        if collaborative && sys.cluster.gossip_due(ev.step) {
+            let report = sys.cluster.run_gossip_round(&sys.corpus, ev.step);
+            let g_ms = gossip_service_ms(&sys.net.spec, report.wire_bytes());
+            m.gossip_rounds += 1;
+            m.gossip_busy_ms += g_ms;
+            m.gossip_bytes += report.wire_bytes();
+            if scfg.gossip_background {
+                // Background: the round's logical effects land at the
+                // same deterministic point as the sync path (so no
+                // query's retrieved set can change); only its modeled
+                // wire time runs concurrently with query service.
+                for &(s, d, _) in &in_flight {
+                    m.gossip_overlap_ms += overlap((now, now + g_ms), (s, d));
+                }
+                gossip_windows.push((now, now + g_ms));
+                // Physical wire-work (checksum of the round's bytes)
+                // goes to the thread pool; results are XOR-folded so
+                // completion order cannot leak into the digest.
+                if let Some(p) = pool.as_mut() {
+                    p.submit(Job::GossipWire { round: report.round, bytes: report.wire_bytes() });
+                    m.bg_jobs += 1;
+                }
+            } else {
+                // Foreground: the round blocks every virtual server.
+                for f in server_free.iter_mut() {
+                    *f = f.max(now + g_ms);
+                }
+            }
+            heap.push(now + g_ms, Tick::GossipDone);
+        }
+
+        // Queue accounting at arrival: drop departed sessions, then
+        // read depths.
+        in_flight.retain(|&(_, d, _)| d > now);
+        let depth = in_flight.len();
+        let edge_depth = in_flight.iter().filter(|&&(_, _, e)| e == ev.edge_id).count();
+        m.observe_depth(depth);
+
+        let mut session = Session::new(i, ev.qa_id, ev.edge_id, ev.step, now);
+
+        // Backpressure: bounded per-edge occupancy.
+        if scfg.queue_cap > 0 && edge_depth >= scfg.queue_cap {
+            session.mark_shed(ShedReason::QueueFull, now);
+            m.record_shed(session);
+            continue;
+        }
+
+        // Liveness: route around a dead home edge (nearest alive peer
+        // by link cost); shed only when the whole fleet is down.
+        let mut edge_id = ev.edge_id;
+        if !sys.cluster.is_alive(edge_id) {
+            match sys.cluster.nearest_alive(edge_id) {
+                Some(alt) => {
+                    edge_id = alt;
+                    session.edge_id = alt;
+                    m.rerouted += 1;
+                }
+                None => {
+                    session.mark_shed(ShedReason::DeadEdge, now);
+                    m.record_shed(session);
+                    continue;
+                }
+            }
+        }
+
+        // Deadline-aware admission: predicted latency = queue-wait
+        // estimate + monitored access link + mean observed service.
+        // Everything here is jitter-free (`expected_delay_ms` is pure),
+        // so admitted queries consume the same RNG stream as the
+        // synchronous path.
+        let mut downgrade = false;
+        if scfg.admission != AdmissionPolicy::None {
+            let svc_ms = if svc_est.count() > 0 { svc_est.mean() } else { DEFAULT_SVC_MS };
+            let wait_ms = depth as f64 * svc_ms / workers as f64;
+            let predicted_ms =
+                wait_ms + sys.net.expected_delay_ms(Link::UserToEdge(edge_id), ev.step) + svc_ms;
+            match admission_decision(scfg.admission, predicted_ms, scfg.slo_ms) {
+                Admission::Accept => {}
+                Admission::Shed => {
+                    session.mark_shed(ShedReason::Deadline, now);
+                    m.record_shed(session);
+                    continue;
+                }
+                Admission::Downgrade => {
+                    downgrade = true;
+                    m.downgraded += 1;
+                }
+            }
+        }
+
+        m.admitted += 1;
+
+        // Dispatch to the earliest-free virtual server (tie → lowest
+        // index — deterministic).
+        let mut slot = 0usize;
+        for w in 1..server_free.len() {
+            if server_free[w] < server_free[slot] {
+                slot = w;
+            }
+        }
+        let start = now.max(server_free[slot]);
+        session.advance(Stage::Retrieving, start);
+
+        // Logical work, strictly in event order — this is what keeps
+        // the run bit-identical across worker counts. Under virtual
+        // time the interior stage stamps coincide with dispatch (the
+        // simulator models delay end-to-end; see `session`).
+        let (outcome, correct, used_idx, explored) = match (&driver, gate.as_mut()) {
+            (Driver::Gated, Some(g)) => {
+                let ctx = sys.gate_context(ev.qa_id, edge_id, ev.step);
+                let decision = g.decide(&ctx);
+                let idx = match (downgrade, downgrade_idx) {
+                    (true, Some(d)) => d,
+                    _ => decision.arm_idx,
+                };
+                let arm = g.arms[idx];
+                session.advance(Stage::Gating, start);
+                session.advance(Stage::Generating, start);
+                let (outcome, correct) = sys.serve(ev.qa_id, edge_id, ev.step, arm);
+                g.observe(
+                    &ctx,
+                    idx,
+                    Observation {
+                        resource_cost: outcome.resource_cost,
+                        delay_cost: outcome.delay_cost,
+                        accuracy: if correct { 1.0 } else { 0.0 },
+                        delay_s: outcome.delay_s,
+                    },
+                );
+                (outcome, correct, idx, decision.explored)
+            }
+            (Driver::Fixed(arm), _) => {
+                let arm = if downgrade { downgrade_arm } else { *arm };
+                session.advance(Stage::Gating, start);
+                session.advance(Stage::Generating, start);
+                let (outcome, correct) = sys.serve(ev.qa_id, edge_id, ev.step, arm);
+                (outcome, correct, 0, false)
+            }
+            (Driver::Gated, None) => unreachable!("gated driver always has a gate"),
+        };
+
+        // Virtual service completes after the modeled end-to-end delay.
+        let service_ms = outcome.delay_s * 1000.0;
+        let done = start + service_ms;
+        server_free[slot] = done;
+        in_flight.push((start, done, edge_id));
+        svc_est.push(service_ms);
+        if scfg.gossip_background {
+            // This session's overlap with every already-open gossip
+            // window (the trigger-time pass above covers sessions that
+            // were in flight when a window opened).
+            for &(g0, g1) in &gossip_windows {
+                m.gossip_overlap_ms += overlap((g0, g1), (start, done));
+            }
+        }
+        session.advance(Stage::Done, done);
+        session.tier = sys.last_tier;
+        m.fold_retrieved(i, &outcome.retrieved);
+        m.record_done(session);
+
+        match driver {
+            Driver::Gated => {
+                // Exploration is excluded from stats, exactly as
+                // `run_eaco` does.
+                if !explored {
+                    stats.arm_counts[used_idx] += 1;
+                    crate::sim::accumulate(
+                        &mut stats,
+                        &outcome,
+                        correct,
+                        &mut correct_n,
+                        sys.last_tier,
+                        sys.last_hit,
+                        sys.last_ann,
+                    );
+                }
+            }
+            Driver::Fixed(_) => {
+                crate::sim::accumulate(
+                    &mut stats,
+                    &outcome,
+                    correct,
+                    &mut correct_n,
+                    sys.last_tier,
+                    sys.last_hit,
+                    sys.last_ann,
+                );
+            }
+        }
+    }
+
+    crate::sim::finalize(&mut stats, correct_n);
+    stats.bytes_replicated = sys.cluster.bytes_gossiped() - bytes0;
+    if let Some(mut p) = pool {
+        let (checksum, busy_ns, done) = p.drain();
+        m.bg_checksum = checksum;
+        m.bg_wall_busy_ns = busy_ns;
+        m.bg_jobs_done = done;
+    }
+    stats.serve = Some(m.summary());
+    (stats, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::corpus::Profile;
+    use crate::sim::workload_for;
+
+    fn small_cfg() -> SystemConfig {
+        SystemConfig {
+            dataset: Profile::Wiki,
+            num_edges: 3,
+            edge_capacity: 300,
+            warmup_steps: 50,
+            ..SystemConfig::default()
+        }
+    }
+
+    fn arm() -> Arm {
+        SimSystem::baseline_arm("naive-rag").unwrap()
+    }
+
+    #[test]
+    fn static_mode_smoke_all_queries_complete() {
+        let cfg = small_cfg();
+        let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Static);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 120), cfg.seed);
+        let n = wl.events.len();
+        let (stats, m) = serve_workload(&mut sys, &wl, Driver::Fixed(arm()));
+        assert_eq!(stats.queries, n);
+        assert_eq!(m.admitted, n);
+        assert_eq!(m.completed, n);
+        assert_eq!(m.shed_total(), 0);
+        assert_eq!(m.gossip_rounds, 0, "static mode has no gossip to schedule");
+        let (p50, p99) = m.latency_p50_p99();
+        assert!(p50 > 0.0 && p99 >= p50);
+        let summary = stats.serve.expect("serve summary attached");
+        assert_eq!(summary.completed, n);
+        assert_eq!(summary, m.summary());
+        assert_eq!(m.sessions.len(), n);
+        assert!(m.sessions.iter().all(|s| s.stage == Stage::Done));
+    }
+
+    #[test]
+    fn module_digest_reproducible_across_runs() {
+        let cfg = small_cfg();
+        let run = || {
+            let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Static);
+            let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 100), cfg.seed);
+            let (_, m) = serve_workload(&mut sys, &wl, Driver::Fixed(arm()));
+            m.digest()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn gossip_duration_model_is_monotone_in_bytes() {
+        let spec = NetSpec::default();
+        let a = gossip_service_ms(&spec, 0);
+        let b = gossip_service_ms(&spec, 100_000);
+        assert!(a > 0.0);
+        assert!(b > a);
+        assert!((b - a - 10.0).abs() < 1e-9, "100 kB at 10 MB/s is 10 ms");
+    }
+
+    #[test]
+    fn interval_overlap_math() {
+        assert_eq!(overlap((0.0, 10.0), (5.0, 20.0)), 5.0);
+        assert_eq!(overlap((0.0, 10.0), (10.0, 20.0)), 0.0);
+        assert_eq!(overlap((0.0, 10.0), (2.0, 3.0)), 1.0);
+        assert_eq!(overlap((5.0, 6.0), (0.0, 100.0)), 1.0);
+        assert_eq!(overlap((0.0, 1.0), (2.0, 3.0)), 0.0);
+    }
+}

@@ -1,0 +1,245 @@
+//! Bounded per-edge request queues and deadline-aware admission.
+//!
+//! Two pieces live here:
+//!
+//! * [`EdgeQueue`] — a bounded FIFO-within-priority queue of
+//!   [`QueuedRequest`]s with backpressure accounting (pushed / popped /
+//!   rejected / peak depth). This is the wall-clock serving structure:
+//!   requests wait here between arrival and worker pickup. Under the
+//!   virtual clock the serve loop in [`super::serve_workload`] derives
+//!   queue occupancy analytically from in-flight departure times (the
+//!   set of requests whose virtual completion lies in the future), which
+//!   realizes the same bounded-occupancy contract without buffering
+//!   already-computed results; `EdgeQueue` is exercised directly by unit
+//!   tests and the `serve.enqueue` bench scenario.
+//! * [`admission_decision`] — the deadline-aware admission rule: given a
+//!   predicted end-to-end latency (queue-wait estimate + the monitored
+//!   `NetSim::expected_delay_ms` link term + a running mean of observed
+//!   service time) and the configured SLO, either accept, shed, or
+//!   downgrade the query to the cheapest local arm
+//!   (`local-rag+slm`). The predictor is deliberately the *expected*
+//!   (jitter-free) delay — admission must not consume simulation RNG,
+//!   or accepted queries would see a different random stream than the
+//!   synchronous path and break bit-equivalence.
+
+use std::collections::VecDeque;
+
+/// Number of priority lanes. Lane 0 is the highest priority.
+pub const NUM_PRIORITIES: usize = 3;
+
+/// What to do when the predicted latency for a query would blow the SLO.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Admit everything (the default; preserves sync-path equivalence).
+    None,
+    /// Reject the query outright; it never touches the simulator.
+    Shed,
+    /// Admit, but force the cheapest local arm (`local-rag+slm`).
+    Downgrade,
+}
+
+impl AdmissionPolicy {
+    pub fn parse(s: &str) -> Option<AdmissionPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => Some(AdmissionPolicy::None),
+            "shed" => Some(AdmissionPolicy::Shed),
+            "downgrade" => Some(AdmissionPolicy::Downgrade),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::None => "none",
+            AdmissionPolicy::Shed => "shed",
+            AdmissionPolicy::Downgrade => "downgrade",
+        }
+    }
+}
+
+/// Outcome of the admission rule for one query.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    Accept,
+    Shed,
+    Downgrade,
+}
+
+/// Deadline-aware admission: compare the predicted end-to-end latency
+/// against the SLO and apply the configured policy.
+pub fn admission_decision(policy: AdmissionPolicy, predicted_ms: f64, slo_ms: f64) -> Admission {
+    if predicted_ms <= slo_ms {
+        return Admission::Accept;
+    }
+    match policy {
+        AdmissionPolicy::None => Admission::Accept,
+        AdmissionPolicy::Shed => Admission::Shed,
+        AdmissionPolicy::Downgrade => Admission::Downgrade,
+    }
+}
+
+/// One enqueued query.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueuedRequest {
+    /// Global arrival sequence number (position in the workload).
+    pub seq: usize,
+    pub qa_id: usize,
+    pub edge_id: usize,
+    pub step: usize,
+    /// Priority lane, 0 (highest) .. NUM_PRIORITIES-1 (lowest).
+    pub priority: u8,
+    /// Virtual arrival time in ms since run start.
+    pub arrival_ms: f64,
+}
+
+/// A bounded per-edge request queue: strict FIFO within each priority
+/// lane, higher lanes always drain first, pushes beyond `cap` are
+/// rejected (backpressure).
+#[derive(Clone, Debug)]
+pub struct EdgeQueue {
+    /// Capacity across all lanes; 0 means unbounded.
+    cap: usize,
+    lanes: [VecDeque<QueuedRequest>; NUM_PRIORITIES],
+    /// Backpressure accounting.
+    pub pushed: u64,
+    pub popped: u64,
+    pub rejected: u64,
+    pub peak_depth: usize,
+}
+
+impl EdgeQueue {
+    pub fn new(cap: usize) -> EdgeQueue {
+        EdgeQueue {
+            cap,
+            lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            pushed: 0,
+            popped: 0,
+            rejected: 0,
+            peak_depth: 0,
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.iter().all(|l| l.is_empty())
+    }
+
+    /// Enqueue a request. Returns `false` (and counts a rejection) when
+    /// the queue is at capacity.
+    pub fn push(&mut self, req: QueuedRequest) -> bool {
+        if self.cap > 0 && self.len() >= self.cap {
+            self.rejected += 1;
+            return false;
+        }
+        let lane = (req.priority as usize).min(NUM_PRIORITIES - 1);
+        self.lanes[lane].push_back(req);
+        self.pushed += 1;
+        self.peak_depth = self.peak_depth.max(self.len());
+        true
+    }
+
+    /// Dequeue the next request: the oldest entry of the highest
+    /// non-empty priority lane.
+    pub fn pop(&mut self) -> Option<QueuedRequest> {
+        for lane in self.lanes.iter_mut() {
+            if let Some(req) = lane.pop_front() {
+                self.popped += 1;
+                return Some(req);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(seq: usize, priority: u8) -> QueuedRequest {
+        QueuedRequest { seq, qa_id: seq, edge_id: 0, step: seq, priority, arrival_ms: seq as f64 }
+    }
+
+    #[test]
+    fn fifo_within_priority_across_lanes() {
+        let mut q = EdgeQueue::new(0);
+        // Interleave lanes; drain order must be lane 0 FIFO, then lane 1
+        // FIFO, then lane 2 FIFO.
+        for (seq, pri) in [(0, 1u8), (1, 0), (2, 2), (3, 0), (4, 1)] {
+            assert!(q.push(req(seq, pri)));
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|r| r.seq).collect();
+        assert_eq!(order, vec![1, 3, 0, 4, 2]);
+        assert_eq!(q.pushed, 5);
+        assert_eq!(q.popped, 5);
+        assert_eq!(q.rejected, 0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn bounded_queue_rejects_and_accounts() {
+        let mut q = EdgeQueue::new(2);
+        assert!(q.push(req(0, 1)));
+        assert!(q.push(req(1, 0)));
+        assert!(!q.push(req(2, 0)), "push beyond cap must be rejected");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.rejected, 1);
+        assert_eq!(q.peak_depth, 2);
+        // Draining one slot re-opens capacity.
+        assert_eq!(q.pop().unwrap().seq, 1);
+        assert!(q.push(req(3, 2)));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn zero_cap_means_unbounded() {
+        let mut q = EdgeQueue::new(0);
+        for seq in 0..1000 {
+            assert!(q.push(req(seq, (seq % 3) as u8)));
+        }
+        assert_eq!(q.len(), 1000);
+        assert_eq!(q.rejected, 0);
+        assert_eq!(q.peak_depth, 1000);
+    }
+
+    #[test]
+    fn out_of_range_priority_clamps_to_lowest_lane() {
+        let mut q = EdgeQueue::new(0);
+        assert!(q.push(req(0, 200)));
+        assert!(q.push(req(1, 0)));
+        assert_eq!(q.pop().unwrap().seq, 1);
+        assert_eq!(q.pop().unwrap().seq, 0);
+    }
+
+    #[test]
+    fn admission_rule_matrix() {
+        use Admission::*;
+        use AdmissionPolicy as P;
+        // Under SLO: always accept, whatever the policy.
+        for p in [P::None, P::Shed, P::Downgrade] {
+            assert_eq!(admission_decision(p, 100.0, 2000.0), Accept);
+        }
+        // Over SLO: policy decides.
+        assert_eq!(admission_decision(P::None, 5000.0, 2000.0), Accept);
+        assert_eq!(admission_decision(P::Shed, 5000.0, 2000.0), Shed);
+        assert_eq!(admission_decision(P::Downgrade, 5000.0, 2000.0), Downgrade);
+        // Exactly at the SLO counts as meeting it.
+        assert_eq!(admission_decision(P::Shed, 2000.0, 2000.0), Accept);
+    }
+
+    #[test]
+    fn admission_policy_parse_roundtrip() {
+        for p in [AdmissionPolicy::None, AdmissionPolicy::Shed, AdmissionPolicy::Downgrade] {
+            assert_eq!(AdmissionPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(AdmissionPolicy::parse("off"), Some(AdmissionPolicy::None));
+        assert_eq!(AdmissionPolicy::parse("SHED"), Some(AdmissionPolicy::Shed));
+        assert_eq!(AdmissionPolicy::parse("bogus"), None);
+    }
+}

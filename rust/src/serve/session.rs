@@ -1,0 +1,224 @@
+//! Per-query session state machine.
+//!
+//! Every admitted query owns a [`Session`] that walks
+//! `Admitted → Retrieving → Gating → Generating → Done`, or exits early
+//! to `Shed` from any non-terminal stage. Each transition stamps the
+//! clock, so latency decompositions (queue wait vs service) fall out of
+//! the stamps.
+//!
+//! Under the **virtual clock** the retrieval/gating/generation stamps
+//! coincide with dispatch: the simulator models delay end-to-end
+//! (`Outcome::delay_s`), so the interior stages are logically
+//! instantaneous and only `Admitted → Retrieving` (queue wait) and
+//! `Generating → Done` (service) carry duration. A wall-clock run
+//! separates them with real timestamps; the machine and its legality
+//! rules are identical in both modes.
+
+/// Lifecycle stage of one query.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    Admitted,
+    Retrieving,
+    Gating,
+    Generating,
+    Done,
+    Shed,
+}
+
+impl Stage {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Stage::Done | Stage::Shed)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Admitted => "admitted",
+            Stage::Retrieving => "retrieving",
+            Stage::Gating => "gating",
+            Stage::Generating => "generating",
+            Stage::Done => "done",
+            Stage::Shed => "shed",
+        }
+    }
+}
+
+/// Why a query was shed instead of served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The edge's queue was at capacity (`serve.queue_cap`).
+    QueueFull,
+    /// Predicted latency exceeded the SLO under `admission = "shed"`.
+    Deadline,
+    /// The home edge is dead and no alive edge exists to reroute to.
+    DeadEdge,
+}
+
+/// Per-query state with per-stage timestamps (ms since run start).
+/// Unvisited stage stamps are `NaN`.
+#[derive(Clone, Debug)]
+pub struct Session {
+    /// Position in the workload event stream.
+    pub seq: usize,
+    pub qa_id: usize,
+    /// Edge the query was *served* at (after any liveness reroute).
+    pub edge_id: usize,
+    pub step: usize,
+    pub stage: Stage,
+    pub t_admitted_ms: f64,
+    pub t_retrieving_ms: f64,
+    pub t_gating_ms: f64,
+    pub t_generating_ms: f64,
+    /// Done or Shed time.
+    pub t_end_ms: f64,
+    /// Serving tier (sim::TIER_*), set when the query completes.
+    pub tier: usize,
+    pub shed: Option<ShedReason>,
+}
+
+impl Session {
+    pub fn new(seq: usize, qa_id: usize, edge_id: usize, step: usize, now_ms: f64) -> Session {
+        Session {
+            seq,
+            qa_id,
+            edge_id,
+            step,
+            stage: Stage::Admitted,
+            t_admitted_ms: now_ms,
+            t_retrieving_ms: f64::NAN,
+            t_gating_ms: f64::NAN,
+            t_generating_ms: f64::NAN,
+            t_end_ms: f64::NAN,
+            tier: 0,
+            shed: None,
+        }
+    }
+
+    /// Attempt a transition to `to` at time `t_ms`. Returns `false` (and
+    /// mutates nothing) when the transition is illegal — terminal stages
+    /// never advance, interior stages only advance forward, and `Shed`
+    /// is reachable from any non-terminal stage. Time must not run
+    /// backwards relative to the last stamp.
+    pub fn advance(&mut self, to: Stage, t_ms: f64) -> bool {
+        if self.stage.is_terminal() {
+            return false;
+        }
+        let legal = matches!(
+            (self.stage, to),
+            (Stage::Admitted, Stage::Retrieving)
+                | (Stage::Retrieving, Stage::Gating)
+                | (Stage::Gating, Stage::Generating)
+                | (Stage::Generating, Stage::Done)
+                | (_, Stage::Shed)
+        );
+        if !legal || t_ms + 1e-9 < self.last_stamp_ms() {
+            return false;
+        }
+        match to {
+            Stage::Retrieving => self.t_retrieving_ms = t_ms,
+            Stage::Gating => self.t_gating_ms = t_ms,
+            Stage::Generating => self.t_generating_ms = t_ms,
+            Stage::Done | Stage::Shed => self.t_end_ms = t_ms,
+            Stage::Admitted => return false,
+        }
+        self.stage = to;
+        true
+    }
+
+    /// Shed the session at `t_ms` with the given reason.
+    pub fn mark_shed(&mut self, reason: ShedReason, t_ms: f64) -> bool {
+        if !self.advance(Stage::Shed, t_ms) {
+            return false;
+        }
+        self.shed = Some(reason);
+        true
+    }
+
+    /// The most recent stamped time.
+    fn last_stamp_ms(&self) -> f64 {
+        for t in [self.t_end_ms, self.t_generating_ms, self.t_gating_ms, self.t_retrieving_ms] {
+            if !t.is_nan() {
+                return t;
+            }
+        }
+        self.t_admitted_ms
+    }
+
+    /// End-to-end latency (arrival → Done/Shed); NaN while in flight.
+    pub fn latency_ms(&self) -> f64 {
+        self.t_end_ms - self.t_admitted_ms
+    }
+
+    /// Queue wait (arrival → dispatch); NaN if never dispatched.
+    pub fn wait_ms(&self) -> f64 {
+        self.t_retrieving_ms - self.t_admitted_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn happy_path_stamps_every_stage() {
+        let mut s = Session::new(0, 42, 3, 7, 100.0);
+        assert_eq!(s.stage, Stage::Admitted);
+        assert!(s.advance(Stage::Retrieving, 130.0));
+        assert!(s.advance(Stage::Gating, 130.0));
+        assert!(s.advance(Stage::Generating, 135.0));
+        assert!(s.advance(Stage::Done, 900.0));
+        assert_eq!(s.stage, Stage::Done);
+        assert!(s.stage.is_terminal());
+        assert_eq!(s.latency_ms(), 800.0);
+        assert_eq!(s.wait_ms(), 30.0);
+        assert_eq!(s.t_gating_ms, 130.0);
+        assert_eq!(s.t_generating_ms, 135.0);
+        assert!(s.shed.is_none());
+    }
+
+    #[test]
+    fn illegal_transitions_are_rejected_without_mutation() {
+        let mut s = Session::new(0, 0, 0, 0, 0.0);
+        // Skipping stages is illegal.
+        assert!(!s.advance(Stage::Gating, 1.0));
+        assert!(!s.advance(Stage::Generating, 1.0));
+        assert!(!s.advance(Stage::Done, 1.0));
+        assert_eq!(s.stage, Stage::Admitted);
+        assert!(s.t_gating_ms.is_nan());
+        // Backwards transitions are illegal.
+        assert!(s.advance(Stage::Retrieving, 1.0));
+        assert!(!s.advance(Stage::Retrieving, 2.0));
+        // Time cannot run backwards.
+        assert!(!s.advance(Stage::Gating, 0.5));
+        assert!(s.advance(Stage::Gating, 1.0));
+        assert_eq!(s.stage, Stage::Gating);
+    }
+
+    #[test]
+    fn shed_reachable_from_any_nonterminal_stage() {
+        for pre in 0..4usize {
+            let mut s = Session::new(0, 0, 0, 0, 0.0);
+            let path = [Stage::Retrieving, Stage::Gating, Stage::Generating];
+            for st in path.iter().take(pre) {
+                assert!(s.advance(*st, 1.0));
+            }
+            assert!(s.mark_shed(ShedReason::Deadline, 2.0));
+            assert_eq!(s.stage, Stage::Shed);
+            assert_eq!(s.shed, Some(ShedReason::Deadline));
+            assert_eq!(s.t_end_ms, 2.0);
+            // Terminal: nothing moves any more.
+            assert!(!s.advance(Stage::Done, 3.0));
+            assert!(!s.mark_shed(ShedReason::QueueFull, 3.0));
+            assert_eq!(s.shed, Some(ShedReason::Deadline));
+        }
+    }
+
+    #[test]
+    fn done_is_terminal() {
+        let mut s = Session::new(0, 0, 0, 0, 0.0);
+        for st in [Stage::Retrieving, Stage::Gating, Stage::Generating, Stage::Done] {
+            assert!(s.advance(st, 1.0));
+        }
+        assert!(!s.mark_shed(ShedReason::DeadEdge, 2.0));
+        assert_eq!(s.stage, Stage::Done);
+    }
+}

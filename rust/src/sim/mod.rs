@@ -76,6 +76,11 @@ pub struct RunStats {
     /// ANN queries answered by the exact-scan fallback (store below
     /// `ann.exact_below`).
     pub ann_exact_fallbacks: usize,
+    /// Serving-plane counters when the run went through
+    /// [`crate::serve::serve_workload`] (`None` for the synchronous
+    /// paths). Only worker-count-invariant counters live here, so
+    /// `RunStats` stays bit-identical across `serve.workers` settings.
+    pub serve: Option<crate::serve::metrics::ServeSummary>,
 }
 
 impl RunStats {
@@ -141,12 +146,13 @@ pub struct SimSystem {
     /// Chunks that arrived via community distribution, per edge.
     community_marked: Vec<std::collections::HashSet<ChunkId>>,
     /// Tier + support-hit of the most recent [`Self::serve`] call (the
-    /// run loops fold these into [`RunStats`]).
-    last_tier: usize,
-    last_hit: bool,
+    /// run loops — including the event loop in [`crate::serve`] — fold
+    /// these into [`RunStats`]).
+    pub(crate) last_tier: usize,
+    pub(crate) last_hit: bool,
     /// ANN probe outcome of the most recent serve (collaborative
     /// local/edge-assisted retrieval only; `None` otherwise).
-    last_ann: Option<AnnProbe>,
+    pub(crate) last_ann: Option<AnnProbe>,
     /// Query embedder for the collaborative dense path (shares hasher
     /// geometry with every edge's chunk embeddings).
     query_hasher: Option<FeatureHasher>,
@@ -558,6 +564,24 @@ impl SimSystem {
         (stats, gate)
     }
 
+    /// Run a workload through the asynchronous serving plane
+    /// ([`crate::serve`]): per-edge queue accounting, deadline-aware
+    /// admission, and gossip as schedulable (optionally background)
+    /// work items, all under the deterministic virtual clock.
+    /// `KnowledgeMode`-agnostic — legacy modes simply have no gossip to
+    /// schedule. With the default `[serve]` config (unbounded queue,
+    /// 1 worker, admission off, foreground gossip) the returned
+    /// `RunStats` is bit-identical to [`Self::run_baseline`] /
+    /// [`Self::run_eaco`] on the same workload — asserted in
+    /// `tests/serve_determinism.rs`.
+    pub fn serve_async(
+        &mut self,
+        workload: &Workload,
+        driver: crate::serve::Driver,
+    ) -> (RunStats, crate::serve::metrics::ServeMetrics) {
+        crate::serve::serve_workload(self, workload, driver)
+    }
+
     /// The standard baseline arms of Table 4.
     pub fn baseline_arm(name: &str) -> Option<Arm> {
         match name {
@@ -570,7 +594,7 @@ impl SimSystem {
     }
 }
 
-fn accumulate(
+pub(crate) fn accumulate(
     stats: &mut RunStats,
     o: &Outcome,
     correct: bool,
@@ -601,7 +625,7 @@ fn accumulate(
     }
 }
 
-fn finalize(stats: &mut RunStats, correct_n: usize) {
+pub(crate) fn finalize(stats: &mut RunStats, correct_n: usize) {
     stats.accuracy = if stats.queries == 0 {
         0.0
     } else {

@@ -25,6 +25,16 @@
 //! id. Scores are finite by construction (rows are L2-normalized on
 //! insert, queries are normalized by the scan).
 //!
+//! **Remove-then-top_k interaction.** `remove` is a *swap-remove*: the
+//! last row moves into the vacated slot, so churn permutes the store's
+//! internal slot order. That permutation is invisible to queries — the
+//! total order above is over `(score, id)`, never slot position — so a
+//! churned store and a freshly rebuilt store with the same surviving
+//! rows return bit-identical `top_k` results (asserted by
+//! `removal_reorders_slots_but_not_ranking` below). Anything that walks
+//! rows in slot order (the scan itself, shard boundaries) must
+//! therefore never let position influence ranking — only `(score, id)`.
+//!
 //! For stores past ~10⁵ rows the [`ivf`] submodule layers an
 //! inverted-file ANN index on top: same kernel, same ranking order,
 //! sublinear probed volume, exact fallback below a size threshold.
@@ -416,6 +426,59 @@ mod tests {
         assert_eq!(vs.len(), 1);
         let top = vs.top_k(&[0.0, 1.0], 1);
         assert!((top[0].1 - 1.0).abs() < 1e-6);
+    }
+
+    /// Regression for the remove-then-top_k interaction documented in
+    /// the module header: swap-remove churn permutes slot order but
+    /// must never change what `top_k` returns. A store that went
+    /// through interleaved inserts/removes is compared bit-for-bit
+    /// against a store freshly rebuilt from only the survivors.
+    #[test]
+    fn removal_reorders_slots_but_not_ranking() {
+        let dim = 16;
+        let mut rng = crate::util::rng::Rng::new(0xC0FFEE);
+        let vec_for = |rng: &mut crate::util::rng::Rng| -> Vec<f32> {
+            (0..dim).map(|_| rng.f64() as f32 - 0.5).collect()
+        };
+
+        let mut churned = VecStore::new(dim);
+        let mut rows: Vec<(usize, Vec<f32>)> = Vec::new();
+        for id in 0..64 {
+            let v = vec_for(&mut rng);
+            churned.insert(id, &v);
+            rows.push((id, v));
+        }
+        // Remove interior rows (each triggers a swap from the tail),
+        // including a back-to-back pair so a just-moved row moves again.
+        for id in [3usize, 17, 18, 40, 41, 42, 0] {
+            assert!(churned.remove(id));
+            rows.retain(|(i, _)| *i != id);
+        }
+        // Churn further: re-insert one removed id with a fresh vector.
+        let v = vec_for(&mut rng);
+        churned.insert(17, &v);
+        rows.push((17, v));
+
+        let mut rebuilt = VecStore::new(dim);
+        for (id, v) in &rows {
+            rebuilt.insert(*id, v);
+        }
+        assert_eq!(churned.len(), rebuilt.len());
+
+        for qi in 0..8 {
+            let q = vec_for(&mut rng);
+            let a = churned.top_k(&q, 10);
+            let b = rebuilt.top_k(&q, 10);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.0, y.0, "query {qi}: id order diverged");
+                assert_eq!(
+                    x.1.to_bits(),
+                    y.1.to_bits(),
+                    "query {qi}: score not bit-identical"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,300 @@
+//! PR-7 serving-plane guardrails (see `serve`'s module docs for the
+//! determinism argument):
+//!
+//! * with the default `[serve]` config, `serve_async` is **bit-identical**
+//!   to the synchronous `run_baseline`/`run_eaco` paths on a seeded
+//!   collaborative workload — tier mix, hits, bytes replicated, cost
+//!   streams;
+//! * same seed + virtual clock ⇒ bit-identical `RunStats` *and* metric
+//!   digests across repeated runs, and across worker counts (1 vs 4);
+//! * background gossip overlaps with query service (overlap ratio > 0)
+//!   without changing any query's retrieved-chunk set;
+//! * admission policies shed/downgrade as configured; bounded queues
+//!   shed on overflow;
+//! * edge churn: killed edges reroute traffic, revived edges cold-sync
+//!   back through gossip.
+
+use eaco_rag::config::SystemConfig;
+use eaco_rag::gating::{Arm, GenLoc, Retrieval};
+use eaco_rag::serve::queue::AdmissionPolicy;
+use eaco_rag::serve::Driver;
+use eaco_rag::sim::{
+    workload_for, KnowledgeMode, RunStats, SimSystem, TIER_CLOUD, TIER_LOCAL,
+};
+use eaco_rag::workload::Workload;
+
+fn collab_cfg() -> SystemConfig {
+    SystemConfig {
+        num_edges: 6,
+        edge_capacity: 400,
+        warmup_steps: 200,
+        ..SystemConfig::default()
+    }
+}
+
+fn edge_assist() -> Arm {
+    Arm {
+        retrieval: Retrieval::EdgeAssisted,
+        gen: GenLoc::EdgeSlm,
+    }
+}
+
+/// Full bit-level comparison: counters exactly, float streams by bit
+/// pattern (both sides are produced by the same arithmetic on the same
+/// RNG draws, so even the last ulp must match).
+fn assert_stats_bit_identical(a: &RunStats, b: &RunStats) {
+    assert_eq!(a.queries, b.queries);
+    assert_eq!(a.tier_queries, b.tier_queries);
+    assert_eq!(a.tier_hits, b.tier_hits);
+    assert_eq!(a.bytes_replicated, b.bytes_replicated);
+    assert_eq!(a.arm_counts, b.arm_counts);
+    assert_eq!(a.ann_queries, b.ann_queries);
+    assert_eq!(a.ann_exact_fallbacks, b.ann_exact_fallbacks);
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+    assert_eq!(a.delay.mean().to_bits(), b.delay.mean().to_bits());
+    assert_eq!(a.delay.sum().to_bits(), b.delay.sum().to_bits());
+    assert_eq!(
+        a.resource_cost.mean().to_bits(),
+        b.resource_cost.mean().to_bits()
+    );
+    assert_eq!(a.total_cost.sum().to_bits(), b.total_cost.sum().to_bits());
+    assert_eq!(a.ann_recall.mean().to_bits(), b.ann_recall.mean().to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// (a) serve_async ≡ the synchronous paths at concurrency 1
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fixed_arm_serve_async_bit_identical_to_run_baseline() {
+    let cfg = collab_cfg();
+
+    let mut sync_sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+    let wl = Workload::generate(&sync_sys.corpus, workload_for(&cfg, 1000), cfg.seed);
+    let sync_stats = sync_sys.run_baseline(&wl, edge_assist());
+
+    let mut async_sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+    let (async_stats, m) = async_sys.serve_async(&wl, Driver::Fixed(edge_assist()));
+
+    assert_stats_bit_identical(&sync_stats, &async_stats);
+    assert!(
+        async_stats.bytes_replicated > 0,
+        "collaborative run must gossip"
+    );
+    // The serving plane actually fronted every query.
+    let summary = async_stats.serve.as_ref().expect("serve summary");
+    assert_eq!(summary.completed, wl.events.len());
+    assert_eq!(summary.shed_overflow + summary.shed_deadline + summary.shed_dead_edge, 0);
+    assert!(m.gossip_rounds > 0);
+    assert_eq!(m.gossip_rounds, summary.gossip_rounds);
+    // And the final store state matches the synchronous run's.
+    assert_eq!(sync_sys.cluster.staleness(), async_sys.cluster.staleness());
+    assert_eq!(
+        sync_sys.cluster.gossiper.stats.rounds,
+        async_sys.cluster.gossiper.stats.rounds
+    );
+}
+
+#[test]
+fn gated_serve_async_bit_identical_to_run_eaco() {
+    let cfg = collab_cfg();
+
+    let mut sync_sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+    let wl = Workload::generate(&sync_sys.corpus, workload_for(&cfg, 500), cfg.seed);
+    let (sync_stats, _) = sync_sys.run_eaco(&wl);
+
+    let mut async_sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+    let (async_stats, _) = async_sys.serve_async(&wl, Driver::Gated);
+
+    assert_stats_bit_identical(&sync_stats, &async_stats);
+    assert!(async_stats.arm_counts.iter().sum::<usize>() > 0);
+}
+
+// ---------------------------------------------------------------------------
+// (b) bit-reproducible across runs and worker counts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn repeated_runs_bit_identical_including_metric_digest() {
+    let mut cfg = collab_cfg();
+    cfg.serve.workers = 4;
+    cfg.serve.gossip_background = true;
+    let run = || {
+        let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 600), cfg.seed);
+        sys.serve_async(&wl, Driver::Fixed(edge_assist()))
+    };
+    let (sa, ma) = run();
+    let (sb, mb) = run();
+    assert_stats_bit_identical(&sa, &sb);
+    assert_eq!(sa.serve, sb.serve);
+    assert_eq!(
+        ma.digest(),
+        mb.digest(),
+        "same seed + virtual clock must reproduce every deterministic metric bit"
+    );
+    assert_eq!(ma.retrieved_digest, mb.retrieved_digest);
+}
+
+#[test]
+fn run_stats_invariant_across_worker_counts() {
+    let run = |workers: usize| {
+        let mut cfg = collab_cfg();
+        cfg.serve.workers = workers;
+        let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 600), cfg.seed);
+        sys.serve_async(&wl, Driver::Fixed(edge_assist()))
+    };
+    let (s1, m1) = run(1);
+    let (s4, m4) = run(4);
+    // Worker count shapes the latency model only — never the logical
+    // call order — so the run-level stats are identical.
+    assert_stats_bit_identical(&s1, &s4);
+    assert_eq!(s1.serve, s4.serve, "ServeSummary is worker-count-invariant");
+    assert_eq!(
+        m1.retrieved_digest, m4.retrieved_digest,
+        "every query retrieved the same chunks under 1 and 4 workers"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// (c) background gossip: overlap without retrieval drift
+// ---------------------------------------------------------------------------
+
+#[test]
+fn background_gossip_overlaps_without_changing_retrieval() {
+    let run = |background: bool| {
+        let mut cfg = collab_cfg();
+        cfg.serve.workers = if background { 4 } else { 1 };
+        cfg.serve.gossip_background = background;
+        let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 800), cfg.seed);
+        sys.serve_async(&wl, Driver::Fixed(edge_assist()))
+    };
+    let (fg_stats, fg) = run(false);
+    let (bg_stats, bg) = run(true);
+
+    // Acceptance criterion: overlap shows up, retrieval does not move.
+    assert!(bg.gossip_rounds > 0);
+    assert!(
+        bg.overlap_ratio() > 0.0,
+        "background gossip must overlap query service"
+    );
+    assert_eq!(fg.overlap_ratio(), 0.0, "foreground gossip never overlaps");
+    assert_eq!(
+        fg.retrieved_digest, bg.retrieved_digest,
+        "background gossip must not change any query's retrieved-chunk set"
+    );
+    assert_eq!(fg_stats.tier_queries, bg_stats.tier_queries);
+    assert_eq!(fg_stats.tier_hits, bg_stats.tier_hits);
+    assert_eq!(fg_stats.bytes_replicated, bg_stats.bytes_replicated);
+    // The physical wire-work ran and checksummed deterministically.
+    assert_eq!(bg.bg_jobs, bg.bg_jobs_done);
+    assert!(bg.bg_jobs > 0);
+    let (_, bg2) = run(true);
+    assert_eq!(bg.bg_checksum, bg2.bg_checksum);
+}
+
+// ---------------------------------------------------------------------------
+// (d) admission + backpressure
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shed_admission_with_tiny_slo_sheds_everything() {
+    let mut cfg = collab_cfg();
+    cfg.serve.admission = AdmissionPolicy::Shed;
+    cfg.serve.slo_ms = 0.01;
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+    let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 300), cfg.seed);
+    let n = wl.events.len();
+    let (stats, m) = sys.serve_async(&wl, Driver::Fixed(edge_assist()));
+    assert_eq!(stats.queries, 0, "every query shed before service");
+    assert_eq!(m.shed_deadline, n);
+    assert_eq!(m.completed, 0);
+    assert_eq!(stats.serve.unwrap().shed_deadline, n);
+}
+
+#[test]
+fn downgrade_admission_forces_cheap_local_tier() {
+    let mut cfg = collab_cfg();
+    cfg.serve.admission = AdmissionPolicy::Downgrade;
+    cfg.serve.slo_ms = 0.01;
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+    let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 300), cfg.seed);
+    let n = wl.events.len();
+    // Ask for the expensive cloud arm; admission downgrades every query.
+    let cloud = Arm {
+        retrieval: Retrieval::CloudGraph,
+        gen: GenLoc::CloudLlm,
+    };
+    let (stats, m) = sys.serve_async(&wl, Driver::Fixed(cloud));
+    assert_eq!(m.downgraded, n);
+    assert_eq!(stats.queries, n, "downgrade serves everything");
+    assert_eq!(stats.tier_queries[TIER_CLOUD], 0, "no query reached the cloud");
+    assert_eq!(stats.tier_queries[TIER_LOCAL], n);
+}
+
+#[test]
+fn bounded_queue_sheds_on_overflow() {
+    let mut cfg = collab_cfg();
+    cfg.serve.queue_cap = 1;
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+    let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 500), cfg.seed);
+    let (stats, m) = sys.serve_async(&wl, Driver::Fixed(edge_assist()));
+    assert!(
+        m.shed_overflow > 0,
+        "cap 1 with sub-service inter-arrival gaps must shed"
+    );
+    assert_eq!(stats.queries + m.shed_overflow, wl.events.len());
+    assert_eq!(stats.serve.unwrap().shed_overflow, m.shed_overflow);
+}
+
+// ---------------------------------------------------------------------------
+// (e) edge churn through the serving plane
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_edge_reroutes_and_revived_edge_cold_syncs() {
+    let cfg = collab_cfg();
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+    let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 600), cfg.seed);
+    // Split into two phases that keep the original (monotone) step
+    // numbering, so the gossip cadence keeps advancing across both.
+    let mid = wl.events.len() / 2;
+    let first = Workload {
+        spec: wl.spec.clone(),
+        events: wl.events[..mid].to_vec(),
+        edge_home_topics: wl.edge_home_topics.clone(),
+        trends: wl.trends.clone(),
+    };
+    let second = Workload {
+        spec: wl.spec.clone(),
+        events: wl.events[mid..].to_vec(),
+        edge_home_topics: wl.edge_home_topics.clone(),
+        trends: wl.trends.clone(),
+    };
+    assert!(first.events.iter().any(|e| e.edge_id == 0));
+
+    // Warm the cluster a little, then take edge 0 down.
+    sys.cluster.kill_edge(0);
+    assert!(sys.cluster.nodes[0].is_empty(), "kill wipes the store");
+    let (stats, m) = sys.serve_async(&first, Driver::Fixed(edge_assist()));
+    assert_eq!(stats.queries, first.events.len(), "nothing shed: rerouted instead");
+    assert!(m.rerouted > 0, "edge-0 arrivals rerouted to an alive peer");
+    assert!(
+        m.sessions.iter().all(|s| s.edge_id != 0),
+        "no session served on the dead edge"
+    );
+    assert!(sys.cluster.nodes[0].is_empty(), "dead edge stayed empty");
+
+    // Revive: topology rewires edge 0 back in and subsequent gossip
+    // rounds cold-sync it from its neighbors.
+    sys.cluster.revive_edge(0);
+    let (_, m2) = sys.serve_async(&second, Driver::Fixed(edge_assist()));
+    assert_eq!(m2.rerouted, 0, "alive again: home arrivals stay home");
+    assert!(m2.gossip_rounds > 0, "second phase must gossip to cold-sync");
+    assert!(
+        !sys.cluster.nodes[0].is_empty(),
+        "revived edge repopulated via gossip"
+    );
+}
