@@ -6,7 +6,7 @@
 CARGO ?= cargo
 
 # Perf-trajectory output name; bump per PR (BENCH_OUT=BENCH_PR<N>.json).
-BENCH_OUT ?= BENCH_PR7.json
+BENCH_OUT ?= BENCH_PR8.json
 
 .PHONY: build test ci bench-json bench-smoke artifacts
 

@@ -2,7 +2,7 @@
 //! real PJRT execution path (criterion substitute; see DESIGN.md §7).
 //!
 //! Measured here, tracked in EXPERIMENTS.md §Perf, and **emitted as a
-//! machine-readable trajectory file** (`BENCH_PR7.json` at the repo
+//! machine-readable trajectory file** (`BENCH_PR8.json` at the repo
 //! root — see `make bench-json`, `BENCH_OUT=` to override) so every
 //! future PR has a baseline to beat:
 //!   * gate decision latency vs GP observation count (target ≪ 1 ms)
@@ -20,6 +20,9 @@
 //!   * serving plane: `serve.enqueue` (bounded priority-queue push/pop)
 //!     and `serve.drain 4edges` (a full collaborative workload through
 //!     the async event loop per iteration)
+//!   * chaos plane: `chaos.inject` (fault-event apply micro — topology
+//!     rewires + link multipliers) and `serve.drain 4edges
+//!     +flaky-uplink` (the same drain under a scripted degrade/restore)
 //!   * dynamic batcher push/flush throughput
 //!   * PJRT LM forward (b1 vs b8 — batching amortization) and embedder
 //!     (skipped with a notice if artifacts/ is absent)
@@ -31,6 +34,7 @@
 
 use std::path::PathBuf;
 
+use eaco_rag::chaos::{injector, FaultEvent, LinkSel};
 use eaco_rag::cluster::EdgeCluster;
 use eaco_rag::config::{ClusterConfig, SystemConfig};
 use eaco_rag::corpus::{ChunkId, Corpus, Profile};
@@ -102,7 +106,7 @@ impl Report {
                 PathBuf::from(env!("CARGO_MANIFEST_DIR"))
                     .parent()
                     .expect("manifest dir has a parent")
-                    .join("BENCH_PR7.json")
+                    .join("BENCH_PR8.json")
             });
         let doc = Json::Arr(self.entries.clone());
         match std::fs::write(&out, doc.to_string() + "\n") {
@@ -340,6 +344,69 @@ fn bench_serve(report: &mut Report, iters: usize, drain_iters: usize) {
     }
 }
 
+fn bench_chaos(report: &mut Report, inject_iters: usize, drain_iters: usize) {
+    // Event-apply micro: one full fault cycle per iteration — partition
+    // + heal (two grouped topology rewires), an uplink degrade/restore
+    // (link-multiplier writes), and a kill/revive pair (store wipe +
+    // rewire). This is the fixed cost a scheduled fault adds to the
+    // event loop.
+    {
+        let corpus = Corpus::generate(Profile::Wiki, 3);
+        let net0 = NetSim::new(8, NetSpec::default(), 9);
+        let mut cluster = EdgeCluster::new(
+            &ClusterConfig::default(),
+            Some(3),
+            8,
+            200,
+            corpus.spec.topics,
+            corpus.chunks.len(),
+            &net0,
+        );
+        let mut net = NetSim::new(8, NetSpec::default(), 9);
+        let cycle = [
+            FaultEvent::Partition(vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]]),
+            FaultEvent::HealPartition,
+            FaultEvent::DegradeLink { sel: LinkSel::AllUplinks, factor: 8.0 },
+            FaultEvent::RestoreLink { sel: LinkSel::AllUplinks },
+            FaultEvent::KillEdge(5),
+            FaultEvent::ReviveEdge(5),
+        ];
+        let r = bench("chaos.inject (event apply micro, 8 edges)", inject_iters, || {
+            for ev in &cycle {
+                injector::apply(ev, &mut cluster, &mut net);
+            }
+            std::hint::black_box(cluster.partitioned());
+        });
+        report.push(&r);
+    }
+
+    // Drain under faults: the serve.drain workload with a scripted
+    // flaky-uplink mid-run — what the probe/injector hooks cost on top
+    // of the fault-free drain above.
+    {
+        let mut cfg = SystemConfig {
+            num_edges: 4,
+            edge_capacity: 200,
+            warmup_steps: 30,
+            ..SystemConfig::default()
+        };
+        cfg.chaos.enabled = true;
+        cfg.chaos.scenario = "flaky-uplink".into();
+        cfg.chaos.at_step = 20;
+        cfg.chaos.duration_steps = 60;
+        let arm = eaco_rag::gating::Arm {
+            retrieval: eaco_rag::gating::Retrieval::EdgeAssisted,
+            gen: eaco_rag::gating::GenLoc::EdgeSlm,
+        };
+        let r = bench("serve.drain 4edges +flaky-uplink", drain_iters, || {
+            let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+            let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 120), cfg.seed);
+            std::hint::black_box(sys.serve_async(&wl, Driver::Fixed(arm)));
+        });
+        report.push(&r);
+    }
+}
+
 fn main() {
     println!("\n=== §Perf hot-path benchmarks ===\n");
     let full = std::env::var("EACO_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
@@ -356,6 +423,7 @@ fn main() {
         bench_ivf(&mut report, 12_000, 1, 8);
         bench_cluster_routing(&mut report, 4, 1);
         bench_serve(&mut report, 1, 1);
+        bench_chaos(&mut report, 1, 1);
         report.write();
         return;
     }
@@ -466,6 +534,9 @@ fn main() {
 
     // --- serving plane: queue micro + full event-loop drain ---
     bench_serve(&mut report, 20_000, 5);
+
+    // --- chaos plane: fault apply micro + drain under faults ---
+    bench_chaos(&mut report, 2000, 5);
 
     // --- batcher throughput ---
     {

@@ -1,0 +1,140 @@
+//! Applies typed fault events through the chaos seams of the knowledge
+//! and network planes.
+//!
+//! One event, two planes, always in agreement: topology/liveness events
+//! go through [`EdgeCluster`]'s churn/partition primitives (which
+//! rewire the neighbor graph, suppressing gossip and neighbor routing
+//! across partition boundaries), and link events go through
+//! [`NetSim`]'s per-link fault multipliers (consulted by
+//! `delay_ms`/`expected_delay_ms`/`pair_cost_ms`). A `Partition` is the
+//! one event that touches both — the cluster confines the knowledge
+//! plane and the netsim reports +∞ for cross-group edge↔edge links —
+//! so a partitioned peer is simultaneously unroutable and unreachable.
+//!
+//! Application is RNG-free and idempotent where the primitives are;
+//! out-of-range edge ids are ignored (a scenario written for a larger
+//! fleet degrades gracefully instead of panicking).
+
+use crate::cluster::EdgeCluster;
+use crate::netsim::NetSim;
+
+use super::scenario::{FaultEvent, LinkSel};
+
+/// Apply one fault event to the cluster + network pair.
+pub fn apply(event: &FaultEvent, cluster: &mut EdgeCluster, net: &mut NetSim) {
+    let n = cluster.num_edges();
+    match event {
+        FaultEvent::KillEdge(e) => {
+            if *e < n {
+                cluster.kill_edge(*e);
+            }
+        }
+        FaultEvent::ReviveEdge(e) => {
+            if *e < n {
+                cluster.revive_edge(*e);
+            }
+        }
+        FaultEvent::Partition(groups) => {
+            cluster.apply_partition(groups);
+            if let Some(g) = cluster.partition_groups() {
+                net.set_partition(g);
+            }
+        }
+        FaultEvent::HealPartition => {
+            cluster.heal_partition();
+            net.clear_partition();
+        }
+        FaultEvent::DegradeLink { sel, factor } => set_link(net, sel, *factor),
+        FaultEvent::RestoreLink { sel } => set_link(net, sel, 1.0),
+        FaultEvent::CorrelatedFailure(set) => cluster.kill_group(set),
+    }
+}
+
+fn set_link(net: &mut NetSim, sel: &LinkSel, factor: f64) {
+    match sel {
+        LinkSel::AllUplinks => net.set_uplink_factor(None, factor),
+        LinkSel::Uplink(e) => net.set_uplink_factor(Some(*e), factor),
+        LinkSel::Access(e) => net.set_access_factor(Some(*e), factor),
+        LinkSel::Pair(a, b) => net.set_pair_factor(*a, *b, factor),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::corpus::{Corpus, Profile};
+    use crate::netsim::{Link, NetSpec};
+
+    fn world(n: usize) -> (Corpus, EdgeCluster, NetSim) {
+        let c = Corpus::generate(Profile::Wiki, 6);
+        let net = NetSim::new(n, NetSpec::default(), 7);
+        let cl = EdgeCluster::new(
+            &ClusterConfig::default(),
+            Some(2),
+            n,
+            200,
+            c.spec.topics,
+            c.chunks.len(),
+            &net,
+        );
+        (c, cl, net)
+    }
+
+    #[test]
+    fn kill_and_revive_round_trip() {
+        let (_c, mut cl, mut net) = world(4);
+        apply(&FaultEvent::KillEdge(1), &mut cl, &mut net);
+        assert!(!cl.is_alive(1));
+        // Re-kill and out-of-range kill are no-ops.
+        apply(&FaultEvent::KillEdge(1), &mut cl, &mut net);
+        apply(&FaultEvent::KillEdge(99), &mut cl, &mut net);
+        assert_eq!(cl.alive_count(), 3);
+        apply(&FaultEvent::ReviveEdge(1), &mut cl, &mut net);
+        assert!(cl.is_alive(1));
+    }
+
+    #[test]
+    fn partition_hits_both_planes_and_heals() {
+        let (_c, mut cl, mut net) = world(4);
+        apply(
+            &FaultEvent::Partition(vec![vec![0, 1], vec![2, 3]]),
+            &mut cl,
+            &mut net,
+        );
+        assert!(cl.partitioned());
+        assert!(!net.reachable(0, 2));
+        assert!(net.reachable(0, 1));
+        assert_eq!(net.pair_cost_ms(1, 2), f64::INFINITY);
+        for &nb in cl.topology.neighbors(0) {
+            assert!(nb < 2, "knowledge plane crossed the partition");
+        }
+        apply(&FaultEvent::HealPartition, &mut cl, &mut net);
+        assert!(!cl.partitioned());
+        assert!(net.reachable(0, 2));
+        assert!(net.pair_cost_ms(1, 2).is_finite());
+    }
+
+    #[test]
+    fn degrade_and_restore_scale_uplinks() {
+        let (_c, mut cl, mut net) = world(3);
+        let base = net.expected_delay_ms(Link::EdgeToCloud(0), 10);
+        apply(
+            &FaultEvent::DegradeLink { sel: LinkSel::AllUplinks, factor: 5.0 },
+            &mut cl,
+            &mut net,
+        );
+        let worse = net.expected_delay_ms(Link::EdgeToCloud(0), 10);
+        assert_eq!(worse.to_bits(), (base * 5.0).to_bits());
+        apply(&FaultEvent::RestoreLink { sel: LinkSel::AllUplinks }, &mut cl, &mut net);
+        assert_eq!(net.expected_delay_ms(Link::EdgeToCloud(0), 10).to_bits(), base.to_bits());
+    }
+
+    #[test]
+    fn correlated_failure_kills_the_zone() {
+        let (_c, mut cl, mut net) = world(5);
+        apply(&FaultEvent::CorrelatedFailure(vec![1, 2]), &mut cl, &mut net);
+        assert_eq!(cl.alive_count(), 3);
+        assert!(!cl.is_alive(1) && !cl.is_alive(2));
+    }
+}

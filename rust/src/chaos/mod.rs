@@ -1,0 +1,36 @@
+//! The deterministic fault-injection plane.
+//!
+//! EACO-RAG's edge tier only pays off if collaborative retrieval
+//! survives real edge conditions — node churn, network partitions,
+//! degraded links. This subsystem turns those conditions into
+//! first-class, *reproducible* simulation inputs and measures whether
+//! the gossip/placement/serve stack actually delivers its recovery and
+//! staleness bounds:
+//!
+//! * [`scenario`] — typed fault schedules ([`FaultEvent`]: kill/revive,
+//!   partitions, link degradation, correlated failures) pinned to
+//!   virtual-time steps; presets `rolling-restart`, `split-brain`,
+//!   `flaky-uplink` parameterized by the `[chaos]` config section.
+//! * [`injector`] — applies events through the fault seams of
+//!   [`crate::netsim`] (per-link multipliers, partition reachability)
+//!   and [`crate::cluster`] (group kill/revive, partition-aware
+//!   topology rewires that suppress cross-boundary gossip).
+//! * [`probe`] — recovery time, version-lag staleness, and availability
+//!   measured from arrival-order observations ([`ChaosOutcome`]).
+//! * [`sla`] — declarative `recovery_ms <= X` / staleness / availability
+//!   assertions producing a machine-readable JSON [`ChaosReport`].
+//!
+//! The whole plane is RNG-free: faults change *which* work happens
+//! (reroutes, sheds, gossip reach) but never perturb the random streams
+//! of admitted queries — and with `[chaos]` disabled, every serve/sim
+//! path is bit-identical to a build without this module (asserted in
+//! `tests/chaos_determinism.rs`).
+
+pub mod injector;
+pub mod probe;
+pub mod scenario;
+pub mod sla;
+
+pub use probe::{ChaosOutcome, ChaosProbe};
+pub use scenario::{FaultEvent, LinkSel, Scenario, ScheduledFault};
+pub use sla::{ChaosReport, SlaCheck, SlaSpec};

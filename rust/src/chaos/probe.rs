@@ -1,0 +1,304 @@
+//! Recovery / staleness / availability probes sampled by the serve
+//! event loop during a chaos run.
+//!
+//! All probe inputs are **arrival-time** observations (event order, the
+//! quantity that is invariant across worker counts and repeats), never
+//! dispatch/completion wall positions — so a chaos run's
+//! [`ChaosOutcome`] is part of the deterministic digest surface:
+//!
+//! * **Recovery**: for each revived edge, the time from the revive
+//!   event to the arrival of the first query that completes on that
+//!   edge with a non-empty (re-synced) store. The worst case across
+//!   revives is reported; an edge still empty/unserved at run end
+//!   counts as unrecovered.
+//! * **Staleness**: [`crate::cluster::EdgeCluster::max_version_lag`]
+//!   sampled at every fault application and after every gossip round —
+//!   both the run-wide max and the max while a partition was active.
+//! * **Availability**: completed / (completed + shed), taken from the
+//!   serve counters at run end.
+
+use crate::cluster::EdgeCluster;
+
+use super::scenario::FaultEvent;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_fold(h: u64, x: u64) -> u64 {
+    let mut h = h;
+    for b in x.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Live probe state for one serve run.
+#[derive(Clone, Debug)]
+pub struct ChaosProbe {
+    /// Per-edge: virtual time of the pending revive awaiting its first
+    /// post-revive served query.
+    revive_pending: Vec<Option<f64>>,
+    partition_active: bool,
+    faults_applied: u64,
+    max_staleness: u64,
+    max_staleness_partitioned: u64,
+    worst_recovery_ms: Option<f64>,
+    recoveries: u64,
+}
+
+impl ChaosProbe {
+    pub fn new(num_edges: usize) -> ChaosProbe {
+        ChaosProbe {
+            revive_pending: vec![None; num_edges],
+            partition_active: false,
+            faults_applied: 0,
+            max_staleness: 0,
+            max_staleness_partitioned: 0,
+            worst_recovery_ms: None,
+            recoveries: 0,
+        }
+    }
+
+    /// Record a fault application at virtual time `now_ms` (called
+    /// right after the injector applied it).
+    pub fn on_fault(&mut self, event: &FaultEvent, now_ms: f64, cluster: &EdgeCluster) {
+        self.faults_applied += 1;
+        match event {
+            FaultEvent::ReviveEdge(e) => {
+                if let Some(p) = self.revive_pending.get_mut(*e) {
+                    *p = Some(now_ms);
+                }
+            }
+            FaultEvent::KillEdge(e) => {
+                if let Some(p) = self.revive_pending.get_mut(*e) {
+                    *p = None;
+                }
+            }
+            FaultEvent::CorrelatedFailure(set) => {
+                for e in set {
+                    if let Some(p) = self.revive_pending.get_mut(*e) {
+                        *p = None;
+                    }
+                }
+            }
+            FaultEvent::Partition(_) => self.partition_active = true,
+            FaultEvent::HealPartition => self.partition_active = false,
+            FaultEvent::DegradeLink { .. } | FaultEvent::RestoreLink { .. } => {}
+        }
+        self.sample(cluster);
+    }
+
+    /// Sample staleness after a gossip round.
+    pub fn on_gossip(&mut self, cluster: &EdgeCluster) {
+        self.sample(cluster);
+    }
+
+    /// Record a completed query: `edge` is the edge it was served on,
+    /// `arrival_ms` its arrival time (worker-invariant). Closes any
+    /// pending recovery window on that edge once its store is non-empty
+    /// again.
+    pub fn on_done(&mut self, edge: usize, arrival_ms: f64, cluster: &EdgeCluster) {
+        let Some(Some(t0)) = self.revive_pending.get(edge).copied() else {
+            return;
+        };
+        if cluster.nodes[edge].is_empty() {
+            return; // revived but not yet re-synced: keep waiting
+        }
+        let r = (arrival_ms - t0).max(0.0);
+        self.worst_recovery_ms = Some(match self.worst_recovery_ms {
+            Some(w) => w.max(r),
+            None => r,
+        });
+        self.recoveries += 1;
+        self.revive_pending[edge] = None;
+    }
+
+    fn sample(&mut self, cluster: &EdgeCluster) {
+        let lag = cluster.max_version_lag();
+        self.max_staleness = self.max_staleness.max(lag);
+        if self.partition_active {
+            self.max_staleness_partitioned = self.max_staleness_partitioned.max(lag);
+        }
+    }
+
+    /// Finalize into the run's outcome. `completed`/`shed`/`rerouted`
+    /// come from the serve counters.
+    pub fn outcome(
+        &self,
+        scenario: &str,
+        completed: usize,
+        shed: usize,
+        rerouted: usize,
+    ) -> ChaosOutcome {
+        ChaosOutcome {
+            scenario: scenario.to_string(),
+            faults_applied: self.faults_applied,
+            recoveries: self.recoveries,
+            unrecovered: self.revive_pending.iter().filter(|p| p.is_some()).count() as u64,
+            recovery_ms: self.worst_recovery_ms,
+            max_staleness: self.max_staleness,
+            max_staleness_partitioned: self.max_staleness_partitioned,
+            completed: completed as u64,
+            shed: shed as u64,
+            rerouted: rerouted as u64,
+        }
+    }
+}
+
+/// The measured outcome of one chaos run — attached to
+/// [`crate::serve::metrics::ServeMetrics`] and folded into its digest
+/// (every field here is worker-invariant and bit-reproducible).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosOutcome {
+    pub scenario: String,
+    pub faults_applied: u64,
+    /// Revive windows closed by a served query from a re-synced store.
+    pub recoveries: u64,
+    /// Revive windows still open at run end (edge never recovered).
+    pub unrecovered: u64,
+    /// Worst-case recovery time across closed windows; `None` when the
+    /// scenario revived nothing (e.g. pure split-brain).
+    pub recovery_ms: Option<f64>,
+    /// Max version lag observed anywhere in the run.
+    pub max_staleness: u64,
+    /// Max version lag observed while a partition was active.
+    pub max_staleness_partitioned: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub rerouted: u64,
+}
+
+impl ChaosOutcome {
+    /// Fraction of non-overflow demand that was served:
+    /// completed / (completed + shed); 1.0 for an empty run.
+    pub fn availability(&self) -> f64 {
+        let total = self.completed + self.shed;
+        if total == 0 {
+            1.0
+        } else {
+            self.completed as f64 / total as f64
+        }
+    }
+
+    /// Deterministic digest over every field (strings byte-folded,
+    /// floats by bit pattern).
+    pub fn digest(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for b in self.scenario.as_bytes() {
+            h = (h ^ *b as u64).wrapping_mul(FNV_PRIME);
+        }
+        for x in [
+            self.faults_applied,
+            self.recoveries,
+            self.unrecovered,
+            self.recovery_ms.map(|r| r.to_bits()).unwrap_or(u64::MAX),
+            self.max_staleness,
+            self.max_staleness_partitioned,
+            self.completed,
+            self.shed,
+            self.rerouted,
+        ] {
+            h = fnv_fold(h, x);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::corpus::{Corpus, Profile};
+    use crate::netsim::{NetSim, NetSpec};
+
+    fn cluster(n: usize) -> (Corpus, EdgeCluster) {
+        let c = Corpus::generate(Profile::Wiki, 6);
+        let net = NetSim::new(n, NetSpec::default(), 7);
+        let cl = EdgeCluster::new(
+            &ClusterConfig::default(),
+            Some(2),
+            n,
+            200,
+            c.spec.topics,
+            c.chunks.len(),
+            &net,
+        );
+        (c, cl)
+    }
+
+    #[test]
+    fn recovery_window_needs_a_resynced_store() {
+        let (c, mut cl) = cluster(3);
+        let mut p = ChaosProbe::new(3);
+        cl.kill_edge(1);
+        p.on_fault(&FaultEvent::KillEdge(1), 100.0, &cl);
+        cl.revive_edge(1);
+        p.on_fault(&FaultEvent::ReviveEdge(1), 200.0, &cl);
+        // Served while still empty: the window stays open.
+        p.on_done(1, 250.0, &cl);
+        assert_eq!(p.outcome("t", 0, 0, 0).recoveries, 0);
+        assert_eq!(p.outcome("t", 0, 0, 0).unrecovered, 1);
+        // Store refills → the next served query closes the window.
+        cl.nodes[1].apply_update(&c, &[3, 4]);
+        p.on_done(1, 350.0, &cl);
+        let out = p.outcome("t", 10, 2, 1);
+        assert_eq!(out.recoveries, 1);
+        assert_eq!(out.unrecovered, 0);
+        assert_eq!(out.recovery_ms, Some(150.0));
+        // A second kill cancels any fantasy of the old window.
+        assert_eq!(out.completed, 10);
+        assert!((out.availability() - 10.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kill_cancels_pending_recovery() {
+        let (_c, mut cl) = cluster(3);
+        let mut p = ChaosProbe::new(3);
+        cl.kill_edge(2);
+        p.on_fault(&FaultEvent::KillEdge(2), 10.0, &cl);
+        cl.revive_edge(2);
+        p.on_fault(&FaultEvent::ReviveEdge(2), 20.0, &cl);
+        cl.kill_edge(2);
+        p.on_fault(&FaultEvent::KillEdge(2), 30.0, &cl);
+        assert_eq!(p.outcome("t", 0, 0, 0).unrecovered, 0);
+        assert_eq!(p.outcome("t", 0, 0, 0).recoveries, 0);
+    }
+
+    #[test]
+    fn staleness_sampled_during_partition_only_while_active() {
+        let (c, mut cl) = cluster(4);
+        let mut p = ChaosProbe::new(4);
+        // Everyone holds chunk 3; a publication to edge 0 makes the
+        // other copies one version stale.
+        for e in 1..4 {
+            cl.nodes[e].apply_update(&c, &[3]);
+        }
+        let plan = crate::cloud::UpdatePlan { edge_id: 0, chunks: vec![3], communities: vec![] };
+        cl.apply_cloud_update(&c, 0, &plan);
+        cl.apply_partition(&[vec![0, 1], vec![2, 3]]);
+        p.on_fault(&FaultEvent::Partition(vec![vec![0, 1], vec![2, 3]]), 50.0, &cl);
+        let mid = p.outcome("t", 0, 0, 0);
+        assert_eq!(mid.max_staleness, 1);
+        assert_eq!(mid.max_staleness_partitioned, 1);
+        cl.heal_partition();
+        p.on_fault(&FaultEvent::HealPartition, 90.0, &cl);
+        // Post-heal samples no longer move the partitioned max.
+        p.on_gossip(&cl);
+        let end = p.outcome("t", 0, 0, 0);
+        assert_eq!(end.max_staleness_partitioned, 1);
+    }
+
+    #[test]
+    fn outcome_digest_is_stable_and_sensitive() {
+        let (_c, cl) = cluster(2);
+        let mut p = ChaosProbe::new(2);
+        p.on_fault(&FaultEvent::HealPartition, 1.0, &cl);
+        let a = p.outcome("split-brain", 5, 1, 0);
+        let b = p.outcome("split-brain", 5, 1, 0);
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+        assert_ne!(a.digest(), p.outcome("split-brain", 6, 1, 0).digest());
+        assert_ne!(a.digest(), p.outcome("flaky-uplink", 5, 1, 0).digest());
+        assert_eq!(ChaosOutcome { recovery_ms: None, ..a.clone() }.availability(), 5.0 / 6.0);
+    }
+}

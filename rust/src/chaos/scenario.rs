@@ -1,0 +1,251 @@
+//! Deterministic fault schedules: typed events pinned to virtual-time
+//! steps.
+//!
+//! A [`Scenario`] is nothing but data — a named, step-sorted list of
+//! [`ScheduledFault`]s. No RNG is consumed building or applying one, so
+//! a scenario perturbs a run only through the fault seams themselves
+//! (topology rewires, link multipliers, reachability masks); every
+//! admitted query draws the exact same random stream it would have
+//! drawn in a fault-free run.
+//!
+//! Scenarios come from two places: the [`presets`](Scenario::PRESETS)
+//! (`rolling-restart`, `split-brain`, `flaky-uplink`) parameterized by
+//! the `[chaos]` config section, or hand-built schedules composed
+//! directly from [`FaultEvent`]s in tests and experiments.
+
+use crate::config::ChaosConfig;
+
+/// Which physical link(s) a degrade/restore event targets.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LinkSel {
+    /// Every edge→cloud uplink.
+    AllUplinks,
+    /// One edge's edge→cloud uplink.
+    Uplink(usize),
+    /// One edge's user→edge access link.
+    Access(usize),
+    /// One symmetric edge↔edge pair link.
+    Pair(usize, usize),
+}
+
+/// One typed fault. Applying an event is idempotent where the
+/// underlying primitive is (kill of a dead edge, revive of an alive
+/// edge, heal with no partition are all no-ops).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// Machine loss: wipe the edge's store and rewire around it.
+    KillEdge(usize),
+    /// The edge rejoins empty and cold-syncs via gossip.
+    ReviveEdge(usize),
+    /// Split the fleet into reachability groups; unlisted edges are
+    /// isolated in singleton groups.
+    Partition(Vec<Vec<usize>>),
+    /// Remove the active partition (if any).
+    HealPartition,
+    /// Multiply the selected link's latency by `factor` (> 1 degrades).
+    DegradeLink { sel: LinkSel, factor: f64 },
+    /// Reset the selected link's multiplier to 1.0.
+    RestoreLink { sel: LinkSel },
+    /// Correlated failure: a rack/zone of edges dies at once.
+    CorrelatedFailure(Vec<usize>),
+}
+
+/// A fault pinned to the virtual-time step at which it fires. The serve
+/// loop maps `at_step` to the arrival time of the first workload event
+/// at or after that step and schedules the fault *before* that arrival
+/// on the shared `(time, seq)` heap.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScheduledFault {
+    pub at_step: usize,
+    pub event: FaultEvent,
+}
+
+/// A named, deterministic fault schedule (sorted by `at_step`, stable —
+/// same-step faults apply in schedule order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub schedule: Vec<ScheduledFault>,
+}
+
+impl Scenario {
+    /// Preset names accepted by the `[chaos] scenario` config key.
+    pub const PRESETS: [&'static str; 3] =
+        ["rolling-restart", "split-brain", "flaky-uplink"];
+
+    /// Is `name` a known preset?
+    pub fn is_known(name: &str) -> bool {
+        Self::PRESETS.contains(&name)
+    }
+
+    /// Build the preset named by `cfg.scenario`, parameterized by the
+    /// `[chaos]` knobs. `None` for an unknown name — config parsing
+    /// validates the name up front, so callers holding a parsed config
+    /// may expect `Some`.
+    pub fn from_config(cfg: &ChaosConfig, num_edges: usize) -> Option<Scenario> {
+        match cfg.scenario.as_str() {
+            "rolling-restart" => {
+                Some(Self::rolling_restart(num_edges, cfg.at_step, cfg.duration_steps))
+            }
+            "split-brain" => Some(Self::split_brain(num_edges, cfg.at_step, cfg.duration_steps)),
+            "flaky-uplink" => {
+                Some(Self::flaky_uplink(cfg.at_step, cfg.duration_steps, cfg.degrade_factor))
+            }
+            _ => None,
+        }
+    }
+
+    /// Kill and revive each edge in turn, one at a time: edge `e` dies
+    /// at `at + e·stagger` and revives at `at + (e+1)·stagger` — its
+    /// revive lands at the same step the next edge dies, and the
+    /// schedule order (revive generated first) keeps at most one edge
+    /// down at any instant.
+    pub fn rolling_restart(num_edges: usize, at_step: usize, duration_steps: usize) -> Scenario {
+        let n = num_edges.max(1);
+        let stagger = (duration_steps / n).max(1);
+        let mut schedule = Vec::with_capacity(2 * n);
+        for e in 0..n {
+            schedule.push(ScheduledFault {
+                at_step: at_step + e * stagger,
+                event: FaultEvent::ReviveEdge(e),
+            });
+            schedule.push(ScheduledFault {
+                at_step: at_step + e * stagger,
+                event: FaultEvent::KillEdge(e),
+            });
+        }
+        // Shift revives one stagger later than their kills. Done here
+        // (rather than computed inline) so the kill/revive interleaving
+        // above reads in firing order.
+        for f in schedule.iter_mut() {
+            if matches!(f.event, FaultEvent::ReviveEdge(_)) {
+                f.at_step += stagger;
+            }
+        }
+        Scenario { name: "rolling-restart".into(), schedule: sorted(schedule) }
+    }
+
+    /// Partition the fleet into two halves at `at_step` and heal at
+    /// `at_step + duration_steps`.
+    pub fn split_brain(num_edges: usize, at_step: usize, duration_steps: usize) -> Scenario {
+        let n = num_edges.max(1);
+        let cut = (n + 1) / 2;
+        let groups = vec![(0..cut).collect::<Vec<_>>(), (cut..n).collect::<Vec<_>>()];
+        let schedule = vec![
+            ScheduledFault { at_step, event: FaultEvent::Partition(groups) },
+            ScheduledFault {
+                at_step: at_step + duration_steps.max(1),
+                event: FaultEvent::HealPartition,
+            },
+        ];
+        Scenario { name: "split-brain".into(), schedule }
+    }
+
+    /// Degrade every edge→cloud uplink by `factor` at `at_step`,
+    /// restore at `at_step + duration_steps`.
+    pub fn flaky_uplink(at_step: usize, duration_steps: usize, factor: f64) -> Scenario {
+        let schedule = vec![
+            ScheduledFault {
+                at_step,
+                event: FaultEvent::DegradeLink { sel: LinkSel::AllUplinks, factor },
+            },
+            ScheduledFault {
+                at_step: at_step + duration_steps.max(1),
+                event: FaultEvent::RestoreLink { sel: LinkSel::AllUplinks },
+            },
+        ];
+        Scenario { name: "flaky-uplink".into(), schedule }
+    }
+}
+
+/// Stable sort by step: same-step faults keep their generation order.
+fn sorted(mut schedule: Vec<ScheduledFault>) -> Vec<ScheduledFault> {
+    schedule.sort_by_key(|f| f.at_step);
+    schedule
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_known_and_buildable_from_config() {
+        for name in Scenario::PRESETS {
+            assert!(Scenario::is_known(name));
+            let cfg = ChaosConfig { scenario: name.to_string(), ..ChaosConfig::default() };
+            let sc = Scenario::from_config(&cfg, 4).expect("preset builds");
+            assert_eq!(sc.name, name);
+            assert!(!sc.schedule.is_empty());
+        }
+        assert!(!Scenario::is_known("nope"));
+        let bad = ChaosConfig { scenario: "nope".into(), ..ChaosConfig::default() };
+        assert!(Scenario::from_config(&bad, 4).is_none());
+    }
+
+    #[test]
+    fn schedules_are_step_sorted() {
+        for name in Scenario::PRESETS {
+            let cfg = ChaosConfig { scenario: name.to_string(), ..ChaosConfig::default() };
+            let sc = Scenario::from_config(&cfg, 6).unwrap();
+            for w in sc.schedule.windows(2) {
+                assert!(w[0].at_step <= w[1].at_step, "{name} schedule out of order");
+            }
+        }
+    }
+
+    #[test]
+    fn rolling_restart_downs_at_most_one_edge_at_a_time() {
+        let sc = Scenario::rolling_restart(4, 100, 40); // stagger 10
+        let mut down: Vec<usize> = Vec::new();
+        for f in &sc.schedule {
+            match &f.event {
+                FaultEvent::KillEdge(e) => {
+                    down.push(*e);
+                    assert!(down.len() <= 1, "two edges down at step {}", f.at_step);
+                }
+                FaultEvent::ReviveEdge(e) => {
+                    down.retain(|x| x != e);
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        assert!(down.is_empty(), "an edge was never revived");
+        // Every edge cycles exactly once.
+        let kills = sc
+            .schedule
+            .iter()
+            .filter(|f| matches!(f.event, FaultEvent::KillEdge(_)))
+            .count();
+        assert_eq!(kills, 4);
+    }
+
+    #[test]
+    fn split_brain_halves_then_heals() {
+        let sc = Scenario::split_brain(5, 40, 60);
+        assert_eq!(sc.schedule.len(), 2);
+        let ScheduledFault { at_step, event: FaultEvent::Partition(groups) } = &sc.schedule[0]
+        else {
+            panic!("first event must be the partition");
+        };
+        assert_eq!(*at_step, 40);
+        assert_eq!(groups[0], vec![0, 1, 2]);
+        assert_eq!(groups[1], vec![3, 4]);
+        assert_eq!(
+            sc.schedule[1],
+            ScheduledFault { at_step: 100, event: FaultEvent::HealPartition }
+        );
+    }
+
+    #[test]
+    fn flaky_uplink_degrades_then_restores() {
+        let sc = Scenario::flaky_uplink(10, 20, 6.0);
+        assert_eq!(
+            sc.schedule[0].event,
+            FaultEvent::DegradeLink { sel: LinkSel::AllUplinks, factor: 6.0 }
+        );
+        assert_eq!(sc.schedule[1], ScheduledFault {
+            at_step: 30,
+            event: FaultEvent::RestoreLink { sel: LinkSel::AllUplinks },
+        });
+    }
+}

@@ -1,0 +1,235 @@
+//! Declarative SLA assertions over a chaos run's measured outcome, and
+//! the machine-readable chaos report.
+//!
+//! Thresholds come from the `[chaos]` config section (or CLI flags) and
+//! use sentinels to mean "unchecked": `sla_recovery_ms <= 0`,
+//! `sla_max_staleness < 0`, `sla_min_availability <= 0` each disable
+//! their check. The report serializes to JSON via [`crate::util::json`]
+//! so CI and the `eaco-rag chaos` subcommand can gate on `pass`.
+
+use crate::config::ChaosConfig;
+use crate::util::json::{num, obj, s, Json};
+
+use super::probe::ChaosOutcome;
+
+/// Declarative SLA thresholds; sentinel values disable a check.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SlaSpec {
+    /// Worst-case recovery must be ≤ this many ms (≤ 0 = unchecked).
+    pub recovery_ms: f64,
+    /// Max version lag must be ≤ this many versions (< 0 = unchecked).
+    pub max_staleness: i64,
+    /// Availability must be ≥ this fraction (≤ 0 = unchecked).
+    pub min_availability: f64,
+}
+
+impl SlaSpec {
+    pub fn from_config(cfg: &ChaosConfig) -> SlaSpec {
+        SlaSpec {
+            recovery_ms: cfg.sla_recovery_ms,
+            max_staleness: cfg.sla_max_staleness,
+            min_availability: cfg.sla_min_availability,
+        }
+    }
+
+    /// Does any check apply at all?
+    pub fn any(&self) -> bool {
+        self.recovery_ms > 0.0 || self.max_staleness >= 0 || self.min_availability > 0.0
+    }
+}
+
+/// One evaluated assertion.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlaCheck {
+    pub name: &'static str,
+    pub threshold: f64,
+    pub actual: f64,
+    pub pass: bool,
+}
+
+/// The machine-readable result of a chaos run: the measured outcome
+/// plus every SLA verdict.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosReport {
+    pub outcome: ChaosOutcome,
+    pub checks: Vec<SlaCheck>,
+    pub pass: bool,
+}
+
+impl ChaosReport {
+    /// Evaluate the configured assertions against a measured outcome.
+    /// With no checks configured the report trivially passes (it still
+    /// carries the measurements).
+    pub fn evaluate(outcome: ChaosOutcome, sla: &SlaSpec) -> ChaosReport {
+        let mut checks = Vec::new();
+        if sla.recovery_ms > 0.0 {
+            // An open (never-closed) recovery window is an SLA failure
+            // regardless of threshold; a scenario that revived nothing
+            // passes with actual = 0.
+            let actual = if outcome.unrecovered > 0 {
+                f64::INFINITY
+            } else {
+                outcome.recovery_ms.unwrap_or(0.0)
+            };
+            checks.push(SlaCheck {
+                name: "recovery_ms",
+                threshold: sla.recovery_ms,
+                actual,
+                pass: actual <= sla.recovery_ms,
+            });
+        }
+        if sla.max_staleness >= 0 {
+            let actual = outcome.max_staleness as f64;
+            checks.push(SlaCheck {
+                name: "max_staleness_versions",
+                threshold: sla.max_staleness as f64,
+                actual,
+                pass: outcome.max_staleness <= sla.max_staleness as u64,
+            });
+        }
+        if sla.min_availability > 0.0 {
+            let actual = outcome.availability();
+            checks.push(SlaCheck {
+                name: "availability",
+                threshold: sla.min_availability,
+                actual,
+                pass: actual >= sla.min_availability,
+            });
+        }
+        let pass = checks.iter().all(|c| c.pass);
+        ChaosReport { outcome, checks, pass }
+    }
+
+    /// Serialize for CLI/CI consumption. Schema:
+    /// `{scenario, pass, outcome: {faults_applied, recoveries,
+    /// unrecovered, recovery_ms, max_staleness, max_staleness_partitioned,
+    /// completed, shed, rerouted, availability}, sla: [{name, threshold,
+    /// actual, pass}, ...]}`. `recovery_ms` is `null` when nothing was
+    /// revived; an unrecovered edge reports `"inf"` in its check.
+    pub fn to_json(&self) -> Json {
+        let o = &self.outcome;
+        let recovery = match o.recovery_ms {
+            Some(r) => num(r),
+            None => Json::Null,
+        };
+        obj(vec![
+            ("scenario", s(&o.scenario)),
+            ("pass", Json::Bool(self.pass)),
+            (
+                "outcome",
+                obj(vec![
+                    ("faults_applied", num(o.faults_applied as f64)),
+                    ("recoveries", num(o.recoveries as f64)),
+                    ("unrecovered", num(o.unrecovered as f64)),
+                    ("recovery_ms", recovery),
+                    ("max_staleness", num(o.max_staleness as f64)),
+                    ("max_staleness_partitioned", num(o.max_staleness_partitioned as f64)),
+                    ("completed", num(o.completed as f64)),
+                    ("shed", num(o.shed as f64)),
+                    ("rerouted", num(o.rerouted as f64)),
+                    ("availability", num(o.availability())),
+                ]),
+            ),
+            (
+                "sla",
+                Json::Arr(
+                    self.checks
+                        .iter()
+                        .map(|c| {
+                            obj(vec![
+                                ("name", s(c.name)),
+                                ("threshold", num(c.threshold)),
+                                (
+                                    "actual",
+                                    if c.actual.is_finite() { num(c.actual) } else { s("inf") },
+                                ),
+                                ("pass", Json::Bool(c.pass)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome() -> ChaosOutcome {
+        ChaosOutcome {
+            scenario: "split-brain".into(),
+            faults_applied: 2,
+            recoveries: 1,
+            unrecovered: 0,
+            recovery_ms: Some(1200.0),
+            max_staleness: 1,
+            max_staleness_partitioned: 1,
+            completed: 95,
+            shed: 5,
+            rerouted: 3,
+        }
+    }
+
+    #[test]
+    fn unchecked_sla_trivially_passes() {
+        let sla = SlaSpec { recovery_ms: 0.0, max_staleness: -1, min_availability: 0.0 };
+        assert!(!sla.any());
+        let r = ChaosReport::evaluate(outcome(), &sla);
+        assert!(r.pass);
+        assert!(r.checks.is_empty());
+    }
+
+    #[test]
+    fn thresholds_gate_each_dimension() {
+        let sla = SlaSpec { recovery_ms: 1500.0, max_staleness: 1, min_availability: 0.9 };
+        assert!(sla.any());
+        let r = ChaosReport::evaluate(outcome(), &sla);
+        assert_eq!(r.checks.len(), 3);
+        assert!(r.pass, "1200<=1500, 1<=1, 0.95>=0.9 must all pass");
+        // Tighten each threshold in turn.
+        let tight_r = SlaSpec { recovery_ms: 1000.0, ..sla };
+        assert!(!ChaosReport::evaluate(outcome(), &tight_r).pass);
+        let tight_s = SlaSpec { max_staleness: 0, ..sla };
+        assert!(!ChaosReport::evaluate(outcome(), &tight_s).pass);
+        let tight_a = SlaSpec { min_availability: 0.99, ..sla };
+        assert!(!ChaosReport::evaluate(outcome(), &tight_a).pass);
+    }
+
+    #[test]
+    fn unrecovered_edge_fails_recovery_sla() {
+        let mut o = outcome();
+        o.unrecovered = 1;
+        let sla = SlaSpec { recovery_ms: 1e9, max_staleness: -1, min_availability: 0.0 };
+        let r = ChaosReport::evaluate(o, &sla);
+        assert!(!r.pass, "an open recovery window can never meet the SLA");
+        assert_eq!(r.checks[0].actual, f64::INFINITY);
+    }
+
+    #[test]
+    fn no_revive_scenario_passes_recovery_sla() {
+        let mut o = outcome();
+        o.recoveries = 0;
+        o.recovery_ms = None;
+        let sla = SlaSpec { recovery_ms: 100.0, max_staleness: -1, min_availability: 0.0 };
+        assert!(ChaosReport::evaluate(o, &sla).pass);
+    }
+
+    #[test]
+    fn json_schema_round_trips() {
+        let sla = SlaSpec { recovery_ms: 1500.0, max_staleness: 1, min_availability: 0.9 };
+        let r = ChaosReport::evaluate(outcome(), &sla);
+        let j = r.to_json();
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("scenario").as_str(), Some("split-brain"));
+        assert_eq!(parsed.get("pass").as_bool(), Some(true));
+        let o = parsed.get("outcome");
+        assert_eq!(o.get("completed").as_usize(), Some(95));
+        assert_eq!(o.get("recovery_ms").as_f64(), Some(1200.0));
+        assert!((o.get("availability").as_f64().unwrap() - 0.95).abs() < 1e-12);
+        let checks = parsed.get("sla").as_arr().unwrap();
+        assert_eq!(checks.len(), 3);
+        assert!(checks.iter().all(|c| c.get("pass").as_bool() == Some(true)));
+    }
+}

@@ -107,6 +107,11 @@ pub struct EdgeCluster {
     /// [`Self::revive_edge`]). All-true until a kill, in which case the
     /// topology is rewired around the dead nodes.
     alive: Vec<bool>,
+    /// Active partition: `group_of[e]` is edge `e`'s partition group.
+    /// `None` (the default) means the fleet is fully connected. While
+    /// `Some`, the topology only wires edges within the same group, so
+    /// gossip and neighbor routing are suppressed across the boundary.
+    group_of: Option<Vec<usize>>,
 }
 
 impl EdgeCluster {
@@ -148,6 +153,7 @@ impl EdgeCluster {
             centroid_known: Vec::new(),
             ann_enabled: false,
             alive: vec![true; num_edges],
+            group_of: None,
         }
     }
 
@@ -352,12 +358,21 @@ impl EdgeCluster {
         self.alive.iter().filter(|a| **a).count()
     }
 
+    /// Re-derive the neighbor graph from the current liveness and
+    /// partition state — the single rewire path every churn/fault hook
+    /// funnels through.
+    fn rewire_topology(&mut self) {
+        self.topology.rewire_grouped(&self.alive, self.group_of.as_deref());
+    }
+
     /// Kill an edge mid-run: its store is wiped (a machine loss, not a
     /// graceful drain), placement/gossip forget everything they knew
     /// about it (so a revived edge re-syncs from scratch instead of
     /// being digest-suppressed), and the topology rewires around it —
     /// live edges adopt their nearest live peers and nobody keeps a
-    /// dead neighbor. No-op if already dead.
+    /// dead neighbor. No-op if already dead; killing the last alive
+    /// edge is well-defined (empty topology, routing sheds via
+    /// [`Self::nearest_alive`] returning `None`).
     pub fn kill_edge(&mut self, e: usize) {
         if !self.alive[e] {
             return;
@@ -377,7 +392,7 @@ impl EdgeCluster {
                 *known = None;
             }
         }
-        self.topology.rewire(&self.alive);
+        self.rewire_topology();
     }
 
     /// Revive a dead edge: it rejoins the topology with an empty store
@@ -389,19 +404,119 @@ impl EdgeCluster {
             return;
         }
         self.alive[e] = true;
-        self.topology.rewire(&self.alive);
+        self.rewire_topology();
+    }
+
+    /// Correlated failure: kill every edge in `edges` (a rack / zone
+    /// going dark) with a single topology rewire at the end. Dead or
+    /// repeated ids are no-ops, mirroring [`Self::kill_edge`].
+    pub fn kill_group(&mut self, edges: &[usize]) {
+        let mut changed = false;
+        for &e in edges {
+            if e >= self.nodes.len() || !self.alive[e] {
+                continue;
+            }
+            self.alive[e] = false;
+            let resident: Vec<ChunkId> = self.nodes[e].resident_chunks().collect();
+            for cid in resident {
+                self.nodes[e].evict_resident(cid);
+            }
+            self.placement.forget_edge(e);
+            self.gossiper.forget_edge(e);
+            if self.ann_enabled {
+                for row in self.centroid_known.iter_mut() {
+                    row[e] = None;
+                }
+                for known in self.centroid_known[e].iter_mut() {
+                    *known = None;
+                }
+            }
+            changed = true;
+        }
+        if changed {
+            self.rewire_topology();
+        }
+    }
+
+    /// Revive every edge in `edges` (rack power restored) with a single
+    /// rewire. Alive or out-of-range ids are no-ops.
+    pub fn revive_group(&mut self, edges: &[usize]) {
+        let mut changed = false;
+        for &e in edges {
+            if e >= self.nodes.len() || self.alive[e] {
+                continue;
+            }
+            self.alive[e] = true;
+            changed = true;
+        }
+        if changed {
+            self.rewire_topology();
+        }
+    }
+
+    /// Partition the fleet into the given groups: edges in different
+    /// groups lose all topology links (gossip + neighbor routing stop
+    /// crossing the boundary) until [`Self::heal_partition`]. Edges not
+    /// listed in any group are isolated in singleton groups. The
+    /// network-plane counterpart is
+    /// [`crate::netsim::NetSim::set_partition`]; the chaos injector
+    /// applies both so the knowledge and delay planes agree.
+    pub fn apply_partition(&mut self, groups: &[Vec<usize>]) {
+        let n = self.nodes.len();
+        // Singleton default: group ids >= groups.len() never collide
+        // with a listed group.
+        let mut group_of: Vec<usize> = (0..n).map(|e| groups.len() + e).collect();
+        for (gid, members) in groups.iter().enumerate() {
+            for &e in members {
+                if e < n {
+                    group_of[e] = gid;
+                }
+            }
+        }
+        self.group_of = Some(group_of);
+        self.rewire_topology();
+    }
+
+    /// Heal an active partition: the topology re-forms across the old
+    /// boundary and the next gossip rounds reconcile version lag. No-op
+    /// if no partition is active.
+    pub fn heal_partition(&mut self) {
+        if self.group_of.take().is_some() {
+            self.rewire_topology();
+        }
+    }
+
+    /// Is a partition currently active?
+    pub fn partitioned(&self) -> bool {
+        self.group_of.is_some()
+    }
+
+    /// The partition group map, if a partition is active (one group id
+    /// per edge) — the injector mirrors this into the netsim.
+    pub fn partition_groups(&self) -> Option<&[usize]> {
+        self.group_of.as_deref()
     }
 
     /// The cheapest-link alive edge to serve traffic homed at `e`:
     /// `e` itself when alive, else the alive edge with the lowest
-    /// netsim link cost (ties → lowest id), else `None` when the whole
-    /// fleet is down.
+    /// netsim link cost. Ties break to the **lowest edge id** (the
+    /// comparator is `cost.partial_cmp(..).then(a.cmp(&b))`, and
+    /// `min_by` keeps the first minimum) — pinned by test so reroute
+    /// targets stay deterministic. Returns `None` when no candidate is
+    /// alive. During a partition, candidates are confined to `e`'s own
+    /// group: traffic homed in a partition with no alive edge is shed,
+    /// not teleported across the unreachable boundary.
     pub fn nearest_alive(&self, e: usize) -> Option<usize> {
         if self.alive.get(e).copied().unwrap_or(false) {
             return Some(e);
         }
+        let same_group = |x: usize| {
+            self.group_of
+                .as_ref()
+                .is_none_or(|g| g.get(x) == g.get(e))
+        };
         (0..self.nodes.len())
-            .filter(|&x| x != e && self.alive[x])
+            .filter(|&x| x != e && self.alive[x] && same_group(x))
             .min_by(|&a, &b| {
                 self.topology
                     .link_cost_ms(e, a)
@@ -409,6 +524,27 @@ impl EdgeCluster {
                     .unwrap()
                     .then(a.cmp(&b))
             })
+    }
+
+    /// Max version lag across the fleet: over every alive edge's
+    /// residents, the largest `authority.latest(c) - resident version`.
+    /// 0 when every resident copy is current — the staleness signal the
+    /// chaos probes sample during/after partitions.
+    pub fn max_version_lag(&self) -> u64 {
+        let mut worst = 0u64;
+        for (e, node) in self.nodes.iter().enumerate() {
+            if !self.alive[e] {
+                continue;
+            }
+            for c in node.resident_chunks() {
+                let lag = self
+                    .authority
+                    .latest(c)
+                    .saturating_sub(self.placement.version_of(e, c));
+                worst = worst.max(lag);
+            }
+        }
+        worst
     }
 
     /// Aggregate (stale, resident) counts across the fleet.
@@ -723,5 +859,159 @@ mod tests {
         assert_eq!(cl.alive_count(), 0);
         assert_eq!(cl.nearest_alive(0), None);
         assert_eq!(cl.nearest_alive(2), None);
+    }
+
+    #[test]
+    fn killing_last_alive_edge_is_well_defined() {
+        let c = Corpus::generate(Profile::Wiki, 6);
+        let mut cl = cluster(3, 2, 100, &c);
+        let chunks: Vec<ChunkId> = (0..50).collect();
+        cl.nodes[2].apply_update(&c, &chunks);
+        cl.kill_edge(0);
+        cl.kill_edge(1);
+        // Edge 2 is the last survivor; killing it must not panic and
+        // must leave a coherent (empty) fleet.
+        cl.kill_edge(2);
+        assert_eq!(cl.alive_count(), 0);
+        assert!(cl.nodes[2].is_empty());
+        assert_eq!(cl.topology.num_links(), 0);
+        assert_eq!(cl.nearest_alive(2), None);
+        // Gossip on an all-dead fleet is a structural no-op.
+        let r = cl.run_gossip_round(&c, 25);
+        assert_eq!(r.chunks, 0);
+        assert_eq!(r.payload_bytes, 0);
+        // The fleet can still come back.
+        cl.revive_edge(1);
+        assert_eq!(cl.alive_count(), 1);
+        assert_eq!(cl.nearest_alive(0), Some(1));
+    }
+
+    #[test]
+    fn nearest_alive_tie_breaks_to_lowest_id() {
+        let c = Corpus::generate(Profile::Wiki, 6);
+        // 4-edge ring: cost(1,0) == cost(1,2) by ring symmetry, so the
+        // reroute target for dead edge 1 must tie-break to id 0.
+        let mut cl = cluster(4, 2, 100, &c);
+        let d01 = cl.topology.link_cost_ms(1, 0);
+        let d12 = cl.topology.link_cost_ms(1, 2);
+        assert_eq!(d01.to_bits(), d12.to_bits(), "ring costs expected symmetric");
+        cl.kill_edge(1);
+        assert_eq!(cl.nearest_alive(1), Some(0), "tie must break to lowest id");
+    }
+
+    #[test]
+    fn correlated_failure_kills_and_revives_as_a_group() {
+        let c = Corpus::generate(Profile::Wiki, 6);
+        let mut cl = cluster(6, 2, 200, &c);
+        let chunks: Vec<ChunkId> = (0..80).collect();
+        for e in 0..6 {
+            cl.nodes[e].apply_update(&c, &chunks);
+        }
+        // Rack {2,3,4} goes dark; repeated and dead ids are no-ops.
+        cl.kill_group(&[2, 3, 4, 3]);
+        assert_eq!(cl.alive_count(), 3);
+        for e in [2usize, 3, 4] {
+            assert!(!cl.is_alive(e));
+            assert!(cl.nodes[e].is_empty());
+            assert!(cl.topology.neighbors(e).is_empty());
+        }
+        for e in [0usize, 1, 5] {
+            for &nb in cl.topology.neighbors(e) {
+                assert!(cl.is_alive(nb), "live edge {e} kept dead neighbor {nb}");
+            }
+        }
+        cl.revive_group(&[2, 3, 4]);
+        assert_eq!(cl.alive_count(), 6);
+        assert!(!cl.topology.neighbors(3).is_empty());
+        // Reviving an alive group again is a no-op.
+        cl.revive_group(&[2, 3, 4]);
+        assert_eq!(cl.alive_count(), 6);
+    }
+
+    #[test]
+    fn partition_confines_topology_routing_and_reroute() {
+        let c = Corpus::generate(Profile::Wiki, 6);
+        let mut cl = cluster(4, 2, 200, &c);
+        cl.apply_partition(&[vec![0, 1], vec![2, 3]]);
+        assert!(cl.partitioned());
+        assert_eq!(cl.partition_groups().unwrap(), &[0, 0, 1, 1]);
+        for a in 0..4usize {
+            for &b in cl.topology.neighbors(a) {
+                assert_eq!(a / 2, b / 2, "cross-partition link {a}->{b}");
+            }
+        }
+        // Reroute for a dead edge stays inside its partition group.
+        cl.kill_edge(3);
+        assert_eq!(cl.nearest_alive(3), Some(2));
+        // ... and sheds (None) when its whole group is down.
+        cl.kill_edge(2);
+        assert_eq!(cl.nearest_alive(3), None, "reroute must not cross the partition");
+        assert_eq!(cl.nearest_alive(0), Some(0));
+        // Heal: the revived topology spans groups again and reroute may
+        // cross the old boundary.
+        cl.heal_partition();
+        assert!(!cl.partitioned());
+        assert!(cl.nearest_alive(3).is_some());
+        // Healing twice is a no-op.
+        cl.heal_partition();
+        assert!(!cl.partitioned());
+    }
+
+    #[test]
+    fn partition_with_unlisted_edges_isolates_them() {
+        let c = Corpus::generate(Profile::Wiki, 6);
+        let mut cl = cluster(5, 2, 100, &c);
+        // Edge 4 appears in no group: singleton isolation.
+        cl.apply_partition(&[vec![0, 1], vec![2, 3]]);
+        assert!(cl.topology.neighbors(4).is_empty());
+        cl.kill_edge(4);
+        assert_eq!(cl.nearest_alive(4), None, "singleton group has no fallback");
+    }
+
+    #[test]
+    fn split_brain_bounds_staleness_then_converges_after_heal() {
+        let c = Corpus::generate(Profile::Wiki, 6);
+        let mut cl = cluster(4, 3, 400, &c);
+        // Provision chunk 7 everywhere at version 1 via one publication
+        // reaching every edge.
+        for e in 0..4 {
+            let plan = UpdatePlan { edge_id: e, chunks: vec![7], communities: vec![] };
+            if e == 0 {
+                cl.apply_cloud_update(&c, 0, &plan);
+            } else {
+                // Same version: publish once, then place on the rest.
+                cl.nodes[e].apply_update(&c, &[7]);
+            }
+        }
+        assert_eq!(cl.max_version_lag(), 1, "manual placements lag the v1 publication");
+        // Keep chunk 7 hot so digests advertise it, and gossip until the
+        // fleet is consistent at v1.
+        for step in [5usize, 25, 50] {
+            cl.observe_query(c.chunks[7].topic, &[7], step);
+            cl.run_gossip_round(&c, step);
+        }
+        assert_eq!(cl.max_version_lag(), 0, "fleet should settle at v1");
+        // Split-brain, then publish v2 to side A only.
+        cl.apply_partition(&[vec![0, 1], vec![2, 3]]);
+        let plan = UpdatePlan { edge_id: 0, chunks: vec![7], communities: vec![] };
+        cl.apply_cloud_update(&c, 60, &plan);
+        cl.observe_query(c.chunks[7].topic, &[7], 60);
+        cl.run_gossip_round(&c, 75);
+        // During the partition side B cannot see v2: lag is exactly the
+        // one missed version, bounded — not unbounded drift.
+        assert_eq!(cl.max_version_lag(), 1, "staleness during partition must be bounded");
+        // Heal and converge within 2 gossip rounds.
+        cl.heal_partition();
+        let mut lag = cl.max_version_lag();
+        for (i, step) in [100usize, 125].into_iter().enumerate() {
+            cl.observe_query(c.chunks[7].topic, &[7], step);
+            cl.run_gossip_round(&c, step);
+            lag = cl.max_version_lag();
+            if lag == 0 {
+                break;
+            }
+            assert!(i < 1, "did not converge within 2 post-heal rounds");
+        }
+        assert_eq!(lag, 0, "post-heal gossip must reconcile version lag");
     }
 }

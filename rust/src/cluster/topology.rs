@@ -79,14 +79,28 @@ impl Topology {
     /// in no one's list. Link costs are static (the machines' positions
     /// don't move), only adjacency changes.
     pub fn rewire(&mut self, alive: &[bool]) {
+        self.rewire_grouped(alive, None);
+    }
+
+    /// Partition-aware rewire: like [`Topology::rewire`], but when
+    /// `group` is `Some`, each alive edge only selects peers in *its
+    /// own* partition group — cross-group links are severed, which
+    /// suppresses gossip and neighbor routing across the partition
+    /// boundary (both walk these neighbor lists). `group[e]` is the
+    /// partition id of edge `e`; `None` means no partition is active.
+    pub fn rewire_grouped(&mut self, alive: &[bool], group: Option<&[usize]>) {
         debug_assert_eq!(alive.len(), self.num_edges);
         let n = self.num_edges;
+        let same_group =
+            |a: usize, b: usize| group.is_none_or(|g| g.get(a) == g.get(b));
         for a in 0..n {
             if !alive[a] {
                 self.neighbors[a].clear();
                 continue;
             }
-            let mut peers: Vec<usize> = (0..n).filter(|&b| b != a && alive[b]).collect();
+            let mut peers: Vec<usize> = (0..n)
+                .filter(|&b| b != a && alive[b] && same_group(a, b))
+                .collect();
             peers.sort_by(|&x, &y| {
                 self.cost_ms[a * n + x]
                     .partial_cmp(&self.cost_ms[a * n + y])
@@ -169,6 +183,43 @@ mod tests {
         for e in 0..8 {
             assert_eq!(t.neighbors(e), built[e].as_slice());
         }
+    }
+
+    #[test]
+    fn grouped_rewire_severs_cross_group_links() {
+        let mut t = topo(8, 3);
+        let built: Vec<Vec<usize>> = (0..8).map(|e| t.neighbors(e).to_vec()).collect();
+        let alive = vec![true; 8];
+        // Split-brain halves: {0..3} vs {4..7}.
+        let group = [0usize, 0, 0, 0, 1, 1, 1, 1];
+        t.rewire_grouped(&alive, Some(&group));
+        for a in 0..8 {
+            assert!(!t.neighbors(a).is_empty(), "edge {a} isolated inside its group");
+            for &b in t.neighbors(a) {
+                assert_eq!(group[a], group[b], "cross-group link {a}->{b} survived");
+            }
+        }
+        // Edge 0's ring neighbor 7 is across the boundary; it must fall
+        // back to in-group peers only.
+        assert!(!t.neighbors(0).contains(&7));
+        // Healing (group=None) reproduces the built graph exactly.
+        t.rewire_grouped(&alive, None);
+        for e in 0..8 {
+            assert_eq!(t.neighbors(e), built[e].as_slice());
+        }
+    }
+
+    #[test]
+    fn grouped_rewire_respects_liveness_too() {
+        let mut t = topo(6, 2);
+        let mut alive = vec![true; 6];
+        alive[1] = false;
+        let group = [0usize, 0, 0, 1, 1, 1];
+        t.rewire_grouped(&alive, Some(&group));
+        assert!(t.neighbors(1).is_empty());
+        // Edge 0 and 2 pair up (1 dead, {3,4,5} out-of-group).
+        assert_eq!(t.neighbors(0), &[2]);
+        assert_eq!(t.neighbors(2), &[0]);
     }
 
     #[test]

@@ -198,6 +198,10 @@ pub struct ServeConfig {
     /// Run gossip rounds as background work items overlapping query
     /// service instead of blocking every server (foreground).
     pub gossip_background: bool,
+    /// Weighted-fair dequeue weights across the three priority lanes
+    /// (high, normal, low), e.g. `"4,2,1"`. `None` (default) keeps the
+    /// legacy strict-priority pop bit-identically.
+    pub wfq_weights: Option<[f64; 3]>,
 }
 
 impl Default for ServeConfig {
@@ -208,6 +212,50 @@ impl Default for ServeConfig {
             slo_ms: 2000.0,
             admission: crate::serve::queue::AdmissionPolicy::None,
             gossip_background: false,
+            wfq_weights: None,
+        }
+    }
+}
+
+/// Knobs for the deterministic fault-injection plane
+/// ([`crate::chaos`]). Disabled by default — a disabled chaos section
+/// keeps every sim/serve path bit-identical to a fault-free build.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// Master switch: schedule the configured scenario's fault events
+    /// into the serve loop.
+    pub enabled: bool,
+    /// Scenario preset name; one of
+    /// [`crate::chaos::Scenario::PRESETS`] (`rolling-restart`,
+    /// `split-brain`, `flaky-uplink`). Validated at parse time.
+    pub scenario: String,
+    /// Virtual-time step of the first fault.
+    pub at_step: usize,
+    /// Length of the fault window in steps (per-edge stagger for
+    /// `rolling-restart`, partition length for `split-brain`, degrade
+    /// window for `flaky-uplink`).
+    pub duration_steps: usize,
+    /// Link latency multiplier for degrade events (`flaky-uplink`).
+    pub degrade_factor: f64,
+    /// SLA: worst-case recovery ≤ this many ms (≤ 0 disables).
+    pub sla_recovery_ms: f64,
+    /// SLA: max version lag ≤ this many versions (< 0 disables).
+    pub sla_max_staleness: i64,
+    /// SLA: availability ≥ this fraction (≤ 0 disables).
+    pub sla_min_availability: f64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            enabled: false,
+            scenario: "split-brain".to_string(),
+            at_step: 40,
+            duration_steps: 60,
+            degrade_factor: 8.0,
+            sla_recovery_ms: 0.0,
+            sla_max_staleness: -1,
+            sla_min_availability: 0.0,
         }
     }
 }
@@ -243,6 +291,7 @@ pub struct SystemConfig {
     pub cluster: ClusterConfig,
     pub ann: AnnConfig,
     pub serve: ServeConfig,
+    pub chaos: ChaosConfig,
     pub seed: u64,
 }
 
@@ -267,6 +316,7 @@ impl Default for SystemConfig {
             cluster: ClusterConfig::default(),
             ann: AnnConfig::default(),
             serve: ServeConfig::default(),
+            chaos: ChaosConfig::default(),
             seed: 42,
         }
     }
@@ -388,6 +438,61 @@ impl SystemConfig {
             }
             "serve.gossip_background" => {
                 self.serve.gossip_background = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "serve.wfq_weights" => {
+                // "4,2,1" → [4.0, 2.0, 1.0]; "none" disables. All three
+                // weights must be finite and > 0 (a zero weight would
+                // starve its lane forever, which strict priority at
+                // least does predictably).
+                if val == "none" {
+                    self.serve.wfq_weights = None;
+                } else {
+                    let parts: Vec<f64> = val
+                        .split(',')
+                        .map(|p| p.trim().parse::<f64>())
+                        .collect::<Result<_, _>>()
+                        .map_err(|_| bad(key, val))?;
+                    let w: [f64; 3] =
+                        parts.try_into().map_err(|_| bad(key, val))?;
+                    if w.iter().any(|x| !x.is_finite() || *x <= 0.0) {
+                        return Err(bad(key, val));
+                    }
+                    self.serve.wfq_weights = Some(w);
+                }
+            }
+            "chaos.enabled" => {
+                self.chaos.enabled = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "chaos.scenario" => {
+                if !crate::chaos::Scenario::is_known(val) {
+                    return Err(format!(
+                        "unknown chaos scenario {val:?} (presets: {})",
+                        crate::chaos::Scenario::PRESETS.join(", ")
+                    ));
+                }
+                self.chaos.scenario = val.to_string();
+            }
+            "chaos.at_step" => {
+                self.chaos.at_step = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "chaos.duration_steps" => {
+                self.chaos.duration_steps = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "chaos.degrade_factor" => {
+                let f: f64 = val.parse().map_err(|_| bad(key, val))?;
+                if !f.is_finite() || f <= 0.0 {
+                    return Err(bad(key, val));
+                }
+                self.chaos.degrade_factor = f;
+            }
+            "chaos.sla_recovery_ms" => {
+                self.chaos.sla_recovery_ms = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "chaos.sla_max_staleness" => {
+                self.chaos.sla_max_staleness = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "chaos.sla_min_availability" => {
+                self.chaos.sla_min_availability = val.parse().map_err(|_| bad(key, val))?;
             }
             other => return Err(format!("unknown config key {other:?}")),
         }
@@ -538,6 +643,57 @@ mod tests {
         assert_eq!(d.workers, 1);
         assert_eq!(d.admission, AdmissionPolicy::None);
         assert!(!d.gossip_background);
+    }
+
+    #[test]
+    fn wfq_weights_from_toml() {
+        let cfg = SystemConfig::from_toml("[serve]\nwfq_weights = \"4,2,1\"").unwrap();
+        assert_eq!(cfg.serve.wfq_weights, Some([4.0, 2.0, 1.0]));
+        let cfg = SystemConfig::from_toml("[serve]\nwfq_weights = \"none\"").unwrap();
+        assert_eq!(cfg.serve.wfq_weights, None);
+        // Wrong arity, zero, negative, and garbage all fail loudly.
+        assert!(SystemConfig::from_toml("[serve]\nwfq_weights = \"4,2\"").is_err());
+        assert!(SystemConfig::from_toml("[serve]\nwfq_weights = \"4,0,1\"").is_err());
+        assert!(SystemConfig::from_toml("[serve]\nwfq_weights = \"4,-2,1\"").is_err());
+        assert!(SystemConfig::from_toml("[serve]\nwfq_weights = \"a,b,c\"").is_err());
+        // Default keeps strict priority.
+        assert_eq!(SystemConfig::default().serve.wfq_weights, None);
+    }
+
+    #[test]
+    fn chaos_knobs_from_toml() {
+        let cfg = SystemConfig::from_toml(
+            r#"
+            [chaos]
+            enabled = true
+            scenario = "flaky-uplink"
+            at_step = 30
+            duration_steps = 50
+            degrade_factor = 6.5
+            sla_recovery_ms = 4000.0
+            sla_max_staleness = 2
+            sla_min_availability = 0.95
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.chaos.enabled);
+        assert_eq!(cfg.chaos.scenario, "flaky-uplink");
+        assert_eq!(cfg.chaos.at_step, 30);
+        assert_eq!(cfg.chaos.duration_steps, 50);
+        assert_eq!(cfg.chaos.degrade_factor, 6.5);
+        assert_eq!(cfg.chaos.sla_recovery_ms, 4000.0);
+        assert_eq!(cfg.chaos.sla_max_staleness, 2);
+        assert_eq!(cfg.chaos.sla_min_availability, 0.95);
+        // Scenario names are validated at parse time so the serve loop
+        // can rely on Scenario::from_config succeeding.
+        assert!(SystemConfig::from_toml("[chaos]\nscenario = \"nope\"").is_err());
+        assert!(SystemConfig::from_toml("[chaos]\ndegrade_factor = 0").is_err());
+        assert!(SystemConfig::from_toml("[chaos]\nbogus = 1").is_err());
+        // Disabled by default — the bit-identity guarantee.
+        let d = SystemConfig::default().chaos;
+        assert!(!d.enabled);
+        assert_eq!(d.scenario, "split-brain");
+        assert!(d.sla_recovery_ms <= 0.0 && d.sla_max_staleness < 0);
     }
 
     #[test]

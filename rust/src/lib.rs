@@ -40,9 +40,13 @@
 //! * [`serve`] — async serving plane: deterministic event loop with
 //!   per-edge bounded queues, deadline-aware admission, background
 //!   gossip as schedulable work, and virtual/wall clock abstraction.
+//! * [`chaos`] — deterministic fault-injection plane: scripted
+//!   partitions, correlated failures, link degradation; recovery /
+//!   staleness / availability probes and SLA reports.
 //! * [`sim`] — full-system simulation harness used by benches/examples.
 //! * [`testutil`] — mini property-testing framework.
 
+pub mod chaos;
 pub mod cloud;
 pub mod cluster;
 pub mod config;

@@ -5,15 +5,21 @@
 //!              generation over a synthetic workload (the E2E path).
 //!   simulate — virtual-time replication of a Table-4 style run
 //!              (baselines + EACO) without touching PJRT.
+//!   chaos    — fault-injection run: a scripted scenario over the
+//!              collaborative serve plane, emitting the JSON chaos
+//!              report (recovery / staleness / availability + SLA
+//!              verdicts); exits non-zero on SLA failure.
 //!   inspect  — print the artifact manifest the runtime would load.
 //!
 //! Examples:
 //!   eaco-rag serve --dataset wiki --steps 400 --qos cost
 //!   eaco-rag simulate --dataset hp --steps 1500 --warmup 500
+//!   eaco-rag chaos --scenario split-brain --sla-staleness 3
 //!   eaco-rag inspect --artifacts artifacts
 
 use std::path::PathBuf;
 
+use eaco_rag::chaos::{ChaosReport, Scenario, SlaSpec};
 use eaco_rag::config::{QosPreset, SystemConfig};
 use eaco_rag::coordinator::Coordinator;
 use eaco_rag::corpus::Profile;
@@ -33,12 +39,14 @@ fn main() {
     let code = match cmd.as_str() {
         "serve" => serve(argv),
         "simulate" => simulate(argv),
+        "chaos" => chaos(argv),
         "inspect" => inspect(argv),
         _ => {
             eprintln!(
-                "usage: eaco-rag <serve|simulate|inspect> [options]\n  \
+                "usage: eaco-rag <serve|simulate|chaos|inspect> [options]\n  \
                  serve    — real PJRT serving over a synthetic workload\n  \
                  simulate — virtual-time Table-4 style run\n  \
+                 chaos    — scripted fault-injection run + SLA report\n  \
                  inspect  — print the artifact manifest"
             );
             2
@@ -196,7 +204,90 @@ fn simulate(argv: Vec<String>) -> i32 {
     println!("{:>12}: {}", "eaco-serve", stats.row());
     println!("         serve: {}", serve_m.row());
     println!("         {}", serve_m.tier_latency_row());
+    // The same serve plane under the default scripted split-brain: what
+    // the fault-free rows above cost in staleness and availability when
+    // the fleet partitions mid-run.
+    let mut cfg_c = cfg_s.clone();
+    cfg_c.chaos.enabled = true;
+    let mut sys = SimSystem::new(cfg_c.clone(), KnowledgeMode::Collaborative);
+    let wl = Workload::generate(&sys.corpus, workload_for(&cfg_c, steps), cfg_c.seed);
+    let (stats, serve_m) = sys.serve_async(&wl, Driver::Gated);
+    println!("{:>12}: {}", "eaco-chaos", stats.row());
+    if let Some(c) = &serve_m.chaos {
+        println!(
+            "         chaos: {} | faults {} | staleness {} (partitioned {}) | availability {:.3}",
+            c.scenario,
+            c.faults_applied,
+            c.max_staleness,
+            c.max_staleness_partitioned,
+            c.availability()
+        );
+    }
     0
+}
+
+fn chaos(argv: Vec<String>) -> i32 {
+    let a = match common("eaco-rag chaos", "scripted fault-injection run + SLA report")
+        .opt("scenario", "split-brain", "preset: rolling-restart | split-brain | flaky-uplink")
+        .opt("at", "40", "workload step at which the scenario begins")
+        .opt("duration", "60", "scenario duration in workload steps")
+        .opt("factor", "8", "link degradation multiplier (flaky-uplink)")
+        .opt("sla-recovery-ms", "0", "recovery SLA in ms (<= 0 disables the check)")
+        .opt("sla-staleness", "-1", "staleness SLA in versions (< 0 disables the check)")
+        .opt("sla-availability", "0", "availability SLA fraction (<= 0 disables the check)")
+        .parse_from(argv)
+    {
+        Ok(a) => a,
+        Err(m) => {
+            eprintln!("{m}");
+            return 2;
+        }
+    };
+    let mut cfg = build_cfg(&a);
+    let scen = a.get("scenario");
+    if !Scenario::is_known(&scen) {
+        eprintln!(
+            "error: unknown --scenario {:?} (expected one of: {})",
+            scen,
+            Scenario::PRESETS.join(", ")
+        );
+        return 2;
+    }
+    let factor = a.get_f64("factor");
+    if !(factor.is_finite() && factor > 0.0) {
+        eprintln!("error: --factor must be a positive finite multiplier (got {factor})");
+        return 2;
+    }
+    let staleness = match a.get("sla-staleness").parse::<i64>() {
+        Ok(v) => v,
+        Err(_) => {
+            eprintln!(
+                "option --sla-staleness expects an integer (got {:?})",
+                a.get("sla-staleness")
+            );
+            return 2;
+        }
+    };
+    cfg.chaos.enabled = true;
+    cfg.chaos.scenario = scen;
+    cfg.chaos.at_step = a.get_usize("at");
+    cfg.chaos.duration_steps = a.get_usize("duration");
+    cfg.chaos.degrade_factor = factor;
+    cfg.chaos.sla_recovery_ms = a.get_f64("sla-recovery-ms");
+    cfg.chaos.sla_max_staleness = staleness;
+    cfg.chaos.sla_min_availability = a.get_f64("sla-availability");
+    let steps = a.get_usize("steps");
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+    let wl = Workload::generate(&sys.corpus, workload_for(&cfg, steps), cfg.seed);
+    let (_, serve_m) = sys.serve_async(&wl, Driver::Gated);
+    let outcome = serve_m.chaos.expect("a chaos-enabled run attaches an outcome");
+    let report = ChaosReport::evaluate(outcome, &SlaSpec::from_config(&cfg.chaos));
+    println!("{}", report.to_json().to_string());
+    if report.pass {
+        0
+    } else {
+        1
+    }
 }
 
 fn inspect(argv: Vec<String>) -> i32 {

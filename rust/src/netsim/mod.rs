@@ -10,6 +10,36 @@
 
 use crate::util::rng::Rng;
 
+/// Runtime fault state injected by the chaos plane ([`crate::chaos`]):
+/// per-link delay multipliers (degraded links) and a partition group
+/// assignment (edges in different groups are mutually unreachable).
+/// All fields default to the healthy state; a `NetSim` without faults
+/// never allocates one, so the no-faults paths are byte-for-byte the
+/// pre-chaos computation.
+#[derive(Clone, Debug)]
+pub struct LinkFaults {
+    /// Per-edge multiplier on the edge→cloud uplink (1.0 = healthy).
+    uplink: Vec<f64>,
+    /// Per-edge multiplier on the user→edge access link.
+    access: Vec<f64>,
+    /// Symmetric n×n multipliers on the edge↔edge links.
+    pair: Vec<f64>,
+    /// Partition group per edge; `None` = no partition.
+    group: Option<Vec<usize>>,
+}
+
+impl LinkFaults {
+    fn new(num_edges: usize) -> LinkFaults {
+        let n = num_edges.max(1);
+        LinkFaults {
+            uplink: vec![1.0; n],
+            access: vec![1.0; n],
+            pair: vec![1.0; n * n],
+            group: None,
+        }
+    }
+}
+
 /// A directed communication link in the edge/cloud topology.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Link {
@@ -58,6 +88,9 @@ pub struct NetSim {
     rng: Rng,
     /// Per-edge phase offsets so edges don't congest in lockstep.
     edge_phase: Vec<f64>,
+    /// Chaos-plane fault state; `None` (the default) keeps every path
+    /// bit-identical to a fault-free simulator.
+    faults: Option<LinkFaults>,
 }
 
 impl NetSim {
@@ -71,6 +104,107 @@ impl NetSim {
             num_edges,
             rng,
             edge_phase,
+            faults: None,
+        }
+    }
+
+    /// Lazily materialize the fault state (first chaos event).
+    fn faults_mut(&mut self) -> &mut LinkFaults {
+        let n = self.num_edges;
+        self.faults.get_or_insert_with(|| LinkFaults::new(n))
+    }
+
+    /// Any fault state active (degraded links or a partition)?
+    pub fn faulted(&self) -> bool {
+        self.faults.is_some()
+    }
+
+    /// Degrade the edge→cloud uplink of edge `e` (or every edge when
+    /// `None`) by `factor` (≥ 1 slows it down; 1.0 restores). RNG-free:
+    /// multipliers apply after the jitter draw, so the random stream of
+    /// every delay sample is untouched.
+    pub fn set_uplink_factor(&mut self, e: Option<usize>, factor: f64) {
+        let f = self.faults_mut();
+        match e {
+            Some(e) => f.uplink[e % f.uplink.len()] = factor,
+            None => f.uplink.fill(factor),
+        }
+    }
+
+    /// Degrade the user→edge access link of edge `e` (or all edges).
+    pub fn set_access_factor(&mut self, e: Option<usize>, factor: f64) {
+        let f = self.faults_mut();
+        match e {
+            Some(e) => f.access[e % f.access.len()] = factor,
+            None => f.access.fill(factor),
+        }
+    }
+
+    /// Degrade the a↔b inter-edge link (symmetric) by `factor`.
+    pub fn set_pair_factor(&mut self, a: usize, b: usize, factor: f64) {
+        let n = self.num_edges.max(1);
+        let f = self.faults_mut();
+        if a < n && b < n {
+            f.pair[a * n + b] = factor;
+            f.pair[b * n + a] = factor;
+        }
+    }
+
+    /// Impose a partition: `group_of[e]` is edge `e`'s partition group;
+    /// edges in different groups become mutually unreachable (their
+    /// links report infinite delay/cost until [`Self::clear_partition`]).
+    /// The cluster plane computes the same group vector so routing,
+    /// gossip, and the delay model agree on reachability.
+    pub fn set_partition(&mut self, group_of: &[usize]) {
+        let n = self.num_edges.max(1);
+        let mut g = vec![0usize; n];
+        for (e, slot) in g.iter_mut().enumerate() {
+            *slot = group_of.get(e).copied().unwrap_or(e);
+        }
+        self.faults_mut().group = Some(g);
+    }
+
+    /// Heal the partition (degraded-link factors survive).
+    pub fn clear_partition(&mut self) {
+        if let Some(f) = self.faults.as_mut() {
+            f.group = None;
+        }
+    }
+
+    /// Can edges `a` and `b` currently reach each other? Always true
+    /// without a partition.
+    pub fn reachable(&self, a: usize, b: usize) -> bool {
+        if a == b {
+            return true;
+        }
+        match self.faults.as_ref().and_then(|f| f.group.as_ref()) {
+            Some(g) => g.get(a) == g.get(b),
+            None => true,
+        }
+    }
+
+    /// Current fault multiplier for `link`: 1.0 when healthy, the
+    /// configured degradation factor when degraded, and +∞ for an
+    /// edge↔edge link severed by a partition (an unreachable peer is an
+    /// infinitely slow one — uniform across the delay/cost functions).
+    fn fault_factor(&self, link: Link) -> f64 {
+        let Some(f) = self.faults.as_ref() else {
+            return 1.0;
+        };
+        match link {
+            Link::UserToEdge(e) => f.access[e % f.access.len()],
+            Link::EdgeToCloud(e) => f.uplink[e % f.uplink.len()],
+            Link::EdgeToEdge(a, b) => {
+                if !self.reachable(a, b) {
+                    return f64::INFINITY;
+                }
+                let n = self.num_edges.max(1);
+                if a < n && b < n {
+                    f.pair[a * n + b]
+                } else {
+                    1.0
+                }
+            }
         }
     }
 
@@ -104,7 +238,11 @@ impl NetSim {
         1.0 + self.spec.congestion_amp * 0.5 * (1.0 + theta.sin()) // in [1, 1+amp]
     }
 
-    /// One-way delay sample for a link at a step (jittered).
+    /// One-way delay sample for a link at a step (jittered). Chaos
+    /// fault multipliers apply *after* the jitter draw, so injecting or
+    /// lifting a fault never changes how many RNG samples a run
+    /// consumes; with no fault state active the computation is
+    /// byte-for-byte the fault-free one.
     pub fn delay_ms(&mut self, link: Link, step: usize) -> f64 {
         let base = self.base(link);
         if base == 0.0 {
@@ -112,13 +250,22 @@ impl NetSim {
         }
         let congested = base * self.congestion(link, step);
         let jitter = (self.rng.normal() * self.spec.jitter_sigma).exp();
-        congested * jitter
+        match self.faults {
+            None => congested * jitter,
+            Some(_) => congested * jitter * self.fault_factor(link),
+        }
     }
 
     /// Expected (jitter-free) delay — what a monitoring plane would
-    /// report; the gate observes this as context `d_t`.
+    /// report; the gate observes this as context `d_t`. Consults the
+    /// chaos fault state: degraded links scale up, partitioned
+    /// edge↔edge links report +∞.
     pub fn expected_delay_ms(&self, link: Link, step: usize) -> f64 {
-        self.base(link) * self.congestion(link, step)
+        let base = self.base(link) * self.congestion(link, step);
+        match self.faults {
+            None => base,
+            Some(_) => base * self.fault_factor(link),
+        }
     }
 
     /// Static cost (ms) of the a↔b inter-edge link, used by the cluster
@@ -127,6 +274,14 @@ impl NetSim {
     /// sites (nearby ids are topologically close — same metro, adjacent
     /// rack rows), so gossip and collaborative retrieval prefer cheap
     /// links. Symmetric, deterministic (no jitter), 0 for `a == b`.
+    /// Consults the chaos fault state like [`Self::expected_delay_ms`]:
+    /// a degraded pair link costs proportionally more and a partitioned
+    /// pair costs +∞ (unreachable). Note the cluster [`Topology`]
+    /// snapshots these costs at build time — machines don't move, so
+    /// live fault state changes reachability/adjacency (via the
+    /// partition-aware rewire), never the static geometry.
+    ///
+    /// [`Topology`]: crate::cluster::topology::Topology
     pub fn pair_cost_ms(&self, a: usize, b: usize) -> f64 {
         if a == b {
             return 0.0;
@@ -135,7 +290,11 @@ impl NetSim {
         let raw = a.abs_diff(b);
         let ring = raw.min(n - raw) as f64;
         let half = (n as f64 / 2.0).max(1.0);
-        self.spec.edge_edge_base_ms * (0.5 + ring / half)
+        let cost = self.spec.edge_edge_base_ms * (0.5 + ring / half);
+        match self.faults {
+            None => cost,
+            Some(_) => cost * self.fault_factor(Link::EdgeToEdge(a, b)),
+        }
     }
 }
 
@@ -212,6 +371,88 @@ mod tests {
         assert!(s.pair_cost_ms(0, 1) < s.pair_cost_ms(0, 4));
         assert_eq!(s.pair_cost_ms(0, 7), s.pair_cost_ms(0, 1));
         assert!(s.pair_cost_ms(0, 1) > 0.0);
+    }
+
+    #[test]
+    fn fault_free_sim_matches_pre_fault_bits() {
+        // A sim that touches no fault API must draw the same RNG stream
+        // and produce the exact same bits as one where faults were set
+        // and fully restored (restore = factor 1.0 + healed partition).
+        let mut clean = sim();
+        let mut healed = sim();
+        healed.set_uplink_factor(None, 8.0);
+        healed.set_partition(&[0, 0, 1, 1]);
+        healed.set_uplink_factor(None, 1.0);
+        healed.clear_partition();
+        for step in 0..100 {
+            for link in [Link::UserToEdge(1), Link::EdgeToEdge(0, 3), Link::EdgeToCloud(2)] {
+                assert_eq!(
+                    clean.delay_ms(link, step).to_bits(),
+                    healed.delay_ms(link, step).to_bits()
+                );
+                assert_eq!(
+                    clean.expected_delay_ms(link, step).to_bits(),
+                    healed.expected_delay_ms(link, step).to_bits()
+                );
+            }
+        }
+        assert_eq!(clean.pair_cost_ms(0, 2).to_bits(), healed.pair_cost_ms(0, 2).to_bits());
+    }
+
+    #[test]
+    fn degraded_links_scale_without_extra_rng_draws() {
+        let mut degraded = sim();
+        degraded.set_uplink_factor(Some(0), 4.0);
+        degraded.set_access_factor(None, 2.0);
+        let mut clean = sim();
+        for step in 0..50 {
+            // Same RNG stream order: sample the same links in the same
+            // order on both sims and compare scaled values exactly.
+            let (dc, du) = (
+                clean.delay_ms(Link::EdgeToCloud(0), step),
+                clean.delay_ms(Link::UserToEdge(1), step),
+            );
+            let (fc, fu) = (
+                degraded.delay_ms(Link::EdgeToCloud(0), step),
+                degraded.delay_ms(Link::UserToEdge(1), step),
+            );
+            assert_eq!(fc.to_bits(), (dc * 4.0).to_bits());
+            assert_eq!(fu.to_bits(), (du * 2.0).to_bits());
+        }
+        // The untouched uplink of edge 1 is unscaled.
+        assert_eq!(
+            degraded.expected_delay_ms(Link::EdgeToCloud(1), 7),
+            clean.expected_delay_ms(Link::EdgeToCloud(1), 7)
+        );
+    }
+
+    #[test]
+    fn partition_severs_cross_group_links_only() {
+        let mut s = sim();
+        s.set_partition(&[0, 0, 1, 1]);
+        assert!(s.reachable(0, 1) && s.reachable(2, 3));
+        assert!(!s.reachable(0, 2) && !s.reachable(1, 3));
+        assert!(s.reachable(2, 2));
+        assert_eq!(s.pair_cost_ms(0, 2), f64::INFINITY);
+        assert_eq!(s.expected_delay_ms(Link::EdgeToEdge(1, 2), 5), f64::INFINITY);
+        assert!(s.pair_cost_ms(0, 1).is_finite());
+        // Cloud/access links are unaffected by an edge partition.
+        assert!(s.expected_delay_ms(Link::EdgeToCloud(0), 5).is_finite());
+        s.clear_partition();
+        assert!(s.reachable(0, 2));
+        assert!(s.pair_cost_ms(0, 2).is_finite());
+    }
+
+    #[test]
+    fn pair_degradation_is_symmetric() {
+        let mut s = sim();
+        let before = s.pair_cost_ms(1, 3);
+        s.set_pair_factor(1, 3, 3.0);
+        assert_eq!(s.pair_cost_ms(1, 3), before * 3.0);
+        assert_eq!(s.pair_cost_ms(3, 1), before * 3.0);
+        assert_eq!(s.pair_cost_ms(1, 2), s.pair_cost_ms(1, 2));
+        s.set_pair_factor(1, 3, 1.0);
+        assert_eq!(s.pair_cost_ms(1, 3).to_bits(), before.to_bits());
     }
 
     #[test]

@@ -123,6 +123,11 @@ pub struct ServeMetrics {
 
     /// Completed/shed sessions in event order (stage stamps included).
     pub sessions: Vec<Session>,
+
+    /// Measured chaos outcome, attached only when a `[chaos]` scenario
+    /// ran. `None` (chaos disabled) leaves the digest untouched, so the
+    /// fault-free path stays bit-identical to a build without chaos.
+    pub chaos: Option<crate::chaos::ChaosOutcome>,
 }
 
 impl ServeMetrics {
@@ -158,6 +163,7 @@ impl ServeMetrics {
             bg_wall_busy_ns: 0,
             retrieved_digest: FNV_OFFSET,
             sessions: Vec::new(),
+            chaos: None,
         }
     }
 
@@ -316,6 +322,9 @@ impl ServeMetrics {
         }
         for tier in &self.per_tier_ms {
             h = fnv_fold(h, tier.len() as u64);
+        }
+        if let Some(c) = &self.chaos {
+            h = fnv_fold(h, c.digest());
         }
         h
     }

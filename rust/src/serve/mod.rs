@@ -44,6 +44,7 @@ pub mod metrics;
 pub mod queue;
 pub mod session;
 
+use crate::chaos::{self, ChaosProbe, Scenario};
 use crate::gating::safeobo::{Observation, Qos, SafeObo};
 use crate::gating::{standard_arms, Arm, GenLoc, Retrieval};
 use crate::netsim::{Link, NetSpec};
@@ -80,6 +81,22 @@ enum Tick {
     Arrival(usize),
     /// A gossip round's modeled wire time elapsed.
     GossipDone,
+    /// A scheduled fault fires (index into the chaos scenario's
+    /// schedule). Pushed before same-time arrivals, so a fault at step
+    /// `s` applies before the first query of step `s` is processed.
+    Fault(usize),
+}
+
+/// Virtual time at which a fault pinned to `at_step` fires: the arrival
+/// time of the first workload event at or after that step (falling back
+/// to the last arrival for schedules past the workload's end).
+fn fault_time(arrival_times: &[f64], workload: &Workload, at_step: usize) -> f64 {
+    for (i, ev) in workload.events.iter().enumerate() {
+        if ev.step >= at_step {
+            return arrival_times[i];
+        }
+    }
+    arrival_times.last().copied().unwrap_or(0.0)
 }
 
 /// Virtual wire time of one gossip round: a neighbor round trip plus
@@ -136,14 +153,38 @@ pub fn serve_workload(
     let mut m = ServeMetrics::new(sys.cfg.num_edges, &scfg);
     let mut clk = ServeClock::virtual_clock();
 
-    // Schedule every arrival at its cumulative inter-arrival offset.
-    // Ties (zero gaps) pop in event order — the heap is FIFO at equal
-    // timestamps — so arrival processing order equals workload order.
-    let mut heap: EventHeap<Tick> = EventHeap::new();
+    // Cumulative inter-arrival offsets, precomputed so scheduled
+    // faults can be pinned to the arrival time of their step.
+    let mut arrival_times = Vec::with_capacity(workload.events.len());
     let mut t_arr = 0.0f64;
-    for (i, ev) in workload.events.iter().enumerate() {
+    for ev in &workload.events {
         t_arr += ev.gap_ms;
-        heap.push(t_arr, Tick::Arrival(i));
+        arrival_times.push(t_arr);
+    }
+
+    // Chaos plan: resolve the configured scenario (name validity is
+    // enforced at config-parse time) and its probe. Fault ticks go on
+    // the heap *before* arrivals so that at equal timestamps — the heap
+    // is FIFO at ties — a fault applies before that step's first query.
+    let scenario = if sys.cfg.chaos.enabled {
+        Scenario::from_config(&sys.cfg.chaos, sys.cfg.num_edges)
+    } else {
+        None
+    };
+    let mut probe = scenario.as_ref().map(|_| ChaosProbe::new(sys.cfg.num_edges));
+    let mut heap: EventHeap<Tick> = EventHeap::new();
+    if let Some(sc) = &scenario {
+        for (fi, f) in sc.schedule.iter().enumerate() {
+            let t = fault_time(&arrival_times, workload, f.at_step);
+            heap.push(t, Tick::Fault(fi));
+        }
+    }
+
+    // Schedule every arrival at its cumulative inter-arrival offset.
+    // Ties (zero gaps) pop in event order, so arrival processing order
+    // equals workload order.
+    for (i, &t) in arrival_times.iter().enumerate() {
+        heap.push(t, Tick::Arrival(i));
     }
 
     // Virtual queueing state: `workers` servers and the set of
@@ -161,6 +202,19 @@ pub fn serve_workload(
         let i = match tick {
             Tick::GossipDone => {
                 m.gossip_completed += 1;
+                continue;
+            }
+            Tick::Fault(fi) => {
+                // Apply the scheduled fault to both planes, then let
+                // the probe observe the post-fault cluster state.
+                // Injection is RNG-free, so admitted queries keep the
+                // exact random streams of a fault-free run.
+                let sc = scenario.as_ref().expect("fault tick implies a scenario");
+                let f = &sc.schedule[fi];
+                chaos::injector::apply(&f.event, &mut sys.cluster, &mut sys.net);
+                if let Some(p) = probe.as_mut() {
+                    p.on_fault(&f.event, now, &sys.cluster);
+                }
                 continue;
             }
             Tick::Arrival(i) => i,
@@ -202,6 +256,9 @@ pub fn serve_workload(
                 }
             }
             heap.push(now + g_ms, Tick::GossipDone);
+            if let Some(p) = probe.as_mut() {
+                p.on_gossip(&sys.cluster);
+            }
         }
 
         // Queue accounting at arrival: drop departed sessions, then
@@ -332,6 +389,11 @@ pub fn serve_workload(
         session.tier = sys.last_tier;
         m.fold_retrieved(i, &outcome.retrieved);
         m.record_done(session);
+        if let Some(p) = probe.as_mut() {
+            // Arrival-time stamp (`now`), so recovery measurements are
+            // invariant to the worker count.
+            p.on_done(edge_id, now, &sys.cluster);
+        }
 
         match driver {
             Driver::Gated => {
@@ -371,6 +433,9 @@ pub fn serve_workload(
         m.bg_checksum = checksum;
         m.bg_wall_busy_ns = busy_ns;
         m.bg_jobs_done = done;
+    }
+    if let (Some(p), Some(sc)) = (&probe, &scenario) {
+        m.chaos = Some(p.outcome(&sc.name, m.completed, m.shed_total(), m.rerouted));
     }
     stats.serve = Some(m.summary());
     (stats, m)

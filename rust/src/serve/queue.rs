@@ -93,13 +93,19 @@ pub struct QueuedRequest {
 }
 
 /// A bounded per-edge request queue: strict FIFO within each priority
-/// lane, higher lanes always drain first, pushes beyond `cap` are
-/// rejected (backpressure).
+/// lane, higher lanes always drain first (or weighted-fair across lanes
+/// when weights are set — see [`EdgeQueue::new_weighted`]), pushes
+/// beyond `cap` are rejected (backpressure).
 #[derive(Clone, Debug)]
 pub struct EdgeQueue {
     /// Capacity across all lanes; 0 means unbounded.
     cap: usize,
     lanes: [VecDeque<QueuedRequest>; NUM_PRIORITIES],
+    /// Weighted-fair dequeue weights per lane; `None` = strict
+    /// priority (the legacy pop, bit-identical).
+    weights: Option<[f64; 3]>,
+    /// Pops served per lane (the WFQ virtual-time counters).
+    served: [u64; NUM_PRIORITIES],
     /// Backpressure accounting.
     pub pushed: u64,
     pub popped: u64,
@@ -109,14 +115,36 @@ pub struct EdgeQueue {
 
 impl EdgeQueue {
     pub fn new(cap: usize) -> EdgeQueue {
+        EdgeQueue::new_weighted(cap, None)
+    }
+
+    /// A queue with weighted-fair dequeue across the priority lanes:
+    /// pop picks the non-empty lane with the lowest `served/weight`
+    /// ratio (ties → higher-priority lane), so a heavy high-priority
+    /// backlog — fault-induced or otherwise — cannot starve the lower
+    /// lanes; lanes drain in proportion to their weights. `None`
+    /// preserves the strict-priority pop exactly.
+    pub fn new_weighted(cap: usize, weights: Option<[f64; 3]>) -> EdgeQueue {
+        debug_assert!(
+            weights.is_none_or(|w| w.iter().all(|x| x.is_finite() && *x > 0.0)),
+            "WFQ weights must be finite and positive"
+        );
         EdgeQueue {
             cap,
             lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            weights,
+            served: [0; NUM_PRIORITIES],
             pushed: 0,
             popped: 0,
             rejected: 0,
             peak_depth: 0,
         }
+    }
+
+    /// The queue the `[serve]` section describes: `queue_cap` bound and
+    /// `wfq_weights` dequeue discipline.
+    pub fn from_config(cfg: &crate::config::ServeConfig) -> EdgeQueue {
+        EdgeQueue::new_weighted(cfg.queue_cap, cfg.wfq_weights)
     }
 
     pub fn cap(&self) -> usize {
@@ -145,16 +173,40 @@ impl EdgeQueue {
         true
     }
 
-    /// Dequeue the next request: the oldest entry of the highest
-    /// non-empty priority lane.
+    /// Dequeue the next request. Strict priority (no weights): the
+    /// oldest entry of the highest non-empty lane. Weighted-fair: the
+    /// oldest entry of the non-empty lane with the lowest
+    /// `served/weight` ratio, ties to the higher-priority lane.
     pub fn pop(&mut self) -> Option<QueuedRequest> {
-        for lane in self.lanes.iter_mut() {
-            if let Some(req) = lane.pop_front() {
-                self.popped += 1;
-                return Some(req);
+        let Some(w) = self.weights else {
+            // Legacy strict-priority pop, byte-for-byte.
+            for lane in self.lanes.iter_mut() {
+                if let Some(req) = lane.pop_front() {
+                    self.popped += 1;
+                    return Some(req);
+                }
+            }
+            return None;
+        };
+        let mut pick: Option<usize> = None;
+        for lane in 0..NUM_PRIORITIES {
+            if self.lanes[lane].is_empty() {
+                continue;
+            }
+            let ratio = self.served[lane] as f64 / w[lane];
+            // Strictly-lower ratio wins; ties keep the earlier (higher
+            // priority) lane.
+            match pick {
+                Some(p) if ratio >= self.served[p] as f64 / w[p] => {}
+                _ => pick = Some(lane),
             }
         }
-        None
+        let lane = pick?;
+        let req = self.lanes[lane].pop_front();
+        debug_assert!(req.is_some());
+        self.served[lane] += 1;
+        self.popped += 1;
+        req
     }
 }
 
@@ -215,6 +267,91 @@ mod tests {
         assert!(q.push(req(1, 0)));
         assert_eq!(q.pop().unwrap().seq, 1);
         assert_eq!(q.pop().unwrap().seq, 0);
+    }
+
+    #[test]
+    fn wfq_none_is_bit_identical_to_strict_priority() {
+        let pushes: Vec<(usize, u8)> =
+            (0..60).map(|i| (i, [1u8, 0, 2, 0, 1, 2, 0][i % 7])).collect();
+        let mut strict = EdgeQueue::new(8);
+        let mut weighted_off = EdgeQueue::new_weighted(8, None);
+        for &(seq, pri) in &pushes {
+            assert_eq!(strict.push(req(seq, pri)), weighted_off.push(req(seq, pri)));
+            // Interleave pops to exercise refill behavior too.
+            if seq % 3 == 0 {
+                assert_eq!(strict.pop(), weighted_off.pop());
+            }
+        }
+        loop {
+            let (a, b) = (strict.pop(), weighted_off.pop());
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+        assert_eq!(strict.pushed, weighted_off.pushed);
+        assert_eq!(strict.popped, weighted_off.popped);
+        assert_eq!(strict.rejected, weighted_off.rejected);
+        assert_eq!(strict.peak_depth, weighted_off.peak_depth);
+    }
+
+    #[test]
+    fn wfq_prevents_low_priority_starvation() {
+        // Saturated lanes: strict priority would drain all of lane 0
+        // before lane 2 sees a single pop. 4:2:1 weights interleave.
+        let mut q = EdgeQueue::new_weighted(0, Some([4.0, 2.0, 1.0]));
+        for seq in 0..70 {
+            assert!(q.push(req(seq, (seq % 3) as u8 % 3)));
+        }
+        let mut lane_counts = [0usize; 3];
+        for _ in 0..35 {
+            let r = q.pop().unwrap();
+            lane_counts[(r.priority as usize).min(2)] += 1;
+        }
+        // After 35 pops of a saturated 4:2:1 queue, lanes get ~20/10/5.
+        assert_eq!(lane_counts, [20, 10, 5]);
+        assert!(lane_counts[2] > 0, "low lane starved");
+    }
+
+    #[test]
+    fn wfq_ties_prefer_higher_priority_and_fifo_within_lane() {
+        let mut q = EdgeQueue::new_weighted(0, Some([1.0, 1.0, 1.0]));
+        for (seq, pri) in [(0, 2u8), (1, 0), (2, 0), (3, 1)] {
+            assert!(q.push(req(seq, pri)));
+        }
+        // All ratios start 0 → first pop takes the highest lane; equal
+        // weights then round-robin high→low, FIFO inside each lane.
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|r| r.seq).collect();
+        assert_eq!(order, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn wfq_falls_back_to_nonempty_lanes() {
+        // Only the low lane has work: WFQ must serve it even though its
+        // ratio is the worst.
+        let mut q = EdgeQueue::new_weighted(0, Some([8.0, 4.0, 1.0]));
+        for seq in 0..5 {
+            assert!(q.push(req(seq, 2)));
+        }
+        for seq in 0..5 {
+            assert_eq!(q.pop().unwrap().seq, seq);
+        }
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn from_config_threads_cap_and_weights() {
+        let mut cfg = crate::config::ServeConfig::default();
+        cfg.queue_cap = 2;
+        cfg.wfq_weights = Some([4.0, 2.0, 1.0]);
+        let mut q = EdgeQueue::from_config(&cfg);
+        assert_eq!(q.cap(), 2);
+        assert!(q.push(req(0, 0)));
+        assert!(q.push(req(1, 2)));
+        assert!(!q.push(req(2, 0)), "configured cap enforced");
+        // Weighted discipline active: default config stays strict.
+        let strict = EdgeQueue::from_config(&crate::config::ServeConfig::default());
+        assert_eq!(strict.cap(), crate::config::ServeConfig::default().queue_cap);
     }
 
     #[test]

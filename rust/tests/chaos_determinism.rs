@@ -1,0 +1,220 @@
+//! PR-8 chaos-plane guardrails:
+//!
+//! * `[chaos]` disabled (the default) is **bit-identical** to a run
+//!   with no chaos plane at all — same `RunStats`, same metric digest,
+//!   no outcome attached;
+//! * an enabled scenario is itself deterministic: same seed + scenario
+//!   ⇒ identical run digests across repeats and across worker counts
+//!   (1 vs 4);
+//! * split-brain bounds staleness while partitioned, heals by run end,
+//!   and the SLA checker reports recovery / staleness / availability;
+//! * flaky-uplink slows cloud-tier queries without perturbing any
+//!   query's retrieved-chunk set (the RNG-free injection property);
+//! * rolling-restart closes a recovery window for every revived edge.
+
+use eaco_rag::chaos::{ChaosReport, SlaSpec};
+use eaco_rag::config::SystemConfig;
+use eaco_rag::gating::{Arm, GenLoc, Retrieval};
+use eaco_rag::serve::Driver;
+use eaco_rag::sim::{workload_for, KnowledgeMode, RunStats, SimSystem};
+use eaco_rag::workload::Workload;
+
+fn collab_cfg() -> SystemConfig {
+    SystemConfig {
+        num_edges: 6,
+        edge_capacity: 400,
+        warmup_steps: 200,
+        ..SystemConfig::default()
+    }
+}
+
+fn edge_assist() -> Arm {
+    Arm { retrieval: Retrieval::EdgeAssisted, gen: GenLoc::EdgeSlm }
+}
+
+fn assert_stats_bit_identical(a: &RunStats, b: &RunStats) {
+    assert_eq!(a.queries, b.queries);
+    assert_eq!(a.tier_queries, b.tier_queries);
+    assert_eq!(a.tier_hits, b.tier_hits);
+    assert_eq!(a.bytes_replicated, b.bytes_replicated);
+    assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+    assert_eq!(a.delay.sum().to_bits(), b.delay.sum().to_bits());
+    assert_eq!(a.total_cost.sum().to_bits(), b.total_cost.sum().to_bits());
+}
+
+/// Run the collaborative serve plane over a seeded workload.
+fn run(cfg: &SystemConfig, steps: usize) -> (RunStats, eaco_rag::serve::metrics::ServeMetrics) {
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+    let wl = Workload::generate(&sys.corpus, workload_for(cfg, steps), cfg.seed);
+    sys.serve_async(&wl, Driver::Fixed(edge_assist()))
+}
+
+// ---------------------------------------------------------------------------
+// (a) disabled chaos is invisible
+// ---------------------------------------------------------------------------
+
+#[test]
+fn disabled_chaos_is_bit_identical_to_no_chaos_at_all() {
+    let base = collab_cfg();
+    // Every chaos knob set — but the plane stays off.
+    let mut armed = collab_cfg();
+    armed.chaos.scenario = "flaky-uplink".into();
+    armed.chaos.at_step = 1;
+    armed.chaos.duration_steps = 10_000;
+    armed.chaos.degrade_factor = 100.0;
+    armed.chaos.sla_recovery_ms = 1.0;
+    assert!(!armed.chaos.enabled, "enabled must default to false");
+
+    let (sa, ma) = run(&base, 600);
+    let (sb, mb) = run(&armed, 600);
+    assert_stats_bit_identical(&sa, &sb);
+    assert_eq!(
+        ma.digest(),
+        mb.digest(),
+        "a disabled [chaos] section must not move a single metric bit"
+    );
+    assert!(ma.chaos.is_none() && mb.chaos.is_none(), "no outcome without a scenario");
+}
+
+// ---------------------------------------------------------------------------
+// (b) enabled chaos is deterministic across repeats and worker counts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn split_brain_runs_are_repeat_invariant() {
+    let mut cfg = collab_cfg();
+    cfg.chaos.enabled = true; // default scenario: split-brain @40 for 60
+    let (sa, ma) = run(&cfg, 600);
+    let (sb, mb) = run(&cfg, 600);
+    assert_stats_bit_identical(&sa, &sb);
+    assert_eq!(ma.digest(), mb.digest(), "same seed + scenario ⇒ same run digest");
+    let (ca, cb) = (ma.chaos.as_ref().unwrap(), mb.chaos.as_ref().unwrap());
+    assert_eq!(ca, cb);
+    assert_eq!(ca.digest(), cb.digest());
+}
+
+#[test]
+fn chaos_outcome_is_invariant_across_worker_counts() {
+    let run_with = |workers: usize| {
+        let mut cfg = collab_cfg();
+        cfg.chaos.enabled = true;
+        cfg.serve.workers = workers;
+        run(&cfg, 600)
+    };
+    let (s1, m1) = run_with(1);
+    let (s4, m4) = run_with(4);
+    assert_stats_bit_identical(&s1, &s4);
+    assert_eq!(m1.retrieved_digest, m4.retrieved_digest);
+    let (c1, c4) = (m1.chaos.as_ref().unwrap(), m4.chaos.as_ref().unwrap());
+    assert_eq!(c1, c4, "recovery/staleness probes must not see the worker count");
+    assert_eq!(c1.digest(), c4.digest());
+}
+
+// ---------------------------------------------------------------------------
+// (c) split-brain: bounded staleness, heal, SLA report
+// ---------------------------------------------------------------------------
+
+#[test]
+fn split_brain_bounds_staleness_heals_and_reports_sla() {
+    let mut cfg = collab_cfg();
+    cfg.chaos.enabled = true;
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+    let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 600), cfg.seed);
+    let (stats, m) = sys.serve_async(&wl, Driver::Gated);
+    let c = m.chaos.as_ref().expect("enabled scenario attaches an outcome");
+
+    assert_eq!(c.scenario, "split-brain");
+    assert_eq!(c.faults_applied, 2, "one partition + one heal");
+    assert!(
+        c.max_staleness_partitioned <= c.max_staleness,
+        "partition-window staleness is a restriction of the run-wide max"
+    );
+    // The heal fired well before the workload ended: both planes are
+    // fully connected again.
+    assert!(!sys.cluster.partitioned(), "cluster healed by run end");
+    assert!(sys.net.reachable(0, cfg.num_edges - 1), "netsim healed by run end");
+    // Default config sheds nothing — the partition degrades freshness,
+    // not admission.
+    assert_eq!(c.shed, 0);
+    assert_eq!(c.availability(), 1.0);
+    assert!(c.completed as usize >= stats.queries, "gated stats exclude exploration");
+
+    // The SLA checker reports all three dimensions. Split-brain revives
+    // nothing, so recovery passes trivially with actual 0.
+    let sla = SlaSpec {
+        recovery_ms: 1.0,
+        max_staleness: c.max_staleness as i64,
+        min_availability: 0.5,
+    };
+    let report = ChaosReport::evaluate(c.clone(), &sla);
+    assert_eq!(report.checks.len(), 3);
+    assert!(report.pass, "generous thresholds must pass: {:?}", report.checks);
+    let names: Vec<&str> = report.checks.iter().map(|k| k.name).collect();
+    assert_eq!(names, vec!["recovery_ms", "max_staleness_versions", "availability"]);
+    // And the machine-readable form round-trips.
+    let j = eaco_rag::util::json::parse(&report.to_json().to_string()).unwrap();
+    assert_eq!(j.get("scenario").as_str(), Some("split-brain"));
+    assert_eq!(j.get("pass").as_bool(), Some(true));
+    assert_eq!(j.get("outcome").get("faults_applied").as_usize(), Some(2));
+}
+
+// ---------------------------------------------------------------------------
+// (d) flaky-uplink: latency moves, retrieval does not
+// ---------------------------------------------------------------------------
+
+#[test]
+fn flaky_uplink_slows_cloud_queries_without_touching_retrieval() {
+    let cloud = Arm { retrieval: Retrieval::CloudGraph, gen: GenLoc::CloudLlm };
+    let run_cloud = |enabled: bool| {
+        let mut cfg = collab_cfg();
+        cfg.chaos.enabled = enabled;
+        cfg.chaos.scenario = "flaky-uplink".into();
+        let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 400), cfg.seed);
+        sys.serve_async(&wl, Driver::Fixed(cloud))
+    };
+    let (clean_stats, clean_m) = run_cloud(false);
+    let (flaky_stats, flaky_m) = run_cloud(true);
+
+    assert!(
+        flaky_stats.delay.sum() > clean_stats.delay.sum(),
+        "a degraded uplink must show up in cloud-tier latency"
+    );
+    // Injection is RNG-free: the same queries retrieved the same chunks
+    // and scored the same accuracy, bit for bit.
+    assert_eq!(clean_m.retrieved_digest, flaky_m.retrieved_digest);
+    assert_eq!(clean_stats.accuracy.to_bits(), flaky_stats.accuracy.to_bits());
+    assert_eq!(clean_stats.tier_queries, flaky_stats.tier_queries);
+    let c = flaky_m.chaos.as_ref().unwrap();
+    assert_eq!(c.faults_applied, 2, "degrade + restore");
+    assert_eq!(c.max_staleness_partitioned, 0, "no partition in this scenario");
+}
+
+// ---------------------------------------------------------------------------
+// (e) rolling-restart: recovery windows open and close
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rolling_restart_measures_recovery_for_every_edge() {
+    let mut cfg = collab_cfg();
+    cfg.chaos.enabled = true;
+    cfg.chaos.scenario = "rolling-restart".into();
+    let (stats, m) = run(&cfg, 800);
+    let c = m.chaos.as_ref().unwrap();
+
+    assert_eq!(c.faults_applied, 12, "6 kills + 6 revives");
+    assert_eq!(
+        c.recoveries + c.unrecovered,
+        6,
+        "every revive opens exactly one recovery window"
+    );
+    assert!(c.recoveries >= 1, "gossip re-syncs at least one revived edge in time");
+    assert!(
+        c.recovery_ms.unwrap_or(0.0) >= 0.0 && c.recovery_ms.unwrap_or(0.0).is_finite()
+    );
+    // At most one edge is ever down, so nothing is shed — traffic for
+    // the down edge reroutes to an alive peer.
+    assert_eq!(c.shed, 0);
+    assert!(c.rerouted > 0, "down-edge arrivals rerouted");
+    assert_eq!(stats.queries, c.completed as usize);
+}
