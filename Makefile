@@ -6,9 +6,9 @@
 CARGO ?= cargo
 
 # Perf-trajectory output name; bump per PR (BENCH_OUT=BENCH_PR<N>.json).
-BENCH_OUT ?= BENCH_PR8.json
+BENCH_OUT ?= BENCH_PR9.json
 
-.PHONY: build test ci bench-json bench-smoke artifacts
+.PHONY: build test ci bench-json bench-smoke chaos-trend artifacts
 
 build:
 	$(CARGO) build --release
@@ -39,6 +39,19 @@ bench-json:
 bench-smoke:
 	EACO_BENCH_SMOKE=1 EACO_BENCH_OUT=$(abspath target/bench_smoke.json) \
 		$(CARGO) bench --bench perf_hotpath
+
+# Cross-run SLA trend gate: run the default chaos scenario twice,
+# appending both reports to a fresh trend file in target/. The runs are
+# deterministic, so the second entry must match the first and the diff
+# (chaos::trend::regression) must report no SLA regression — this
+# exercises the exact machinery CI uses to compare a PR's chaos run
+# against the previous one. Exits non-zero on any regression.
+chaos-trend:
+	rm -f target/chaos_trend.json
+	$(CARGO) run --release -q -p eaco-rag -- chaos --steps 200 \
+		--sla-availability 0.5 --append-trend target/chaos_trend.json
+	$(CARGO) run --release -q -p eaco-rag -- chaos --steps 200 \
+		--sla-availability 0.5 --append-trend target/chaos_trend.json
 
 # AOT-compile the L2 model artifacts into rust/artifacts/ (requires the
 # python-side JAX toolchain; PJRT tests/benches skip without this).

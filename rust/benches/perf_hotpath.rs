@@ -2,7 +2,7 @@
 //! real PJRT execution path (criterion substitute; see DESIGN.md §7).
 //!
 //! Measured here, tracked in EXPERIMENTS.md §Perf, and **emitted as a
-//! machine-readable trajectory file** (`BENCH_PR8.json` at the repo
+//! machine-readable trajectory file** (`BENCH_PR9.json` at the repo
 //! root — see `make bench-json`, `BENCH_OUT=` to override) so every
 //! future PR has a baseline to beat:
 //!   * gate decision latency vs GP observation count (target ≪ 1 ms)
@@ -23,6 +23,9 @@
 //!   * chaos plane: `chaos.inject` (fault-event apply micro — topology
 //!     rewires + link multipliers) and `serve.drain 4edges
 //!     +flaky-uplink` (the same drain under a scripted degrade/restore)
+//!   * staged pipeline: `pipeline.serve 4edges` — the serve.drain
+//!     workload through the SafeOBO-gated `pipeline::gated_step` path
+//!     (gate decide/observe + retrieve + grade + update per query)
 //!   * dynamic batcher push/flush throughput
 //!   * PJRT LM forward (b1 vs b8 — batching amortization) and embedder
 //!     (skipped with a notice if artifacts/ is absent)
@@ -106,7 +109,7 @@ impl Report {
                 PathBuf::from(env!("CARGO_MANIFEST_DIR"))
                     .parent()
                     .expect("manifest dir has a parent")
-                    .join("BENCH_PR8.json")
+                    .join("BENCH_PR9.json")
             });
         let doc = Json::Arr(self.entries.clone());
         match std::fs::write(&out, doc.to_string() + "\n") {
@@ -407,6 +410,26 @@ fn bench_chaos(report: &mut Report, inject_iters: usize, drain_iters: usize) {
     }
 }
 
+/// The staged-pipeline family: the serve.drain workload driven through
+/// `pipeline::gated_step` (Driver::Gated) — gate decide + retrieve +
+/// generate + grade + observe + knowledge update per query, with the
+/// StatsSink/ServeMetrics folds on the event stream. Compare against
+/// `serve.drain 4edges` (Driver::Fixed) to read the gate's share.
+fn bench_pipeline(report: &mut Report, drain_iters: usize) {
+    let cfg = SystemConfig {
+        num_edges: 4,
+        edge_capacity: 200,
+        warmup_steps: 30,
+        ..SystemConfig::default()
+    };
+    let r = bench("pipeline.serve 4edges (120-step gated workload)", drain_iters, || {
+        let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 120), cfg.seed);
+        std::hint::black_box(sys.serve_async(&wl, Driver::Gated));
+    });
+    report.push(&r);
+}
+
 fn main() {
     println!("\n=== §Perf hot-path benchmarks ===\n");
     let full = std::env::var("EACO_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
@@ -424,6 +447,7 @@ fn main() {
         bench_cluster_routing(&mut report, 4, 1);
         bench_serve(&mut report, 1, 1);
         bench_chaos(&mut report, 1, 1);
+        bench_pipeline(&mut report, 1);
         report.write();
         return;
     }
@@ -537,6 +561,9 @@ fn main() {
 
     // --- chaos plane: fault apply micro + drain under faults ---
     bench_chaos(&mut report, 2000, 5);
+
+    // --- staged pipeline: the gated end-to-end path ---
+    bench_pipeline(&mut report, 5);
 
     // --- batcher throughput ---
     {

@@ -10,7 +10,8 @@
 //! * [`scenario`] — typed fault schedules ([`FaultEvent`]: kill/revive,
 //!   partitions, link degradation, correlated failures) pinned to
 //!   virtual-time steps; presets `rolling-restart`, `split-brain`,
-//!   `flaky-uplink` parameterized by the `[chaos]` config section.
+//!   `flaky-uplink`, and seeded `random` parameterized by the `[chaos]`
+//!   config section.
 //! * [`injector`] — applies events through the fault seams of
 //!   [`crate::netsim`] (per-link multipliers, partition reachability)
 //!   and [`crate::cluster`] (group kill/revive, partition-aware
@@ -19,17 +20,23 @@
 //!   measured from arrival-order observations ([`ChaosOutcome`]).
 //! * [`sla`] — declarative `recovery_ms <= X` / staleness / availability
 //!   assertions producing a machine-readable JSON [`ChaosReport`].
+//! * [`trend`] — cross-run SLA trend tracking: `eaco-rag chaos
+//!   --append-trend <file>` appends each report to a JSON array and CI
+//!   diffs the two newest entries, failing on SLA regressions.
 //!
-//! The whole plane is RNG-free: faults change *which* work happens
-//! (reroutes, sheds, gossip reach) but never perturb the random streams
-//! of admitted queries — and with `[chaos]` disabled, every serve/sim
-//! path is bit-identical to a build without this module (asserted in
-//! `tests/chaos_determinism.rs`).
+//! The whole plane is RNG-free on the request path: faults change
+//! *which* work happens (reroutes, sheds, gossip reach) but never
+//! perturb the random streams of admitted queries — and with `[chaos]`
+//! disabled, every serve/sim path is bit-identical to a build without
+//! this module (asserted in `tests/chaos_determinism.rs`). The `random`
+//! scenario draws its schedule from a dedicated seeded stream *before*
+//! the serve loop starts, preserving the same guarantee.
 
 pub mod injector;
 pub mod probe;
 pub mod scenario;
 pub mod sla;
+pub mod trend;
 
 pub use probe::{ChaosOutcome, ChaosProbe};
 pub use scenario::{FaultEvent, LinkSel, Scenario, ScheduledFault};

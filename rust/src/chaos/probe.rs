@@ -16,8 +16,13 @@
 //!   both the run-wide max and the max while a partition was active.
 //! * **Availability**: completed / (completed + shed), taken from the
 //!   serve counters at run end.
+//!
+//! The probe is a [`StageSink`]: the serving plane stamps version lag /
+//! store state onto the pipeline's typed events (`FaultApplied`,
+//! `GossipRound`, `QueryDone`) and the probe folds them — it never
+//! touches the cluster itself.
 
-use crate::cluster::EdgeCluster;
+use crate::pipeline::{StageEvent, StageSink};
 
 use super::scenario::FaultEvent;
 
@@ -59,9 +64,10 @@ impl ChaosProbe {
         }
     }
 
-    /// Record a fault application at virtual time `now_ms` (called
-    /// right after the injector applied it).
-    pub fn on_fault(&mut self, event: &FaultEvent, now_ms: f64, cluster: &EdgeCluster) {
+    /// Record a fault application at virtual time `now_ms`.
+    /// `version_lag` is the cluster's max version lag sampled right
+    /// after the injector applied the fault.
+    pub fn on_fault(&mut self, event: &FaultEvent, now_ms: f64, version_lag: u64) {
         self.faults_applied += 1;
         match event {
             FaultEvent::ReviveEdge(e) => {
@@ -85,23 +91,23 @@ impl ChaosProbe {
             FaultEvent::HealPartition => self.partition_active = false,
             FaultEvent::DegradeLink { .. } | FaultEvent::RestoreLink { .. } => {}
         }
-        self.sample(cluster);
+        self.sample(version_lag);
     }
 
     /// Sample staleness after a gossip round.
-    pub fn on_gossip(&mut self, cluster: &EdgeCluster) {
-        self.sample(cluster);
+    pub fn on_gossip(&mut self, version_lag: u64) {
+        self.sample(version_lag);
     }
 
     /// Record a completed query: `edge` is the edge it was served on,
-    /// `arrival_ms` its arrival time (worker-invariant). Closes any
-    /// pending recovery window on that edge once its store is non-empty
-    /// again.
-    pub fn on_done(&mut self, edge: usize, arrival_ms: f64, cluster: &EdgeCluster) {
+    /// `arrival_ms` its arrival time (worker-invariant), `store_empty`
+    /// the edge store's post-update state. Closes any pending recovery
+    /// window on that edge once its store is non-empty again.
+    pub fn on_done(&mut self, edge: usize, arrival_ms: f64, store_empty: bool) {
         let Some(Some(t0)) = self.revive_pending.get(edge).copied() else {
             return;
         };
-        if cluster.nodes[edge].is_empty() {
+        if store_empty {
             return; // revived but not yet re-synced: keep waiting
         }
         let r = (arrival_ms - t0).max(0.0);
@@ -113,8 +119,7 @@ impl ChaosProbe {
         self.revive_pending[edge] = None;
     }
 
-    fn sample(&mut self, cluster: &EdgeCluster) {
-        let lag = cluster.max_version_lag();
+    fn sample(&mut self, lag: u64) {
         self.max_staleness = self.max_staleness.max(lag);
         if self.partition_active {
             self.max_staleness_partitioned = self.max_staleness_partitioned.max(lag);
@@ -141,6 +146,24 @@ impl ChaosProbe {
             completed: completed as u64,
             shed: shed as u64,
             rerouted: rerouted as u64,
+        }
+    }
+}
+
+/// The probe as a pipeline observer: folds the chaos-relevant events
+/// the serving plane emits. `GossipRound` events without a sampled lag
+/// (synchronous drivers, probe-less runs) are ignored.
+impl StageSink for ChaosProbe {
+    fn emit(&mut self, ev: &StageEvent<'_>) {
+        match ev {
+            StageEvent::FaultApplied { event, now_ms, version_lag } => {
+                self.on_fault(event, *now_ms, *version_lag)
+            }
+            StageEvent::GossipRound { version_lag: Some(lag), .. } => self.on_gossip(*lag),
+            StageEvent::QueryDone { edge_id, arrival_ms, store_empty, .. } => {
+                self.on_done(*edge_id, *arrival_ms, *store_empty)
+            }
+            _ => {}
         }
     }
 }
@@ -207,6 +230,7 @@ impl ChaosOutcome {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::EdgeCluster;
     use crate::config::ClusterConfig;
     use crate::corpus::{Corpus, Profile};
     use crate::netsim::{NetSim, NetSpec};
@@ -231,16 +255,16 @@ mod tests {
         let (c, mut cl) = cluster(3);
         let mut p = ChaosProbe::new(3);
         cl.kill_edge(1);
-        p.on_fault(&FaultEvent::KillEdge(1), 100.0, &cl);
+        p.on_fault(&FaultEvent::KillEdge(1), 100.0, cl.max_version_lag());
         cl.revive_edge(1);
-        p.on_fault(&FaultEvent::ReviveEdge(1), 200.0, &cl);
+        p.on_fault(&FaultEvent::ReviveEdge(1), 200.0, cl.max_version_lag());
         // Served while still empty: the window stays open.
-        p.on_done(1, 250.0, &cl);
+        p.on_done(1, 250.0, cl.nodes[1].is_empty());
         assert_eq!(p.outcome("t", 0, 0, 0).recoveries, 0);
         assert_eq!(p.outcome("t", 0, 0, 0).unrecovered, 1);
         // Store refills → the next served query closes the window.
         cl.nodes[1].apply_update(&c, &[3, 4]);
-        p.on_done(1, 350.0, &cl);
+        p.on_done(1, 350.0, cl.nodes[1].is_empty());
         let out = p.outcome("t", 10, 2, 1);
         assert_eq!(out.recoveries, 1);
         assert_eq!(out.unrecovered, 0);
@@ -255,11 +279,11 @@ mod tests {
         let (_c, mut cl) = cluster(3);
         let mut p = ChaosProbe::new(3);
         cl.kill_edge(2);
-        p.on_fault(&FaultEvent::KillEdge(2), 10.0, &cl);
+        p.on_fault(&FaultEvent::KillEdge(2), 10.0, cl.max_version_lag());
         cl.revive_edge(2);
-        p.on_fault(&FaultEvent::ReviveEdge(2), 20.0, &cl);
+        p.on_fault(&FaultEvent::ReviveEdge(2), 20.0, cl.max_version_lag());
         cl.kill_edge(2);
-        p.on_fault(&FaultEvent::KillEdge(2), 30.0, &cl);
+        p.on_fault(&FaultEvent::KillEdge(2), 30.0, cl.max_version_lag());
         assert_eq!(p.outcome("t", 0, 0, 0).unrecovered, 0);
         assert_eq!(p.outcome("t", 0, 0, 0).recoveries, 0);
     }
@@ -276,14 +300,18 @@ mod tests {
         let plan = crate::cloud::UpdatePlan { edge_id: 0, chunks: vec![3], communities: vec![] };
         cl.apply_cloud_update(&c, 0, &plan);
         cl.apply_partition(&[vec![0, 1], vec![2, 3]]);
-        p.on_fault(&FaultEvent::Partition(vec![vec![0, 1], vec![2, 3]]), 50.0, &cl);
+        p.on_fault(
+            &FaultEvent::Partition(vec![vec![0, 1], vec![2, 3]]),
+            50.0,
+            cl.max_version_lag(),
+        );
         let mid = p.outcome("t", 0, 0, 0);
         assert_eq!(mid.max_staleness, 1);
         assert_eq!(mid.max_staleness_partitioned, 1);
         cl.heal_partition();
-        p.on_fault(&FaultEvent::HealPartition, 90.0, &cl);
+        p.on_fault(&FaultEvent::HealPartition, 90.0, cl.max_version_lag());
         // Post-heal samples no longer move the partitioned max.
-        p.on_gossip(&cl);
+        p.on_gossip(cl.max_version_lag());
         let end = p.outcome("t", 0, 0, 0);
         assert_eq!(end.max_staleness_partitioned, 1);
     }
@@ -292,7 +320,7 @@ mod tests {
     fn outcome_digest_is_stable_and_sensitive() {
         let (_c, cl) = cluster(2);
         let mut p = ChaosProbe::new(2);
-        p.on_fault(&FaultEvent::HealPartition, 1.0, &cl);
+        p.on_fault(&FaultEvent::HealPartition, 1.0, cl.max_version_lag());
         let a = p.outcome("split-brain", 5, 1, 0);
         let b = p.outcome("split-brain", 5, 1, 0);
         assert_eq!(a, b);

@@ -9,11 +9,19 @@
 //! drawn in a fault-free run.
 //!
 //! Scenarios come from two places: the [`presets`](Scenario::PRESETS)
-//! (`rolling-restart`, `split-brain`, `flaky-uplink`) parameterized by
-//! the `[chaos]` config section, or hand-built schedules composed
-//! directly from [`FaultEvent`]s in tests and experiments.
+//! (`rolling-restart`, `split-brain`, `flaky-uplink`, `random`)
+//! parameterized by the `[chaos]` config section, or hand-built
+//! schedules composed directly from [`FaultEvent`]s in tests and
+//! experiments.
+//!
+//! The `random` preset is the one seeded exception to "no RNG": it
+//! draws its schedule from a **dedicated** RNG stream
+//! (`Rng::new(random_seed).fork("chaos")`) *before* the serve loop
+//! starts, so the schedule is a pure function of the seed and the
+//! admitted-query streams still see their fault-free draws.
 
 use crate::config::ChaosConfig;
+use crate::util::rng::Rng;
 
 /// Which physical link(s) a degrade/restore event targets.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -70,8 +78,8 @@ pub struct Scenario {
 
 impl Scenario {
     /// Preset names accepted by the `[chaos] scenario` config key.
-    pub const PRESETS: [&'static str; 3] =
-        ["rolling-restart", "split-brain", "flaky-uplink"];
+    pub const PRESETS: [&'static str; 4] =
+        ["rolling-restart", "split-brain", "flaky-uplink", "random"];
 
     /// Is `name` a known preset?
     pub fn is_known(name: &str) -> bool {
@@ -91,6 +99,13 @@ impl Scenario {
             "flaky-uplink" => {
                 Some(Self::flaky_uplink(cfg.at_step, cfg.duration_steps, cfg.degrade_factor))
             }
+            "random" => Some(Self::random(
+                num_edges,
+                cfg.at_step,
+                cfg.duration_steps,
+                cfg.random_faults,
+                cfg.random_seed,
+            )),
             _ => None,
         }
     }
@@ -155,6 +170,98 @@ impl Scenario {
             },
         ];
         Scenario { name: "flaky-uplink".into(), schedule }
+    }
+
+    /// Seeded randomized schedule: `n_faults` events drawn uniformly
+    /// over `[at_step, at_step + duration_steps)` from a dedicated RNG
+    /// stream. Same seed ⇒ bit-identical schedule. Event kinds are
+    /// drawn among kill / revive / partition / heal, biased by a
+    /// generation-order fleet model (never kill the last tracked-alive
+    /// edge, only partition an unpartitioned fleet); a draw that is
+    /// inapplicable in the current model state falls back to reviving a
+    /// random edge, which is always idempotent-legal. A cleanup pass at
+    /// the window end revives every edge still down and heals any open
+    /// partition *in firing order*, so SLA probes measure recovery
+    /// rather than a permanently degraded fleet.
+    pub fn random(
+        num_edges: usize,
+        at_step: usize,
+        duration_steps: usize,
+        n_faults: usize,
+        seed: u64,
+    ) -> Scenario {
+        let n = num_edges.max(1);
+        let window = duration_steps.max(1);
+        let mut base = Rng::new(seed);
+        let mut rng = base.fork("chaos");
+        // Generation-order model: biases the draws toward applicable
+        // events. Firing order can differ after sorting, but every
+        // event is idempotent, and cleanup replays the *sorted*
+        // schedule below.
+        let mut down = vec![false; n];
+        let mut partitioned = false;
+        let mut schedule = Vec::with_capacity(n_faults + n + 1);
+        for _ in 0..n_faults {
+            let step = at_step + rng.below(window);
+            let event = match rng.below(4) {
+                0 if n >= 2 && down.iter().filter(|d| !**d).count() >= 2 => {
+                    let alive: Vec<usize> = (0..n).filter(|&e| !down[e]).collect();
+                    let e = alive[rng.below(alive.len())];
+                    down[e] = true;
+                    FaultEvent::KillEdge(e)
+                }
+                1 if down.iter().any(|d| *d) => {
+                    let dead: Vec<usize> = (0..n).filter(|&e| down[e]).collect();
+                    let e = dead[rng.below(dead.len())];
+                    down[e] = false;
+                    FaultEvent::ReviveEdge(e)
+                }
+                2 if !partitioned && n >= 2 => {
+                    let cut = rng.range(1, n);
+                    partitioned = true;
+                    FaultEvent::Partition(vec![(0..cut).collect(), (cut..n).collect()])
+                }
+                3 if partitioned => {
+                    partitioned = false;
+                    FaultEvent::HealPartition
+                }
+                _ => {
+                    // Inapplicable draw: revive a random edge instead —
+                    // always legal (no-op if alive), keeps the schedule
+                    // length fixed at `n_faults`.
+                    let e = rng.below(n);
+                    down[e] = false;
+                    FaultEvent::ReviveEdge(e)
+                }
+            };
+            schedule.push(ScheduledFault { at_step: step, event });
+        }
+        let mut schedule = sorted(schedule);
+        // Replay in firing order (which sorting may have changed from
+        // generation order) to find what is still broken, then heal it
+        // at the window end. Random steps are strictly below `end`, so
+        // appending keeps the schedule sorted.
+        let mut down = vec![false; n];
+        let mut partitioned = false;
+        for f in &schedule {
+            match &f.event {
+                FaultEvent::KillEdge(e) => down[*e] = true,
+                FaultEvent::ReviveEdge(e) => down[*e] = false,
+                FaultEvent::Partition(_) => partitioned = true,
+                FaultEvent::HealPartition => partitioned = false,
+                _ => {}
+            }
+        }
+        let end = at_step + window;
+        for (e, d) in down.iter().enumerate() {
+            if *d {
+                schedule.push(ScheduledFault { at_step: end, event: FaultEvent::ReviveEdge(e) });
+            }
+        }
+        if partitioned {
+            schedule.push(ScheduledFault { at_step: end, event: FaultEvent::HealPartition });
+        }
+        Scenario { name: "random".into(), schedule }
     }
 }
 
@@ -234,6 +341,40 @@ mod tests {
             sc.schedule[1],
             ScheduledFault { at_step: 100, event: FaultEvent::HealPartition }
         );
+    }
+
+    #[test]
+    fn random_schedule_is_seed_deterministic() {
+        let a = Scenario::random(4, 40, 60, 8, 7);
+        let b = Scenario::random(4, 40, 60, 8, 7);
+        assert_eq!(a, b, "same seed must give a bit-identical schedule");
+        let c = Scenario::random(4, 40, 60, 8, 8);
+        assert_ne!(a.schedule, c.schedule, "different seeds should differ");
+    }
+
+    #[test]
+    fn random_schedule_heals_everything_by_window_end() {
+        for seed in [1u64, 7, 42, 99] {
+            let sc = Scenario::random(5, 30, 50, 12, seed);
+            let mut down = vec![false; 5];
+            let mut partitioned = false;
+            for f in &sc.schedule {
+                assert!(
+                    f.at_step >= 30 && f.at_step <= 80,
+                    "fault outside window at step {}",
+                    f.at_step
+                );
+                match &f.event {
+                    FaultEvent::KillEdge(e) => down[*e] = true,
+                    FaultEvent::ReviveEdge(e) => down[*e] = false,
+                    FaultEvent::Partition(_) => partitioned = true,
+                    FaultEvent::HealPartition => partitioned = false,
+                    other => panic!("unexpected event {other:?}"),
+                }
+            }
+            assert!(down.iter().all(|d| !d), "seed {seed}: edge left dead");
+            assert!(!partitioned, "seed {seed}: partition left open");
+        }
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Cross-run SLA trend tracking for the chaos plane.
+//!
+//! `eaco-rag chaos --append-trend <file>` appends each run's
+//! [`ChaosReport`] JSON to a trend file holding one JSON array of
+//! reports (oldest first). [`append`] does the array surgery and
+//! [`regression`] diffs the two newest entries, so CI (`make
+//! chaos-trend`) can fail a PR whose chaos run regressed an SLA
+//! dimension relative to the previous entry — even when both runs still
+//! nominally pass their absolute thresholds.
+//!
+//! The module is pure string/Json plumbing: file I/O stays in the CLI
+//! so these functions are trivially testable and usable from tests
+//! without touching the filesystem.
+
+use crate::util::json::{parse, Json};
+
+use super::sla::ChaosReport;
+
+/// Append `report` to the trend document `text` (an empty or
+/// whitespace-only `text` starts a fresh array) and return the new
+/// serialized document. Errors if `text` is non-empty but does not
+/// parse as a JSON array.
+pub fn append(text: &str, report: &ChaosReport) -> Result<String, String> {
+    let mut entries = if text.trim().is_empty() {
+        Vec::new()
+    } else {
+        match parse(text)? {
+            Json::Arr(entries) => entries,
+            other => {
+                return Err(format!(
+                    "trend file must hold a JSON array of chaos reports, found {other:?}"
+                ))
+            }
+        }
+    };
+    entries.push(report.to_json());
+    Ok(Json::Arr(entries).to_string())
+}
+
+/// Compare the two newest trend entries; `Some(description)` if the
+/// latest run regressed relative to its predecessor, `None` otherwise
+/// (including when fewer than two entries exist — a first run cannot
+/// regress).
+///
+/// A regression is any of:
+/// * overall `pass` flipped from `true` to `false`;
+/// * `availability` dropped;
+/// * `max_staleness` grew;
+/// * `unrecovered` grew;
+/// * `recovery_ms` grew (only when both entries report a numeric
+///   recovery — `null`/missing means nothing was revived, which is not
+///   comparable).
+pub fn regression(entries: &[Json]) -> Option<String> {
+    let [.., prev, last] = entries else {
+        return None;
+    };
+    let mut problems = Vec::new();
+    if prev.get("pass").as_bool() == Some(true) && last.get("pass").as_bool() == Some(false) {
+        problems.push("overall SLA verdict flipped pass -> fail".to_string());
+    }
+    let po = prev.get("outcome");
+    let lo = last.get("outcome");
+    if let (Some(a), Some(b)) =
+        (po.get("availability").as_f64(), lo.get("availability").as_f64())
+    {
+        if b < a - 1e-9 {
+            problems.push(format!("availability dropped {a:.4} -> {b:.4}"));
+        }
+    }
+    if let (Some(a), Some(b)) =
+        (po.get("max_staleness").as_f64(), lo.get("max_staleness").as_f64())
+    {
+        if b > a {
+            problems.push(format!("max_staleness grew {a} -> {b}"));
+        }
+    }
+    if let (Some(a), Some(b)) = (po.get("unrecovered").as_f64(), lo.get("unrecovered").as_f64()) {
+        if b > a {
+            problems.push(format!("unrecovered edges grew {a} -> {b}"));
+        }
+    }
+    if let (Some(a), Some(b)) = (po.get("recovery_ms").as_f64(), lo.get("recovery_ms").as_f64()) {
+        if b > a + 1e-9 {
+            problems.push(format!("recovery_ms grew {a:.1} -> {b:.1}"));
+        }
+    }
+    if problems.is_empty() {
+        None
+    } else {
+        Some(problems.join("; "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::probe::ChaosOutcome;
+    use crate::chaos::sla::SlaSpec;
+
+    fn report(availability_shed: usize, staleness: u64, recovery: f64) -> ChaosReport {
+        let outcome = ChaosOutcome {
+            scenario: "split-brain".into(),
+            faults_applied: 2,
+            recoveries: 1,
+            unrecovered: 0,
+            recovery_ms: Some(recovery),
+            max_staleness: staleness,
+            max_staleness_partitioned: staleness,
+            completed: 100 - availability_shed,
+            shed: availability_shed,
+            rerouted: 0,
+        };
+        let sla = SlaSpec { recovery_ms: 5000.0, max_staleness: 8, min_availability: 0.5 };
+        ChaosReport::evaluate(outcome, &sla)
+    }
+
+    #[test]
+    fn append_starts_and_extends_an_array() {
+        let one = append("", &report(5, 1, 1200.0)).unwrap();
+        let parsed = parse(&one).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 1);
+        let two = append(&one, &report(5, 1, 1200.0)).unwrap();
+        let parsed = parse(&two).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 2);
+        // Entries are full ChaosReport objects.
+        assert_eq!(
+            parsed.as_arr().unwrap()[1].get("scenario").as_str(),
+            Some("split-brain")
+        );
+        // Garbage input is an error, not a silent reset.
+        assert!(append("{\"not\":\"an array\"}", &report(5, 1, 1200.0)).is_err());
+        assert!(append("not json", &report(5, 1, 1200.0)).is_err());
+    }
+
+    #[test]
+    fn identical_entries_are_not_a_regression() {
+        let doc = append(&append("", &report(5, 1, 1200.0)).unwrap(), &report(5, 1, 1200.0))
+            .unwrap();
+        let parsed = parse(&doc).unwrap();
+        assert_eq!(regression(parsed.as_arr().unwrap()), None);
+    }
+
+    #[test]
+    fn single_entry_cannot_regress() {
+        let doc = append("", &report(5, 1, 1200.0)).unwrap();
+        let parsed = parse(&doc).unwrap();
+        assert_eq!(regression(parsed.as_arr().unwrap()), None);
+        assert_eq!(regression(&[]), None);
+    }
+
+    #[test]
+    fn each_dimension_trips_the_diff() {
+        let base = report(5, 1, 1200.0);
+        for (worse, needle) in [
+            (report(30, 1, 1200.0), "availability"),
+            (report(5, 3, 1200.0), "max_staleness"),
+            (report(5, 1, 2400.0), "recovery_ms"),
+        ] {
+            let doc = append(&append("", &base).unwrap(), &worse).unwrap();
+            let parsed = parse(&doc).unwrap();
+            let msg = regression(parsed.as_arr().unwrap())
+                .unwrap_or_else(|| panic!("expected a {needle} regression"));
+            assert!(msg.contains(needle), "message {msg:?} should mention {needle}");
+        }
+        // Improvement in the other direction is fine.
+        let doc = append(&append("", &report(30, 3, 2400.0)).unwrap(), &base).unwrap();
+        let parsed = parse(&doc).unwrap();
+        assert_eq!(regression(parsed.as_arr().unwrap()), None);
+    }
+
+    #[test]
+    fn pass_to_fail_is_flagged_even_with_equal_metrics() {
+        // Tighter SLA on the second run flips pass with similar outcome
+        // numbers: the verdict flip alone must be flagged.
+        let good = report(5, 1, 1200.0);
+        let outcome = ChaosOutcome {
+            scenario: "split-brain".into(),
+            faults_applied: 2,
+            recoveries: 1,
+            unrecovered: 1,
+            recovery_ms: None,
+            max_staleness: 1,
+            max_staleness_partitioned: 1,
+            completed: 95,
+            shed: 5,
+            rerouted: 0,
+        };
+        let sla = SlaSpec { recovery_ms: 5000.0, max_staleness: 8, min_availability: 0.5 };
+        let bad = ChaosReport::evaluate(outcome, &sla);
+        assert!(good.pass && !bad.pass);
+        let doc = append(&append("", &good).unwrap(), &bad).unwrap();
+        let parsed = parse(&doc).unwrap();
+        let msg = regression(parsed.as_arr().unwrap()).expect("regression");
+        assert!(msg.contains("pass -> fail"));
+        assert!(msg.contains("unrecovered"));
+    }
+}

@@ -227,7 +227,8 @@ pub struct ChaosConfig {
     pub enabled: bool,
     /// Scenario preset name; one of
     /// [`crate::chaos::Scenario::PRESETS`] (`rolling-restart`,
-    /// `split-brain`, `flaky-uplink`). Validated at parse time.
+    /// `split-brain`, `flaky-uplink`, `random`). Validated at parse
+    /// time.
     pub scenario: String,
     /// Virtual-time step of the first fault.
     pub at_step: usize,
@@ -237,6 +238,13 @@ pub struct ChaosConfig {
     pub duration_steps: usize,
     /// Link latency multiplier for degrade events (`flaky-uplink`).
     pub degrade_factor: f64,
+    /// Number of fault events drawn by the `random` scenario. The
+    /// schedule is built *before* the serve loop from its own seeded
+    /// RNG stream, so admitted-query streams are untouched.
+    pub random_faults: usize,
+    /// Seed for the `random` scenario's fault-schedule RNG. Same seed
+    /// ⇒ bit-identical schedule; independent of the workload seed.
+    pub random_seed: u64,
     /// SLA: worst-case recovery ≤ this many ms (≤ 0 disables).
     pub sla_recovery_ms: f64,
     /// SLA: max version lag ≤ this many versions (< 0 disables).
@@ -253,6 +261,8 @@ impl Default for ChaosConfig {
             at_step: 40,
             duration_steps: 60,
             degrade_factor: 8.0,
+            random_faults: 8,
+            random_seed: 7,
             sla_recovery_ms: 0.0,
             sla_max_staleness: -1,
             sla_min_availability: 0.0,
@@ -485,6 +495,12 @@ impl SystemConfig {
                 }
                 self.chaos.degrade_factor = f;
             }
+            "chaos.random_faults" => {
+                self.chaos.random_faults = val.parse().map_err(|_| bad(key, val))?;
+            }
+            "chaos.random_seed" => {
+                self.chaos.random_seed = val.parse().map_err(|_| bad(key, val))?;
+            }
             "chaos.sla_recovery_ms" => {
                 self.chaos.sla_recovery_ms = val.parse().map_err(|_| bad(key, val))?;
             }
@@ -670,6 +686,8 @@ mod tests {
             at_step = 30
             duration_steps = 50
             degrade_factor = 6.5
+            random_faults = 12
+            random_seed = 99
             sla_recovery_ms = 4000.0
             sla_max_staleness = 2
             sla_min_availability = 0.95
@@ -681,6 +699,8 @@ mod tests {
         assert_eq!(cfg.chaos.at_step, 30);
         assert_eq!(cfg.chaos.duration_steps, 50);
         assert_eq!(cfg.chaos.degrade_factor, 6.5);
+        assert_eq!(cfg.chaos.random_faults, 12);
+        assert_eq!(cfg.chaos.random_seed, 99);
         assert_eq!(cfg.chaos.sla_recovery_ms, 4000.0);
         assert_eq!(cfg.chaos.sla_max_staleness, 2);
         assert_eq!(cfg.chaos.sla_min_availability, 0.95);

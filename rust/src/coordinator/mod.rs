@@ -25,9 +25,10 @@ use std::thread;
 use anyhow::{anyhow, Result};
 
 use crate::config::SystemConfig;
-use crate::gating::safeobo::{Observation, Qos, SafeObo};
-use crate::gating::{standard_arms, Arm, GenLoc, Retrieval};
+use crate::gating::safeobo::SafeObo;
+use crate::gating::{Arm, GenLoc, Retrieval};
 use crate::netsim::Link;
+use crate::pipeline::{build_gate, gated_step, NullSink};
 use crate::runtime::{ExecTiming, Runtime};
 use crate::serve::queue::{admission_decision, Admission, AdmissionPolicy};
 use crate::sim::{KnowledgeMode, SimSystem};
@@ -160,17 +161,7 @@ impl Coordinator {
     /// preloads both tiers' artifacts.
     pub fn new(cfg: SystemConfig, artifacts: &Path, gen_tokens: usize) -> Result<Coordinator> {
         let sim = SimSystem::new(cfg.clone(), KnowledgeMode::Adaptive);
-        let (min_acc, max_delay) = cfg.qos.constraints_for(cfg.dataset);
-        let gate = SafeObo::new(
-            standard_arms(),
-            Qos {
-                min_accuracy: min_acc,
-                max_delay_s: max_delay,
-            },
-            cfg.warmup_steps,
-            cfg.beta,
-            cfg.seed,
-        );
+        let gate = build_gate(&cfg);
         let executor = Executor::spawn(
             artifacts,
             vec![cfg.edge_tier.clone(), cfg.cloud_tier.clone()],
@@ -232,28 +223,22 @@ impl Coordinator {
                 }
             }
 
-            // 1. Context + gate decision.
-            let ctx = self.sim.gate_context(ev.qa_id, ev.edge_id, ev.step);
-            let decision = self.gate.decide(&ctx);
-            let arm_idx = match (downgrade, downgrade_idx) {
-                (true, Some(d)) => d,
-                _ => decision.arm_idx,
-            };
-            let arm = self.gate.arms[arm_idx];
-
-            // 2. Retrieval + virtual outcome + grading + adaptive update.
-            let (outcome, correct) = self.sim.serve(ev.qa_id, ev.edge_id, ev.step, arm);
-            svc_est.push(outcome.delay_s * 1000.0);
-            self.gate.observe(
-                &ctx,
-                arm_idx,
-                Observation {
-                    resource_cost: outcome.resource_cost,
-                    delay_cost: outcome.delay_cost,
-                    accuracy: if correct { 1.0 } else { 0.0 },
-                    delay_s: outcome.delay_s,
-                },
+            // 1–2. Gate decision + retrieval + virtual outcome +
+            //      grading + adaptive update, all through the staged
+            //      pipeline (same path as `run_eaco`/`serve_workload`).
+            let override_idx = if downgrade { downgrade_idx } else { None };
+            let r = gated_step(
+                &mut self.sim,
+                &mut self.gate,
+                ev.qa_id,
+                ev.edge_id,
+                ev.step,
+                override_idx,
+                &mut NullSink,
             );
+            let (outcome, correct) = (r.outcome, r.correct);
+            let arm = self.gate.arms[r.arm_idx];
+            svc_est.push(outcome.delay_s * 1000.0);
 
             // 3. Build the real prompt: question + retrieved context.
             let qa = &self.sim.corpus.qa[ev.qa_id];

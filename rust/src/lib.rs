@@ -35,6 +35,9 @@
 //!   (replacing the per-query all-edges index broadcast).
 //! * [`cloud`] — cloud node: GraphRAG retrieval + knowledge distributor.
 //! * [`gating`] — GP regression + SafeOBO collaborative gate (Alg. 1).
+//! * [`pipeline`] — the staged per-query execution pipeline (Admit →
+//!   Route → Retrieve → Gate → Generate → Grade → Update) with a typed
+//!   [`pipeline::StageEvent`] stream; every driver composes it.
 //! * [`runtime`] — PJRT artifact loading/execution, tokenizer, generation.
 //! * [`coordinator`] — router, dynamic batcher, serving pipeline, metrics.
 //! * [`serve`] — async serving plane: deterministic event loop with
@@ -60,6 +63,7 @@ pub mod index;
 pub mod linalg;
 pub mod netsim;
 pub mod oracle;
+pub mod pipeline;
 pub mod runtime;
 pub mod serve;
 pub mod sim;

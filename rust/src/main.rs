@@ -228,13 +228,20 @@ fn simulate(argv: Vec<String>) -> i32 {
 
 fn chaos(argv: Vec<String>) -> i32 {
     let a = match common("eaco-rag chaos", "scripted fault-injection run + SLA report")
-        .opt("scenario", "split-brain", "preset: rolling-restart | split-brain | flaky-uplink")
+        .opt(
+            "scenario",
+            "split-brain",
+            "preset: rolling-restart | split-brain | flaky-uplink | random",
+        )
         .opt("at", "40", "workload step at which the scenario begins")
         .opt("duration", "60", "scenario duration in workload steps")
         .opt("factor", "8", "link degradation multiplier (flaky-uplink)")
+        .opt("random-faults", "8", "number of fault events drawn (random scenario)")
+        .opt("random-seed", "7", "fault-schedule seed (random scenario)")
         .opt("sla-recovery-ms", "0", "recovery SLA in ms (<= 0 disables the check)")
         .opt("sla-staleness", "-1", "staleness SLA in versions (< 0 disables the check)")
         .opt("sla-availability", "0", "availability SLA fraction (<= 0 disables the check)")
+        .opt("append-trend", "", "append the report to this JSON trend file and diff vs previous")
         .parse_from(argv)
     {
         Ok(a) => a,
@@ -273,6 +280,8 @@ fn chaos(argv: Vec<String>) -> i32 {
     cfg.chaos.at_step = a.get_usize("at");
     cfg.chaos.duration_steps = a.get_usize("duration");
     cfg.chaos.degrade_factor = factor;
+    cfg.chaos.random_faults = a.get_usize("random-faults");
+    cfg.chaos.random_seed = a.get_u64("random-seed");
     cfg.chaos.sla_recovery_ms = a.get_f64("sla-recovery-ms");
     cfg.chaos.sla_max_staleness = staleness;
     cfg.chaos.sla_min_availability = a.get_f64("sla-availability");
@@ -283,6 +292,31 @@ fn chaos(argv: Vec<String>) -> i32 {
     let outcome = serve_m.chaos.expect("a chaos-enabled run attaches an outcome");
     let report = ChaosReport::evaluate(outcome, &SlaSpec::from_config(&cfg.chaos));
     println!("{}", report.to_json().to_string());
+    // Cross-run trend tracking: append this report to the trend array
+    // and fail if it regressed vs the previous entry (CI runs this via
+    // `make chaos-trend`).
+    let trend_path = a.get("append-trend");
+    if !trend_path.is_empty() {
+        let prior = std::fs::read_to_string(&trend_path).unwrap_or_default();
+        let doc = match eaco_rag::chaos::trend::append(&prior, &report) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("error: trend file {trend_path:?}: {e}");
+                return 2;
+            }
+        };
+        if let Err(e) = std::fs::write(&trend_path, &doc) {
+            eprintln!("error: writing trend file {trend_path:?}: {e}");
+            return 2;
+        }
+        let parsed = eaco_rag::util::json::parse(&doc).expect("append returns valid JSON");
+        let entries = parsed.as_arr().unwrap_or(&[]);
+        if let Some(msg) = eaco_rag::chaos::trend::regression(entries) {
+            eprintln!("SLA trend regression vs previous entry: {msg}");
+            return 1;
+        }
+        eprintln!("trend: {} entries in {trend_path} (no regression)", entries.len());
+    }
     if report.pass {
         0
     } else {

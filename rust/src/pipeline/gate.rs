@@ -1,0 +1,36 @@
+//! Shared gate construction: one `SafeObo` recipe from `SystemConfig`,
+//! used by `run_eaco`, the serving plane, and the PJRT coordinator
+//! (previously three identical inline copies).
+
+use crate::config::SystemConfig;
+use crate::gating::safeobo::{Qos, SafeObo};
+use crate::gating::standard_arms;
+
+/// Build the SafeOBO gate exactly as every gated driver does: standard
+/// arm set, QoS constraints resolved for the configured dataset, and
+/// warm-up/β/seed from the config.
+pub fn build_gate(cfg: &SystemConfig) -> SafeObo {
+    let (min_acc, max_delay) = cfg.qos.constraints_for(cfg.dataset);
+    SafeObo::new(
+        standard_arms(),
+        Qos {
+            min_accuracy: min_acc,
+            max_delay_s: max_delay,
+        },
+        cfg.warmup_steps,
+        cfg.beta,
+        cfg.seed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_matches_config_recipe() {
+        let cfg = SystemConfig::default();
+        let gate = build_gate(&cfg);
+        assert_eq!(gate.arms.len(), standard_arms().len());
+    }
+}

@@ -1,0 +1,210 @@
+//! Staged per-query execution pipeline — the one query path every
+//! driver composes.
+//!
+//! The paper's tiered serving decision (local SLM / edge-assisted /
+//! cloud LLM, §III) used to be implemented four separate times:
+//! `SimSystem::serve`'s inline retrieval match, `run_baseline` /
+//! `run_eaco`, the async serving plane, and the PJRT coordinator. This
+//! module is the single implementation they now share.
+//!
+//! # Stage contract
+//!
+//! A query moves through fixed stages, in order:
+//!
+//! 1. **Admit** — serving-plane only: queue-cap shed, dead-edge
+//!    reroute, deadline admission (accept / shed / downgrade). The
+//!    synchronous drivers admit unconditionally.
+//! 2. **Route** — pick the serving store: summary routing over the
+//!    cluster topology for edge-assisted retrieval ([`tier`]).
+//! 3. **Retrieve** — fetch chunks at the chosen tier (hybrid ANN or
+//!    keyword), with context-chars / community / hop accounting.
+//! 4. **Gate** — gated drivers only: SafeOBO arm selection from the
+//!    [`build_gate`] recipe; fixed-arm drivers skip this stage.
+//! 5. **Generate** — the strategy model ([`crate::sim::strategy`]):
+//!    tokens, delay, cost, one RNG draw.
+//! 6. **Grade** — the oracle's correctness verdict.
+//! 7. **Update** — the knowledge plane ([`KnowledgePolicy`]): cloud
+//!    FIFO push or versioned collaborative placement; gossip cadence
+//!    runs as the pre-query half of the same policy.
+//!
+//! Stages 2–7 are [`exec_query`]; [`gated_step`] wraps them with stage
+//! 4. Everything a driver wants to know about the run arrives as typed
+//! [`StageEvent`]s on a [`StageSink`] — `RunStats`, `ServeMetrics`, and
+//! `ChaosProbe` are three sinks over the one event stream.
+//!
+//! # Bit-identity
+//!
+//! The pipeline is a *relocation* of the seed's query path, not a
+//! reinterpretation: every mutation and RNG draw happens in the exact
+//! order the inline implementations used, so determinism digests
+//! (`tests/serve_determinism.rs`, `tests/chaos_determinism.rs`,
+//! `tests/pipeline_golden.rs`) are bit-identical before and after.
+
+pub mod gate;
+pub mod policy;
+pub mod sink;
+pub mod tier;
+
+pub use gate::build_gate;
+pub use policy::KnowledgePolicy;
+pub use sink::{NullSink, StageEvent, StageSink, StatsSink};
+pub use tier::{Retrieved, TierCtx};
+
+use crate::corpus::QaId;
+use crate::edge::semantic::embed_keywords;
+use crate::gating::safeobo::{Observation, SafeObo};
+use crate::gating::{Arm, GenLoc, Retrieval};
+use crate::netsim::Link;
+use crate::sim::strategy::{execute, Outcome, StrategyInputs};
+use crate::sim::{KnowledgeMode, SimSystem};
+
+/// Execute stages Route → Retrieve → Generate → Grade → Update for one
+/// query with a fixed arm. Emits `GossipRound` / `TierChosen` /
+/// `RecallProbe` events; terminal `QueryDone` emission stays with the
+/// driver, which owns admission context (seq, arrival time) the
+/// pipeline never sees.
+pub fn exec_query(
+    sys: &mut SimSystem,
+    qa_id: QaId,
+    edge_id: usize,
+    step: usize,
+    arm: Arm,
+    sink: &mut dyn StageSink,
+) -> (Outcome, bool) {
+    let policy = KnowledgePolicy::from_mode(sys.mode);
+
+    // Collaborative background work first: a due gossip round runs
+    // before the query sees the stores (virtual-time cadence).
+    if let Some(round) = policy.pre_query(&mut sys.cluster, &sys.corpus, step) {
+        sink.emit(&StageEvent::GossipRound {
+            step,
+            round: round.round,
+            wire_bytes: round.wire_bytes(),
+            version_lag: None,
+        });
+    }
+
+    // Borrow keywords straight from the corpus: retrieval mutates
+    // `sys.cluster`/`sys.net` only, both disjoint from `sys.corpus`.
+    let kws: Vec<&str> = sys.corpus.qa_keywords(&sys.corpus.qa[qa_id]);
+
+    // Dense query embedding for the collaborative ANN path. Legacy
+    // modes (no hasher) skip the hashing work entirely and retrieval
+    // degenerates to the keyword-only seed behavior.
+    let q_emb: Option<Vec<f32>> = match arm.retrieval {
+        Retrieval::LocalNaive | Retrieval::EdgeAssisted => sys
+            .query_hasher
+            .as_ref()
+            .map(|h| embed_keywords(h, &kws)),
+        _ => None,
+    };
+
+    // --- route + retrieve ---
+    let mut tctx = TierCtx {
+        cluster: &mut sys.cluster,
+        cloud: &sys.cloud,
+        net: &mut sys.net,
+        corpus: &sys.corpus,
+        community_marked: &sys.community_marked,
+        retrieve_k: sys.cfg.retrieve_k,
+    };
+    let r = tier::retrieve(&mut tctx, arm.retrieval, edge_id, step, &kws, q_emb.as_deref());
+
+    let qa = &sys.corpus.qa[qa_id];
+    sys.last_tier = r.tier;
+    sys.last_hit = r.tier != crate::sim::TIER_NONE
+        && r.chunks.iter().any(|c| qa.supporting_chunks.contains(c));
+    sys.last_ann = r.ann;
+    sink.emit(&StageEvent::TierChosen { step, edge_id, tier: r.tier, hit: sys.last_hit });
+    if let Some(probe) = r.ann {
+        sink.emit(&StageEvent::RecallProbe { step, probe });
+    }
+    if sys.mode == KnowledgeMode::Collaborative {
+        // Demand signals feed hotness-aware placement + gossip.
+        sys.cluster.observe_query(qa.topic, &r.chunks, step);
+    }
+
+    // --- generate ---
+    let inputs = StrategyInputs {
+        arm,
+        retrieved: r.chunks,
+        context_chars: r.context_chars,
+        community_content: r.community,
+        question_tokens: qa.length_tokens,
+        net_user_edge_s: sys.net.delay_ms(Link::UserToEdge(edge_id), step) / 1000.0,
+        net_edge_edge_s: r.edge_edge_s,
+        net_edge_cloud_s: sys.net.delay_ms(Link::EdgeToCloud(edge_id), step) / 1000.0,
+        edge_params_b: sys.edge_params_b,
+        cloud_params_b: sys.cloud_params_b,
+        rates: &sys.rates,
+        cost: &sys.cost,
+    };
+    let outcome = execute(inputs, &mut sys.rng);
+
+    // --- grade ---
+    let capability = match arm.gen {
+        GenLoc::EdgeSlm => sys.edge_capability,
+        GenLoc::CloudLlm => sys.cloud_capability,
+    };
+    let correct = sys.oracle.judge(
+        sys.corpus.spec.profile,
+        qa,
+        capability,
+        &outcome.retrieved,
+        outcome.source,
+        step,
+    );
+
+    // --- update ---
+    policy.post_query(
+        &mut sys.cluster,
+        &mut sys.cloud,
+        &sys.corpus,
+        &mut sys.community_marked,
+        step,
+        edge_id,
+        qa_id,
+    );
+
+    (outcome, correct)
+}
+
+/// Result of one gated pipeline step.
+pub struct GatedStep {
+    pub outcome: Outcome,
+    pub correct: bool,
+    /// The arm actually served (post-override).
+    pub arm_idx: usize,
+    /// The gate explored (warm-up): excluded from exploitation stats.
+    pub explored: bool,
+}
+
+/// Gate + execute one query: build the gate context, let SafeOBO
+/// decide (optionally overridden, e.g. by admission downgrade), run
+/// [`exec_query`], and feed the observation back to the gate.
+pub fn gated_step(
+    sys: &mut SimSystem,
+    gate: &mut SafeObo,
+    qa_id: QaId,
+    edge_id: usize,
+    step: usize,
+    override_idx: Option<usize>,
+    sink: &mut dyn StageSink,
+) -> GatedStep {
+    let ctx = sys.gate_context(qa_id, edge_id, step);
+    let decision = gate.decide(&ctx);
+    let arm_idx = override_idx.unwrap_or(decision.arm_idx);
+    let arm = gate.arms[arm_idx];
+    let (outcome, correct) = exec_query(sys, qa_id, edge_id, step, arm, sink);
+    gate.observe(
+        &ctx,
+        arm_idx,
+        Observation {
+            resource_cost: outcome.resource_cost,
+            delay_cost: outcome.delay_cost,
+            accuracy: if correct { 1.0 } else { 0.0 },
+            delay_s: outcome.delay_s,
+        },
+    );
+    GatedStep { outcome, correct, arm_idx, explored: decision.explored }
+}

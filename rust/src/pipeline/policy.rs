@@ -1,0 +1,91 @@
+//! The knowledge-plane seam: pre-query gossip cadence and post-query
+//! adaptive updates, extracted from the triplicated `KnowledgeMode`
+//! match in `SimSystem::serve` / `run_eaco` / the serving plane.
+
+use std::collections::HashSet;
+
+use crate::cloud::CloudNode;
+use crate::cluster::{EdgeCluster, GossipRound};
+use crate::corpus::{ChunkId, Corpus, QaId};
+use crate::sim::KnowledgeMode;
+
+/// How the Update stage maintains edge stores across queries. The
+/// variants map 1:1 onto [`KnowledgeMode`]; the policy is the pipeline's
+/// view of the mode (what to do around a query), while the mode remains
+/// the system-construction switch (which planes get built).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KnowledgePolicy {
+    /// Static provisioning only: no background work, no updates.
+    Static,
+    /// Cloud-triggered FIFO pushes straight into the home store
+    /// (paper-faithful EACO-RAG adaptive updates).
+    AdaptiveFifo,
+    /// Versioned placement + delta gossip through the cluster control
+    /// plane ([`crate::cluster`]).
+    Collaborative,
+}
+
+impl KnowledgePolicy {
+    pub fn from_mode(mode: KnowledgeMode) -> KnowledgePolicy {
+        match mode {
+            KnowledgeMode::Static => KnowledgePolicy::Static,
+            KnowledgeMode::Adaptive => KnowledgePolicy::AdaptiveFifo,
+            KnowledgeMode::Collaborative => KnowledgePolicy::Collaborative,
+        }
+    }
+
+    /// Pre-query background work: run a due gossip round so the query
+    /// sees post-round stores (virtual-time cadence). Returns the round
+    /// report when one ran, for the event stream / serving plane.
+    pub fn pre_query(
+        self,
+        cluster: &mut EdgeCluster,
+        corpus: &Corpus,
+        step: usize,
+    ) -> Option<GossipRound> {
+        if self == KnowledgePolicy::Collaborative && cluster.gossip_due(step) {
+            Some(cluster.run_gossip_round(corpus, step))
+        } else {
+            None
+        }
+    }
+
+    /// Post-query knowledge update: ask the cloud distributor whether
+    /// this query triggers a plan, then apply it per policy. Chunks that
+    /// arrive this way are marked as community-distributed content.
+    pub fn post_query(
+        self,
+        cluster: &mut EdgeCluster,
+        cloud: &mut CloudNode,
+        corpus: &Corpus,
+        community_marked: &mut [HashSet<ChunkId>],
+        step: usize,
+        edge_id: usize,
+        qa_id: QaId,
+    ) {
+        match self {
+            KnowledgePolicy::Static => {}
+            KnowledgePolicy::AdaptiveFifo => {
+                if let Some(plan) = cloud.record_query(corpus, edge_id, qa_id) {
+                    // Paper-faithful direct FIFO push (seed semantics).
+                    cluster.nodes[plan.edge_id].apply_update(corpus, &plan.chunks);
+                    let marked = &mut community_marked[plan.edge_id];
+                    for &c in &plan.chunks {
+                        marked.insert(c);
+                    }
+                }
+            }
+            KnowledgePolicy::Collaborative => {
+                if let Some(plan) = cloud.record_query(corpus, edge_id, qa_id) {
+                    // Versioned publication through the placement
+                    // engine; gossip spreads it onward from here.
+                    cluster.apply_cloud_update(corpus, step, &plan);
+                    let marked = &mut community_marked[plan.edge_id];
+                    for &c in &plan.chunks {
+                        marked.insert(c);
+                    }
+                }
+            }
+        }
+    }
+}

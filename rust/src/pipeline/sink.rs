@@ -1,0 +1,239 @@
+//! The typed per-stage event stream and its observers.
+//!
+//! Every driver narrates its run as a sequence of [`StageEvent`]s —
+//! admission verdicts, tier choices, recall probes, gossip rounds,
+//! fault applications, completions — and observers implement
+//! [`StageSink`] to fold that stream into whatever surface they own.
+//! The three built-in sinks are [`StatsSink`] (the `RunStats`
+//! accumulator shared by every driver), `ServeMetrics` (queueing
+//! observability; impl in [`crate::serve::metrics`]), and `ChaosProbe`
+//! (recovery/staleness probes; impl in [`crate::chaos::probe`]).
+//!
+//! Sinks are pure folds: they never touch the simulator, consume no
+//! RNG, and receive events in strict workload order regardless of the
+//! serving plane's worker count — so attaching or detaching a sink can
+//! never perturb a run's bit-identical digests.
+
+use crate::chaos::FaultEvent;
+use crate::edge::semantic::AnnProbe;
+use crate::serve::session::Session;
+use crate::sim::strategy::Outcome;
+use crate::sim::RunStats;
+
+/// One typed pipeline event. Borrowed payloads (`Outcome`, `Session`,
+/// `FaultEvent`) are valid only for the duration of the `emit` call;
+/// sinks clone what they keep.
+///
+/// Fields stamped by the serving plane only (`arrival_ms`,
+/// `store_empty`, `version_lag`) are zero/`false`/`None` when a
+/// synchronous driver emits the event — no synchronous driver attaches
+/// a sink that reads them.
+#[derive(Debug)]
+pub enum StageEvent<'a> {
+    /// A workload arrival entered the pipeline (pre-admission).
+    /// `depth` is the in-flight queue depth observed at arrival
+    /// (always 0 from the synchronous drivers).
+    Arrival { seq: usize, edge_id: usize, step: usize, now_ms: f64, depth: usize },
+    /// Admission verdict: the query passed every check.
+    Admitted { seq: usize },
+    /// Admission verdict: accepted, but rewritten to the cheap local
+    /// arm (`[serve] admission = "downgrade"`).
+    Downgraded { seq: usize },
+    /// The home edge was dead; the query was rerouted to the nearest
+    /// alive peer.
+    Rerouted { seq: usize, from: usize, to: usize },
+    /// Terminal: the query was shed (reason + stamps in the session).
+    SessionShed { session: &'a Session },
+    /// A gossip round executed (due-at-arrival cadence). `version_lag`
+    /// is sampled post-round only when a chaos probe is attached.
+    GossipRound { step: usize, round: usize, wire_bytes: usize, version_lag: Option<u64> },
+    /// A scheduled fault was applied to the cluster/net planes.
+    /// `version_lag` is sampled right after application.
+    FaultApplied { event: &'a FaultEvent, now_ms: f64, version_lag: u64 },
+    /// The retrieval stage picked a tier for this query and `hit` says
+    /// whether the retrieved set contained a supporting chunk.
+    TierChosen { step: usize, edge_id: usize, tier: usize, hit: bool },
+    /// The ANN path answered this query's retrieval (recall accounting).
+    RecallProbe { step: usize, probe: AnnProbe },
+    /// The query finished every stage. `explored` flags gate warm-up
+    /// queries (excluded from stats, exactly as `run_eaco` does);
+    /// `store_empty` reports the served edge's post-update store state
+    /// (closes chaos recovery windows).
+    QueryDone {
+        seq: usize,
+        edge_id: usize,
+        arrival_ms: f64,
+        outcome: &'a Outcome,
+        correct: bool,
+        arm_idx: usize,
+        explored: bool,
+        tier: usize,
+        hit: bool,
+        ann: Option<AnnProbe>,
+        store_empty: bool,
+    },
+    /// The serving plane closed this query's session (final stamps).
+    SessionDone { session: &'a Session },
+}
+
+/// An observer over the pipeline's event stream.
+pub trait StageSink {
+    fn emit(&mut self, ev: &StageEvent<'_>);
+}
+
+/// The no-op sink (synchronous single-query paths).
+pub struct NullSink;
+
+impl StageSink for NullSink {
+    fn emit(&mut self, _ev: &StageEvent<'_>) {}
+}
+
+/// Folds [`StageEvent::QueryDone`] into a [`RunStats`] — the one
+/// accumulator shared by `run_baseline`, `run_eaco`, and
+/// `serve_workload` (previously three hand-rolled copies).
+pub struct StatsSink {
+    stats: RunStats,
+    correct_n: usize,
+    /// Gated runs count arm usage and exclude exploration queries.
+    gated: bool,
+}
+
+impl StatsSink {
+    pub fn new(num_arms: usize, gated: bool) -> StatsSink {
+        StatsSink {
+            stats: RunStats { arm_counts: vec![0; num_arms], ..Default::default() },
+            correct_n: 0,
+            gated,
+        }
+    }
+
+    /// Finalize the accuracy ratio and hand the stats back.
+    pub fn finish(mut self) -> RunStats {
+        self.stats.accuracy = if self.stats.queries == 0 {
+            0.0
+        } else {
+            self.correct_n as f64 / self.stats.queries as f64
+        };
+        self.stats
+    }
+}
+
+impl StageSink for StatsSink {
+    fn emit(&mut self, ev: &StageEvent<'_>) {
+        let StageEvent::QueryDone { outcome, correct, arm_idx, explored, tier, hit, ann, .. } = ev
+        else {
+            return;
+        };
+        if self.gated {
+            if *explored {
+                return;
+            }
+            self.stats.arm_counts[*arm_idx] += 1;
+        }
+        if *correct {
+            self.correct_n += 1;
+        }
+        let s = &mut self.stats;
+        s.queries += 1;
+        s.delay.push(outcome.delay_s);
+        s.resource_cost.push(outcome.resource_cost);
+        s.total_cost.push(outcome.total_cost);
+        s.in_tokens.push(outcome.tokens.input);
+        s.out_tokens.push(outcome.tokens.output);
+        s.tier_queries[*tier] += 1;
+        if *hit {
+            s.tier_hits[*tier] += 1;
+        }
+        if let Some(p) = ann {
+            s.ann_queries += 1;
+            s.ann_recall.push(p.recall_at_k);
+            if p.exact_fallback {
+                s.ann_exact_fallbacks += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostModel;
+    use crate::gating::{Arm, GenLoc, Retrieval};
+    use crate::sim::strategy::{execute, GenRates, StrategyInputs};
+    use crate::sim::TIER_LOCAL;
+    use crate::util::rng::Rng;
+
+    fn outcome() -> Outcome {
+        let rates = GenRates::default();
+        let cost = CostModel::default();
+        let mut rng = Rng::new(7);
+        execute(
+            StrategyInputs {
+                arm: Arm { retrieval: Retrieval::LocalNaive, gen: GenLoc::EdgeSlm },
+                retrieved: vec![1, 2],
+                context_chars: 400,
+                community_content: false,
+                question_tokens: 24,
+                net_user_edge_s: 0.02,
+                net_edge_edge_s: 0.0,
+                net_edge_cloud_s: 0.1,
+                edge_params_b: 3.0,
+                cloud_params_b: 72.0,
+                rates: &rates,
+                cost: &cost,
+            },
+            &mut rng,
+        )
+    }
+
+    fn done(o: &Outcome, correct: bool, explored: bool) -> StageEvent<'_> {
+        StageEvent::QueryDone {
+            seq: 0,
+            edge_id: 0,
+            arrival_ms: 0.0,
+            outcome: o,
+            correct,
+            arm_idx: 1,
+            explored,
+            tier: TIER_LOCAL,
+            hit: true,
+            ann: None,
+            store_empty: false,
+        }
+    }
+
+    #[test]
+    fn stats_sink_accumulates_and_finalizes() {
+        let o = outcome();
+        let mut sink = StatsSink::new(1, false);
+        sink.emit(&done(&o, true, false));
+        sink.emit(&done(&o, false, false));
+        // Non-terminal events are ignored by the stats fold.
+        sink.emit(&StageEvent::Admitted { seq: 2 });
+        let stats = sink.finish();
+        assert_eq!(stats.queries, 2);
+        assert!((stats.accuracy - 0.5).abs() < 1e-12);
+        assert_eq!(stats.tier_queries[TIER_LOCAL], 2);
+        assert_eq!(stats.tier_hits[TIER_LOCAL], 2);
+        assert_eq!(stats.arm_counts, vec![0], "ungated runs keep no arm histogram");
+    }
+
+    #[test]
+    fn gated_sink_skips_exploration_and_counts_arms() {
+        let o = outcome();
+        let mut sink = StatsSink::new(5, true);
+        sink.emit(&done(&o, true, true)); // exploration: excluded
+        sink.emit(&done(&o, true, false));
+        let stats = sink.finish();
+        assert_eq!(stats.queries, 1);
+        assert_eq!(stats.arm_counts[1], 1);
+        assert!((stats.accuracy - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn null_sink_accepts_everything() {
+        let o = outcome();
+        NullSink.emit(&done(&o, true, false));
+        NullSink.emit(&StageEvent::Downgraded { seq: 0 });
+    }
+}

@@ -1,0 +1,134 @@
+//! The Route/Retrieve stages: one home for the tiered retrieval
+//! decision (paper §III) that used to live inline in `SimSystem::serve`.
+//!
+//! [`retrieve`] absorbs the `Retrieval::{None, LocalNaive,
+//! EdgeAssisted, CloudGraph}` match — hybrid ANN probing, summary
+//! routing over the cluster topology, context-chars accounting, and
+//! neighbor-hop delay all live here, and every driver observes the same
+//! [`Retrieved`] record. The borrow seam is [`TierCtx`]: field-granular
+//! borrows of the simulator, so query keywords can stay borrowed from
+//! the corpus while retrieval mutates the cluster/net planes.
+
+use std::collections::HashSet;
+
+use crate::cloud::CloudNode;
+use crate::cluster::EdgeCluster;
+use crate::corpus::{ChunkId, Corpus};
+use crate::edge::semantic::AnnProbe;
+use crate::gating::Retrieval;
+use crate::netsim::{Link, NetSim};
+use crate::sim::{TIER_CLOUD, TIER_LOCAL, TIER_NEIGHBOR, TIER_NONE};
+
+/// Disjoint field borrows of the simulator needed by the retrieval
+/// stage. Everything the stage mutates (`cluster`, `net`) is disjoint
+/// from the corpus the query keywords borrow from.
+pub struct TierCtx<'a> {
+    pub cluster: &'a mut EdgeCluster,
+    pub cloud: &'a CloudNode,
+    pub net: &'a mut NetSim,
+    pub corpus: &'a Corpus,
+    /// Per-edge chunks that arrived via community distribution.
+    pub community_marked: &'a [HashSet<ChunkId>],
+    pub retrieve_k: usize,
+}
+
+/// What the Route/Retrieve stages produced for one query.
+pub struct Retrieved {
+    pub chunks: Vec<ChunkId>,
+    pub context_chars: usize,
+    /// Retrieval surfaced community-distributed content.
+    pub community: bool,
+    /// Neighbor-hop transfer time (s); 0 unless the neighbor tier served.
+    pub edge_edge_s: f64,
+    /// `TIER_NONE` / `TIER_LOCAL` / `TIER_NEIGHBOR` / `TIER_CLOUD`.
+    pub tier: usize,
+    /// IVF probe outcome when the ANN path answered (collaborative
+    /// local/edge-assisted retrieval only).
+    pub ann: Option<AnnProbe>,
+}
+
+/// Execute the retrieval tier chosen by `retrieval` for a query at
+/// `edge_id`. `q_emb` is the dense query embedding (collaborative mode
+/// only); without it every call degenerates to keyword-only retrieval.
+///
+/// Call order is load-bearing for bit-identity: summary routing mutates
+/// route counters, `retrieve*` mutates per-store telemetry, and the
+/// neighbor-hop `delay_ms` draws from the per-link jitter stream — all
+/// in exactly the order the inline match used.
+pub fn retrieve(
+    ctx: &mut TierCtx<'_>,
+    retrieval: Retrieval,
+    edge_id: usize,
+    step: usize,
+    kws: &[&str],
+    q_emb: Option<&[f32]>,
+) -> Retrieved {
+    match retrieval {
+        Retrieval::None => Retrieved {
+            chunks: Vec::new(),
+            context_chars: 0,
+            community: false,
+            edge_edge_s: 0.0,
+            tier: TIER_NONE,
+            ann: None,
+        },
+        Retrieval::LocalNaive => {
+            let (chunks, ann) = fetch(ctx, edge_id, kws, q_emb);
+            let context_chars =
+                ctx.cluster.nodes[edge_id].retrieval_context_chars(ctx.corpus, &chunks);
+            let community = chunks
+                .iter()
+                .any(|c| ctx.community_marked[edge_id].contains(c));
+            Retrieved { chunks, context_chars, community, edge_edge_s: 0.0, tier: TIER_LOCAL, ann }
+        }
+        Retrieval::EdgeAssisted => {
+            // Summary routing over the cluster topology (full mesh in
+            // the legacy modes ⇒ the oracle's choice). With ANN enabled
+            // the decision also blends coarse-centroid alignment from
+            // gossiped digests.
+            let best = ctx.cluster.route_blended(edge_id, kws, q_emb).edge;
+            ctx.cluster.note_served_route(best == edge_id);
+            let (chunks, ann) = fetch(ctx, best, kws, q_emb);
+            let context_chars =
+                ctx.cluster.nodes[best].retrieval_context_chars(ctx.corpus, &chunks);
+            let community = chunks
+                .iter()
+                .any(|c| ctx.community_marked[best].contains(c));
+            let (edge_edge_s, tier) = if best == edge_id {
+                (0.0, TIER_LOCAL)
+            } else {
+                (
+                    ctx.net.delay_ms(Link::EdgeToEdge(edge_id, best), step) / 1000.0,
+                    TIER_NEIGHBOR,
+                )
+            };
+            Retrieved { chunks, context_chars, community, edge_edge_s, tier, ann }
+        }
+        Retrieval::CloudGraph => {
+            let (chunks, context_chars) =
+                ctx.cloud.retrieve_graph(ctx.corpus, kws, ctx.retrieve_k);
+            Retrieved {
+                chunks,
+                context_chars,
+                community: false,
+                edge_edge_s: 0.0,
+                tier: TIER_CLOUD,
+                ann: None,
+            }
+        }
+    }
+}
+
+/// Store-level fetch from one edge: hybrid (keyword + ANN) when a dense
+/// query embedding exists, plain keyword retrieval otherwise.
+fn fetch(
+    ctx: &mut TierCtx<'_>,
+    edge: usize,
+    kws: &[&str],
+    q_emb: Option<&[f32]>,
+) -> (Vec<ChunkId>, Option<AnnProbe>) {
+    match q_emb {
+        Some(q) => ctx.cluster.nodes[edge].retrieve_hybrid(kws, q, ctx.retrieve_k),
+        None => (ctx.cluster.nodes[edge].retrieve(kws, ctx.retrieve_k), None),
+    }
+}

@@ -368,6 +368,31 @@ impl ServeMetrics {
     }
 }
 
+/// The metrics surface as a pipeline observer: every counter that used
+/// to be incremented inline in the serve loop now folds off the typed
+/// event stream. Scheduling-model quantities the pipeline cannot know
+/// (gossip busy/overlap time, background-pool accounting) stay owned by
+/// the serving plane, which writes them directly.
+impl crate::pipeline::StageSink for ServeMetrics {
+    fn emit(&mut self, ev: &crate::pipeline::StageEvent<'_>) {
+        use crate::pipeline::StageEvent as E;
+        match ev {
+            E::Arrival { depth, .. } => self.observe_depth(*depth),
+            E::Admitted { .. } => self.admitted += 1,
+            E::Downgraded { .. } => self.downgraded += 1,
+            E::Rerouted { .. } => self.rerouted += 1,
+            E::SessionShed { session } => self.record_shed((*session).clone()),
+            E::GossipRound { wire_bytes, .. } => {
+                self.gossip_rounds += 1;
+                self.gossip_bytes += *wire_bytes;
+            }
+            E::QueryDone { seq, outcome, .. } => self.fold_retrieved(*seq, &outcome.retrieved),
+            E::SessionDone { session } => self.record_done((*session).clone()),
+            E::FaultApplied { .. } | E::TierChosen { .. } | E::RecallProbe { .. } => {}
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

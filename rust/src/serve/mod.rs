@@ -45,10 +45,13 @@ pub mod queue;
 pub mod session;
 
 use crate::chaos::{self, ChaosProbe, Scenario};
-use crate::gating::safeobo::{Observation, Qos, SafeObo};
-use crate::gating::{standard_arms, Arm, GenLoc, Retrieval};
+use crate::gating::{Arm, GenLoc, Retrieval};
 use crate::netsim::{Link, NetSpec};
-use crate::sim::{KnowledgeMode, RunStats, SimSystem};
+use crate::pipeline::{
+    build_gate, exec_query, gated_step, KnowledgePolicy, NullSink, StageEvent, StageSink,
+    StatsSink,
+};
+use crate::sim::{RunStats, SimSystem};
 use crate::util::stats::Running;
 use crate::workload::Workload;
 
@@ -111,6 +114,28 @@ fn overlap(a: (f64, f64), b: (f64, f64)) -> f64 {
     (a.1.min(b.1) - a.0.max(b.0)).max(0.0)
 }
 
+/// Fan-out sink for one serve run: the stats fold, the metrics surface,
+/// the optional chaos probe, and the caller's observer all see every
+/// event, in that fixed order. Each sink owns disjoint state, so the
+/// fan-out order is unobservable in any digest.
+struct ServeSinks<'a> {
+    stats: StatsSink,
+    metrics: ServeMetrics,
+    probe: Option<ChaosProbe>,
+    observer: &'a mut dyn StageSink,
+}
+
+impl StageSink for ServeSinks<'_> {
+    fn emit(&mut self, ev: &StageEvent<'_>) {
+        self.stats.emit(ev);
+        self.metrics.emit(ev);
+        if let Some(p) = self.probe.as_mut() {
+            p.emit(ev);
+        }
+        self.observer.emit(ev);
+    }
+}
+
 /// Drive a workload through the serving plane. Returns the run's
 /// `RunStats` (with the worker-invariant [`metrics::ServeSummary`]
 /// attached) plus the full [`ServeMetrics`].
@@ -119,23 +144,29 @@ pub fn serve_workload(
     workload: &Workload,
     driver: Driver,
 ) -> (RunStats, ServeMetrics) {
+    serve_workload_observed(sys, workload, driver, &mut NullSink)
+}
+
+/// [`serve_workload`] with an external [`StageSink`] attached: the
+/// observer receives every pipeline event (arrivals, admission
+/// verdicts, gossip rounds, faults, completions) in strict workload
+/// order — the emission points run at arrival processing, so the
+/// stream is invariant across `serve.workers` settings.
+pub fn serve_workload_observed(
+    sys: &mut SimSystem,
+    workload: &Workload,
+    driver: Driver,
+    observer: &mut dyn StageSink,
+) -> (RunStats, ServeMetrics) {
     let scfg = sys.cfg.serve.clone();
     let workers = scfg.workers.max(1);
-    let collaborative = sys.mode == KnowledgeMode::Collaborative;
+    let policy = KnowledgePolicy::from_mode(sys.mode);
 
-    // Gate setup mirrors `run_eaco` exactly (same constructor inputs ⇒
-    // same GP streams ⇒ same decisions on the same contexts).
+    // Shared gate recipe (`pipeline::build_gate`): same constructor
+    // inputs as `run_eaco` ⇒ same GP streams ⇒ same decisions on the
+    // same contexts.
     let mut gate = match driver {
-        Driver::Gated => {
-            let (min_acc, max_delay) = sys.cfg.qos.constraints_for(sys.cfg.dataset);
-            Some(SafeObo::new(
-                standard_arms(),
-                Qos { min_accuracy: min_acc, max_delay_s: max_delay },
-                sys.cfg.warmup_steps,
-                sys.cfg.beta,
-                sys.cfg.seed,
-            ))
-        }
+        Driver::Gated => Some(build_gate(&sys.cfg)),
         Driver::Fixed(_) => None,
     };
     let downgrade_arm = Arm { retrieval: Retrieval::LocalNaive, gen: GenLoc::EdgeSlm };
@@ -143,14 +174,7 @@ pub fn serve_workload(
         .as_ref()
         .and_then(|g| g.arms.iter().position(|a| *a == downgrade_arm));
 
-    let mut stats = RunStats {
-        arm_counts: vec![0; gate.as_ref().map(|g| g.arms.len()).unwrap_or(1)],
-        ..Default::default()
-    };
     let bytes0 = sys.cluster.bytes_gossiped();
-    let mut correct_n = 0usize;
-
-    let mut m = ServeMetrics::new(sys.cfg.num_edges, &scfg);
     let mut clk = ServeClock::virtual_clock();
 
     // Cumulative inter-arrival offsets, precomputed so scheduled
@@ -171,7 +195,15 @@ pub fn serve_workload(
     } else {
         None
     };
-    let mut probe = scenario.as_ref().map(|_| ChaosProbe::new(sys.cfg.num_edges));
+    let mut sinks = ServeSinks {
+        stats: StatsSink::new(
+            gate.as_ref().map(|g| g.arms.len()).unwrap_or(1),
+            matches!(driver, Driver::Gated),
+        ),
+        metrics: ServeMetrics::new(sys.cfg.num_edges, &scfg),
+        probe: scenario.as_ref().map(|_| ChaosProbe::new(sys.cfg.num_edges)),
+        observer,
+    };
     let mut heap: EventHeap<Tick> = EventHeap::new();
     if let Some(sc) = &scenario {
         for (fi, f) in sc.schedule.iter().enumerate() {
@@ -201,20 +233,23 @@ pub fn serve_workload(
         clk.advance_to(now);
         let i = match tick {
             Tick::GossipDone => {
-                m.gossip_completed += 1;
+                sinks.metrics.gossip_completed += 1;
                 continue;
             }
             Tick::Fault(fi) => {
-                // Apply the scheduled fault to both planes, then let
-                // the probe observe the post-fault cluster state.
-                // Injection is RNG-free, so admitted queries keep the
-                // exact random streams of a fault-free run.
+                // Apply the scheduled fault to both planes, then emit
+                // the event with the post-fault version lag (the probe
+                // folds it). Injection is RNG-free, so admitted queries
+                // keep the exact random streams of a fault-free run.
                 let sc = scenario.as_ref().expect("fault tick implies a scenario");
                 let f = &sc.schedule[fi];
                 chaos::injector::apply(&f.event, &mut sys.cluster, &mut sys.net);
-                if let Some(p) = probe.as_mut() {
-                    p.on_fault(&f.event, now, &sys.cluster);
-                }
+                let lag = sys.cluster.max_version_lag();
+                sinks.emit(&StageEvent::FaultApplied {
+                    event: &f.event,
+                    now_ms: now,
+                    version_lag: lag,
+                });
                 continue;
             }
             Tick::Arrival(i) => i,
@@ -225,21 +260,25 @@ pub fn serve_workload(
         // rule of the synchronous loops (due-at-arrival, before the
         // query touches the stores) — rounds consume no RNG, so store
         // state and the byte stream stay bit-identical to
-        // `run_baseline`/`run_eaco`. `sys.serve`'s own in-line
-        // `maybe_gossip` then no-ops for this step.
-        if collaborative && sys.cluster.gossip_due(ev.step) {
-            let report = sys.cluster.run_gossip_round(&sys.corpus, ev.step);
+        // `run_baseline`/`run_eaco`. The pipeline's own pre-query
+        // gossip then no-ops for this step.
+        if let Some(report) = policy.pre_query(&mut sys.cluster, &sys.corpus, ev.step) {
             let g_ms = gossip_service_ms(&sys.net.spec, report.wire_bytes());
-            m.gossip_rounds += 1;
-            m.gossip_busy_ms += g_ms;
-            m.gossip_bytes += report.wire_bytes();
+            let lag = sinks.probe.as_ref().map(|_| sys.cluster.max_version_lag());
+            sinks.emit(&StageEvent::GossipRound {
+                step: ev.step,
+                round: report.round,
+                wire_bytes: report.wire_bytes(),
+                version_lag: lag,
+            });
+            sinks.metrics.gossip_busy_ms += g_ms;
             if scfg.gossip_background {
                 // Background: the round's logical effects land at the
                 // same deterministic point as the sync path (so no
                 // query's retrieved set can change); only its modeled
                 // wire time runs concurrently with query service.
                 for &(s, d, _) in &in_flight {
-                    m.gossip_overlap_ms += overlap((now, now + g_ms), (s, d));
+                    sinks.metrics.gossip_overlap_ms += overlap((now, now + g_ms), (s, d));
                 }
                 gossip_windows.push((now, now + g_ms));
                 // Physical wire-work (checksum of the round's bytes)
@@ -247,7 +286,7 @@ pub fn serve_workload(
                 // completion order cannot leak into the digest.
                 if let Some(p) = pool.as_mut() {
                     p.submit(Job::GossipWire { round: report.round, bytes: report.wire_bytes() });
-                    m.bg_jobs += 1;
+                    sinks.metrics.bg_jobs += 1;
                 }
             } else {
                 // Foreground: the round blocks every virtual server.
@@ -256,9 +295,6 @@ pub fn serve_workload(
                 }
             }
             heap.push(now + g_ms, Tick::GossipDone);
-            if let Some(p) = probe.as_mut() {
-                p.on_gossip(&sys.cluster);
-            }
         }
 
         // Queue accounting at arrival: drop departed sessions, then
@@ -266,14 +302,20 @@ pub fn serve_workload(
         in_flight.retain(|&(_, d, _)| d > now);
         let depth = in_flight.len();
         let edge_depth = in_flight.iter().filter(|&&(_, _, e)| e == ev.edge_id).count();
-        m.observe_depth(depth);
+        sinks.emit(&StageEvent::Arrival {
+            seq: i,
+            edge_id: ev.edge_id,
+            step: ev.step,
+            now_ms: now,
+            depth,
+        });
 
         let mut session = Session::new(i, ev.qa_id, ev.edge_id, ev.step, now);
 
         // Backpressure: bounded per-edge occupancy.
         if scfg.queue_cap > 0 && edge_depth >= scfg.queue_cap {
             session.mark_shed(ShedReason::QueueFull, now);
-            m.record_shed(session);
+            sinks.emit(&StageEvent::SessionShed { session: &session });
             continue;
         }
 
@@ -285,11 +327,11 @@ pub fn serve_workload(
                 Some(alt) => {
                     edge_id = alt;
                     session.edge_id = alt;
-                    m.rerouted += 1;
+                    sinks.emit(&StageEvent::Rerouted { seq: i, from: ev.edge_id, to: alt });
                 }
                 None => {
                     session.mark_shed(ShedReason::DeadEdge, now);
-                    m.record_shed(session);
+                    sinks.emit(&StageEvent::SessionShed { session: &session });
                     continue;
                 }
             }
@@ -310,17 +352,17 @@ pub fn serve_workload(
                 Admission::Accept => {}
                 Admission::Shed => {
                     session.mark_shed(ShedReason::Deadline, now);
-                    m.record_shed(session);
+                    sinks.emit(&StageEvent::SessionShed { session: &session });
                     continue;
                 }
                 Admission::Downgrade => {
                     downgrade = true;
-                    m.downgraded += 1;
+                    sinks.emit(&StageEvent::Downgraded { seq: i });
                 }
             }
         }
 
-        m.admitted += 1;
+        sinks.emit(&StageEvent::Admitted { seq: i });
 
         // Dispatch to the earliest-free virtual server (tie → lowest
         // index — deterministic).
@@ -332,40 +374,26 @@ pub fn serve_workload(
         }
         let start = now.max(server_free[slot]);
         session.advance(Stage::Retrieving, start);
+        session.advance(Stage::Gating, start);
+        session.advance(Stage::Generating, start);
 
-        // Logical work, strictly in event order — this is what keeps
-        // the run bit-identical across worker counts. Under virtual
-        // time the interior stage stamps coincide with dispatch (the
-        // simulator models delay end-to-end; see `session`).
+        // Logical work through the pipeline, strictly in event order —
+        // this is what keeps the run bit-identical across worker
+        // counts. Under virtual time the interior stage stamps coincide
+        // with dispatch (the simulator models delay end-to-end; see
+        // `session`).
         let (outcome, correct, used_idx, explored) = match (&driver, gate.as_mut()) {
             (Driver::Gated, Some(g)) => {
-                let ctx = sys.gate_context(ev.qa_id, edge_id, ev.step);
-                let decision = g.decide(&ctx);
-                let idx = match (downgrade, downgrade_idx) {
-                    (true, Some(d)) => d,
-                    _ => decision.arm_idx,
-                };
-                let arm = g.arms[idx];
-                session.advance(Stage::Gating, start);
-                session.advance(Stage::Generating, start);
-                let (outcome, correct) = sys.serve(ev.qa_id, edge_id, ev.step, arm);
-                g.observe(
-                    &ctx,
-                    idx,
-                    Observation {
-                        resource_cost: outcome.resource_cost,
-                        delay_cost: outcome.delay_cost,
-                        accuracy: if correct { 1.0 } else { 0.0 },
-                        delay_s: outcome.delay_s,
-                    },
+                let override_idx = if downgrade { downgrade_idx } else { None };
+                let r = gated_step(
+                    sys, g, ev.qa_id, edge_id, ev.step, override_idx, &mut sinks,
                 );
-                (outcome, correct, idx, decision.explored)
+                (r.outcome, r.correct, r.arm_idx, r.explored)
             }
             (Driver::Fixed(arm), _) => {
                 let arm = if downgrade { downgrade_arm } else { *arm };
-                session.advance(Stage::Gating, start);
-                session.advance(Stage::Generating, start);
-                let (outcome, correct) = sys.serve(ev.qa_id, edge_id, ev.step, arm);
+                let (outcome, correct) =
+                    exec_query(sys, ev.qa_id, edge_id, ev.step, arm, &mut sinks);
                 (outcome, correct, 0, false)
             }
             (Driver::Gated, None) => unreachable!("gated driver always has a gate"),
@@ -382,51 +410,34 @@ pub fn serve_workload(
             // window (the trigger-time pass above covers sessions that
             // were in flight when a window opened).
             for &(g0, g1) in &gossip_windows {
-                m.gossip_overlap_ms += overlap((g0, g1), (start, done));
+                sinks.metrics.gossip_overlap_ms += overlap((g0, g1), (start, done));
             }
         }
         session.advance(Stage::Done, done);
         session.tier = sys.last_tier;
-        m.fold_retrieved(i, &outcome.retrieved);
-        m.record_done(session);
-        if let Some(p) = probe.as_mut() {
-            // Arrival-time stamp (`now`), so recovery measurements are
-            // invariant to the worker count.
-            p.on_done(edge_id, now, &sys.cluster);
-        }
-
-        match driver {
-            Driver::Gated => {
-                // Exploration is excluded from stats, exactly as
-                // `run_eaco` does.
-                if !explored {
-                    stats.arm_counts[used_idx] += 1;
-                    crate::sim::accumulate(
-                        &mut stats,
-                        &outcome,
-                        correct,
-                        &mut correct_n,
-                        sys.last_tier,
-                        sys.last_hit,
-                        sys.last_ann,
-                    );
-                }
-            }
-            Driver::Fixed(_) => {
-                crate::sim::accumulate(
-                    &mut stats,
-                    &outcome,
-                    correct,
-                    &mut correct_n,
-                    sys.last_tier,
-                    sys.last_hit,
-                    sys.last_ann,
-                );
-            }
-        }
+        // Terminal events: `arrival_ms` carries the arrival stamp
+        // (`now`), so recovery measurements stay invariant to the
+        // worker count; `store_empty` is the served edge's post-update
+        // state (closes chaos recovery windows).
+        let store_empty = sys.cluster.nodes[edge_id].is_empty();
+        sinks.emit(&StageEvent::QueryDone {
+            seq: i,
+            edge_id,
+            arrival_ms: now,
+            outcome: &outcome,
+            correct,
+            arm_idx: used_idx,
+            explored,
+            tier: sys.last_tier,
+            hit: sys.last_hit,
+            ann: sys.last_ann,
+            store_empty,
+        });
+        sinks.emit(&StageEvent::SessionDone { session: &session });
     }
 
-    crate::sim::finalize(&mut stats, correct_n);
+    let ServeSinks { stats, metrics: mut m, probe, observer: _ } = sinks;
+    let mut stats = stats.finish();
     stats.bytes_replicated = sys.cluster.bytes_gossiped() - bytes0;
     if let Some(mut p) = pool {
         let (checksum, busy_ns, done) = p.drain();
@@ -446,7 +457,7 @@ mod tests {
     use super::*;
     use crate::config::SystemConfig;
     use crate::corpus::Profile;
-    use crate::sim::workload_for;
+    use crate::sim::{workload_for, KnowledgeMode};
 
     fn small_cfg() -> SystemConfig {
         SystemConfig {

@@ -6,7 +6,10 @@
 //! paper's experiments (Tables 1/4/5/6/7, Figures 2/4) deterministically
 //! and fast. The real-serving path (PJRT generation, wall-clock latency)
 //! lives in [`crate::coordinator`]; both share the same retrieval,
-//! gating, and cost machinery.
+//! gating, and cost machinery. Per-query execution itself — tier
+//! routing, retrieval, generation, grading, knowledge updates — lives
+//! in the staged pipeline ([`crate::pipeline`]); this module owns
+//! system construction and the synchronous run loops over it.
 
 pub mod strategy;
 
@@ -15,17 +18,18 @@ use crate::cluster::EdgeCluster;
 use crate::config::SystemConfig;
 use crate::corpus::{ChunkId, Corpus, QaId};
 use crate::cost::CostModel;
-use crate::edge::semantic::{embed_keywords, AnnProbe};
+use crate::edge::semantic::AnnProbe;
 use crate::edge::EdgeNode;
-use crate::gating::safeobo::{Observation, Qos, SafeObo};
-use crate::gating::{standard_arms, Arm, GateContext, GenLoc, Retrieval};
+use crate::gating::safeobo::SafeObo;
+use crate::gating::{Arm, GateContext, GenLoc, Retrieval};
 use crate::netsim::{Link, NetSim};
 use crate::oracle::Oracle;
+use crate::pipeline::{self, KnowledgePolicy, StageEvent, StageSink, StatsSink};
 use crate::runtime::FeatureHasher;
 use crate::util::rng::Rng;
 use crate::util::stats::Running;
 use crate::workload::{Workload, WorkloadSpec};
-use strategy::{execute, GenRates, Outcome, StrategyInputs};
+use strategy::{GenRates, Outcome};
 
 /// How edge stores are managed during a run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -143,8 +147,9 @@ pub struct SimSystem {
     pub cost: CostModel,
     pub rates: GenRates,
     pub mode: KnowledgeMode,
-    /// Chunks that arrived via community distribution, per edge.
-    community_marked: Vec<std::collections::HashSet<ChunkId>>,
+    /// Chunks that arrived via community distribution, per edge
+    /// (maintained by the pipeline's Update stage).
+    pub(crate) community_marked: Vec<std::collections::HashSet<ChunkId>>,
     /// Tier + support-hit of the most recent [`Self::serve`] call (the
     /// run loops — including the event loop in [`crate::serve`] — fold
     /// these into [`RunStats`]).
@@ -155,8 +160,8 @@ pub struct SimSystem {
     pub(crate) last_ann: Option<AnnProbe>,
     /// Query embedder for the collaborative dense path (shares hasher
     /// geometry with every edge's chunk embeddings).
-    query_hasher: Option<FeatureHasher>,
-    rng: Rng,
+    pub(crate) query_hasher: Option<FeatureHasher>,
+    pub(crate) rng: Rng,
     /// Tier parameters (emulated billions) — from the manifest when
     /// available, else the defaults matching `python/compile/model.py`.
     pub edge_params_b: f64,
@@ -310,6 +315,9 @@ impl SimSystem {
     }
 
     /// Serve one query with a fixed arm; returns the outcome + verdict.
+    /// Thin wrapper over the staged pipeline ([`crate::pipeline`]) with
+    /// no observer attached — every retrieval-tier, gossip, and
+    /// knowledge-update decision lives there now.
     pub fn serve(
         &mut self,
         qa_id: QaId,
@@ -317,188 +325,32 @@ impl SimSystem {
         step: usize,
         arm: Arm,
     ) -> (Outcome, bool) {
-        // Collaborative background work first: a due gossip round runs
-        // before the query sees the stores (virtual-time cadence).
-        if self.mode == KnowledgeMode::Collaborative {
-            self.cluster.maybe_gossip(&self.corpus, step);
-        }
-
-        // Borrow keywords straight from the corpus: retrieval mutates
-        // `self.cluster`/`self.cloud`/`self.net` only, all disjoint from
-        // `self.corpus`, so the per-query String clone the seed did here
-        // was pure hot-path allocation overhead.
-        let kws: Vec<&str> = self.corpus.qa_keywords(&self.corpus.qa[qa_id]);
-
-        // Dense query embedding for the collaborative ANN path. Legacy
-        // modes (no hasher) skip the hashing work entirely and every
-        // call below degenerates to the keyword-only seed behavior.
-        let q_emb: Option<Vec<f32>> = match arm.retrieval {
-            Retrieval::LocalNaive | Retrieval::EdgeAssisted => self
-                .query_hasher
-                .as_ref()
-                .map(|h| embed_keywords(h, &kws)),
-            _ => None,
-        };
-        self.last_ann = None;
-
-        // --- retrieval ---
-        let (retrieved, context_chars, community, edge_edge_s, tier) = match arm.retrieval {
-            Retrieval::None => (Vec::new(), 0, false, 0.0, TIER_NONE),
-            Retrieval::LocalNaive => {
-                let chunks = match q_emb.as_deref() {
-                    Some(q) => {
-                        let (chunks, probe) = self.cluster.nodes[edge_id].retrieve_hybrid(
-                            &kws,
-                            q,
-                            self.cfg.retrieve_k,
-                        );
-                        self.last_ann = probe;
-                        chunks
-                    }
-                    None => self.cluster.nodes[edge_id].retrieve(&kws, self.cfg.retrieve_k),
-                };
-                let chars =
-                    self.cluster.nodes[edge_id].retrieval_context_chars(&self.corpus, &chunks);
-                let community = chunks
-                    .iter()
-                    .any(|c| self.community_marked[edge_id].contains(c));
-                (chunks, chars, community, 0.0, TIER_LOCAL)
-            }
-            Retrieval::EdgeAssisted => {
-                // Summary routing over the cluster topology (full mesh
-                // in the legacy modes ⇒ the oracle's choice). With ANN
-                // enabled the decision also blends coarse-centroid
-                // alignment from gossiped digests.
-                let best = self
-                    .cluster
-                    .route_blended(edge_id, &kws, q_emb.as_deref())
-                    .edge;
-                self.cluster.note_served_route(best == edge_id);
-                let chunks = match q_emb.as_deref() {
-                    Some(q) => {
-                        let (chunks, probe) = self.cluster.nodes[best].retrieve_hybrid(
-                            &kws,
-                            q,
-                            self.cfg.retrieve_k,
-                        );
-                        self.last_ann = probe;
-                        chunks
-                    }
-                    None => self.cluster.nodes[best].retrieve(&kws, self.cfg.retrieve_k),
-                };
-                let chars =
-                    self.cluster.nodes[best].retrieval_context_chars(&self.corpus, &chunks);
-                let community = chunks
-                    .iter()
-                    .any(|c| self.community_marked[best].contains(c));
-                let (hop, tier) = if best == edge_id {
-                    (0.0, TIER_LOCAL)
-                } else {
-                    (
-                        self.net.delay_ms(Link::EdgeToEdge(edge_id, best), step) / 1000.0,
-                        TIER_NEIGHBOR,
-                    )
-                };
-                (chunks, chars, community, hop, tier)
-            }
-            Retrieval::CloudGraph => {
-                let (chunks, chars) =
-                    self.cloud
-                        .retrieve_graph(&self.corpus, &kws, self.cfg.retrieve_k);
-                (chunks, chars, false, 0.0, TIER_CLOUD)
-            }
-        };
-
-        let qa = &self.corpus.qa[qa_id];
-        self.last_tier = tier;
-        self.last_hit = tier != TIER_NONE
-            && retrieved
-                .iter()
-                .any(|c| qa.supporting_chunks.contains(c));
-        if self.mode == KnowledgeMode::Collaborative {
-            // Demand signals feed hotness-aware placement + gossip.
-            self.cluster.observe_query(qa.topic, &retrieved, step);
-        }
-        let inputs = StrategyInputs {
-            arm,
-            retrieved,
-            context_chars,
-            community_content: community,
-            question_tokens: qa.length_tokens,
-            net_user_edge_s: self.net.delay_ms(Link::UserToEdge(edge_id), step) / 1000.0,
-            net_edge_edge_s: edge_edge_s,
-            net_edge_cloud_s: self.net.delay_ms(Link::EdgeToCloud(edge_id), step) / 1000.0,
-            edge_params_b: self.edge_params_b,
-            cloud_params_b: self.cloud_params_b,
-            rates: &self.rates,
-            cost: &self.cost,
-        };
-        let outcome = execute(inputs, &mut self.rng);
-
-        // --- grading ---
-        let capability = match arm.gen {
-            GenLoc::EdgeSlm => self.edge_capability,
-            GenLoc::CloudLlm => self.cloud_capability,
-        };
-        let correct = self.oracle.judge(
-            self.corpus.spec.profile,
-            qa,
-            capability,
-            &outcome.retrieved,
-            outcome.source,
-            step,
-        );
-
-        // --- adaptive knowledge update ---
-        match self.mode {
-            KnowledgeMode::Static => {}
-            KnowledgeMode::Adaptive => {
-                if let Some(plan) = self.cloud.record_query(&self.corpus, edge_id, qa_id) {
-                    // Paper-faithful direct FIFO push (seed semantics).
-                    self.cluster.nodes[plan.edge_id].apply_update(&self.corpus, &plan.chunks);
-                    let marked = &mut self.community_marked[plan.edge_id];
-                    for &c in &plan.chunks {
-                        marked.insert(c);
-                    }
-                }
-            }
-            KnowledgeMode::Collaborative => {
-                if let Some(plan) = self.cloud.record_query(&self.corpus, edge_id, qa_id) {
-                    // Versioned publication through the placement
-                    // engine; gossip spreads it onward from here.
-                    self.cluster.apply_cloud_update(&self.corpus, step, &plan);
-                    let marked = &mut self.community_marked[plan.edge_id];
-                    for &c in &plan.chunks {
-                        marked.insert(c);
-                    }
-                }
-            }
-        }
-
-        (outcome, correct)
+        pipeline::exec_query(self, qa_id, edge_id, step, arm, &mut pipeline::NullSink)
     }
 
-    /// Run a fixed-strategy baseline over a workload slice.
+    /// Run a fixed-strategy baseline over a workload slice. Stats fold
+    /// off the pipeline's event stream via [`StatsSink`].
     pub fn run_baseline(&mut self, workload: &Workload, arm: Arm) -> RunStats {
-        let mut stats = RunStats {
-            arm_counts: vec![0; 1],
-            ..Default::default()
-        };
+        let mut sink = StatsSink::new(1, false);
         let bytes0 = self.cluster.bytes_gossiped();
-        let mut correct_n = 0usize;
-        for ev in workload.events.clone() {
-            let (outcome, correct) = self.serve(ev.qa_id, ev.edge_id, ev.step, arm);
-            accumulate(
-                &mut stats,
-                &outcome,
+        for (i, ev) in workload.events.iter().enumerate() {
+            let (outcome, correct) =
+                pipeline::exec_query(self, ev.qa_id, ev.edge_id, ev.step, arm, &mut sink);
+            sink.emit(&StageEvent::QueryDone {
+                seq: i,
+                edge_id: ev.edge_id,
+                arrival_ms: 0.0,
+                outcome: &outcome,
                 correct,
-                &mut correct_n,
-                self.last_tier,
-                self.last_hit,
-                self.last_ann,
-            );
+                arm_idx: 0,
+                explored: false,
+                tier: self.last_tier,
+                hit: self.last_hit,
+                ann: self.last_ann,
+                store_empty: false,
+            });
         }
-        finalize(&mut stats, correct_n);
+        let mut stats = sink.finish();
         stats.bytes_replicated = self.cluster.bytes_gossiped() - bytes0;
         stats
     }
@@ -507,59 +359,41 @@ impl SimSystem {
     /// exploitation phase only (post-warm-up), matching Table 5's
     /// sensitivity to T₀. Returns (stats, gate) for inspection.
     pub fn run_eaco(&mut self, workload: &Workload) -> (RunStats, SafeObo) {
-        let (min_acc, max_delay) = self.cfg.qos.constraints_for(self.cfg.dataset);
-        let mut gate = SafeObo::new(
-            standard_arms(),
-            Qos {
-                min_accuracy: min_acc,
-                max_delay_s: max_delay,
-            },
-            self.cfg.warmup_steps,
-            self.cfg.beta,
-            self.cfg.seed,
-        );
-        let mut stats = RunStats {
-            arm_counts: vec![0; gate.arms.len()],
-            ..Default::default()
-        };
+        let mut gate = pipeline::build_gate(&self.cfg);
+        let mut sink = StatsSink::new(gate.arms.len(), true);
+        let policy = KnowledgePolicy::from_mode(self.mode);
         let bytes0 = self.cluster.bytes_gossiped();
-        let mut correct_n = 0usize;
-        for ev in workload.events.clone() {
+        for (i, ev) in workload.events.iter().enumerate() {
             // Run any due gossip round *before* building the gate
             // context, so the gate trains on the same store state the
-            // serve-time routing will see (serve's own maybe_gossip is
-            // then a no-op for this step).
-            if self.mode == KnowledgeMode::Collaborative {
-                self.cluster.maybe_gossip(&self.corpus, ev.step);
+            // serve-time routing will see (the pipeline's own pre-query
+            // gossip is then a no-op for this step).
+            if let Some(round) = policy.pre_query(&mut self.cluster, &self.corpus, ev.step) {
+                sink.emit(&StageEvent::GossipRound {
+                    step: ev.step,
+                    round: round.round,
+                    wire_bytes: round.wire_bytes(),
+                    version_lag: None,
+                });
             }
-            let ctx = self.gate_context(ev.qa_id, ev.edge_id, ev.step);
-            let decision = gate.decide(&ctx);
-            let arm = gate.arms[decision.arm_idx];
-            let (outcome, correct) = self.serve(ev.qa_id, ev.edge_id, ev.step, arm);
-            gate.observe(
-                &ctx,
-                decision.arm_idx,
-                Observation {
-                    resource_cost: outcome.resource_cost,
-                    delay_cost: outcome.delay_cost,
-                    accuracy: if correct { 1.0 } else { 0.0 },
-                    delay_s: outcome.delay_s,
-                },
+            let r = pipeline::gated_step(
+                self, &mut gate, ev.qa_id, ev.edge_id, ev.step, None, &mut sink,
             );
-            if !decision.explored {
-                stats.arm_counts[decision.arm_idx] += 1;
-                accumulate(
-                    &mut stats,
-                    &outcome,
-                    correct,
-                    &mut correct_n,
-                    self.last_tier,
-                    self.last_hit,
-                    self.last_ann,
-                );
-            }
+            sink.emit(&StageEvent::QueryDone {
+                seq: i,
+                edge_id: ev.edge_id,
+                arrival_ms: 0.0,
+                outcome: &r.outcome,
+                correct: r.correct,
+                arm_idx: r.arm_idx,
+                explored: r.explored,
+                tier: self.last_tier,
+                hit: self.last_hit,
+                ann: self.last_ann,
+                store_empty: false,
+            });
         }
-        finalize(&mut stats, correct_n);
+        let mut stats = sink.finish();
         stats.bytes_replicated = self.cluster.bytes_gossiped() - bytes0;
         (stats, gate)
     }
@@ -592,45 +426,6 @@ impl SimSystem {
             _ => None,
         }
     }
-}
-
-pub(crate) fn accumulate(
-    stats: &mut RunStats,
-    o: &Outcome,
-    correct: bool,
-    correct_n: &mut usize,
-    tier: usize,
-    tier_hit: bool,
-    ann: Option<AnnProbe>,
-) {
-    stats.queries += 1;
-    if correct {
-        *correct_n += 1;
-    }
-    stats.delay.push(o.delay_s);
-    stats.resource_cost.push(o.resource_cost);
-    stats.total_cost.push(o.total_cost);
-    stats.in_tokens.push(o.tokens.input);
-    stats.out_tokens.push(o.tokens.output);
-    stats.tier_queries[tier] += 1;
-    if tier_hit {
-        stats.tier_hits[tier] += 1;
-    }
-    if let Some(p) = ann {
-        stats.ann_queries += 1;
-        stats.ann_recall.push(p.recall_at_k);
-        if p.exact_fallback {
-            stats.ann_exact_fallbacks += 1;
-        }
-    }
-}
-
-pub(crate) fn finalize(stats: &mut RunStats, correct_n: usize) {
-    stats.accuracy = if stats.queries == 0 {
-        0.0
-    } else {
-        correct_n as f64 / stats.queries as f64
-    };
 }
 
 /// Convenience: workload spec matching a config.
