@@ -6,7 +6,7 @@
 CARGO ?= cargo
 
 # Perf-trajectory output name; bump per PR (BENCH_OUT=BENCH_PR<N>.json).
-BENCH_OUT ?= BENCH_PR9.json
+BENCH_OUT ?= BENCH_PR10.json
 
 .PHONY: build test ci bench-json bench-smoke chaos-trend artifacts
 

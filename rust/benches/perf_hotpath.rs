@@ -2,7 +2,7 @@
 //! real PJRT execution path (criterion substitute; see DESIGN.md §7).
 //!
 //! Measured here, tracked in EXPERIMENTS.md §Perf, and **emitted as a
-//! machine-readable trajectory file** (`BENCH_PR9.json` at the repo
+//! machine-readable trajectory file** (`BENCH_PR10.json` at the repo
 //! root — see `make bench-json`, `BENCH_OUT=` to override) so every
 //! future PR has a baseline to beat:
 //!   * gate decision latency vs GP observation count (target ≪ 1 ms)
@@ -26,6 +26,10 @@
 //!   * staged pipeline: `pipeline.serve 4edges` — the serve.drain
 //!     workload through the SafeOBO-gated `pipeline::gated_step` path
 //!     (gate decide/observe + retrieve + grade + update per query)
+//!   * adaptive feedback: `cluster.gossip_feedback 4edges` — the same
+//!     gated workload with `[cluster] feedback = "hit-rate"`, pricing
+//!     the closed loop (outcome folds + per-link budgets + blended
+//!     digest re-rank) against the `pipeline.serve 4edges` row
 //!   * dynamic batcher push/flush throughput
 //!   * PJRT LM forward (b1 vs b8 — batching amortization) and embedder
 //!     (skipped with a notice if artifacts/ is absent)
@@ -109,7 +113,7 @@ impl Report {
                 PathBuf::from(env!("CARGO_MANIFEST_DIR"))
                     .parent()
                     .expect("manifest dir has a parent")
-                    .join("BENCH_PR9.json")
+                    .join("BENCH_PR10.json")
             });
         let doc = Json::Arr(self.entries.clone());
         match std::fs::write(&out, doc.to_string() + "\n") {
@@ -430,6 +434,31 @@ fn bench_pipeline(report: &mut Report, drain_iters: usize) {
     report.push(&r);
 }
 
+/// The adaptive-feedback family: the pipeline.serve workload with
+/// `[cluster] feedback = "hit-rate"` — every query additionally folds
+/// its tier/hit verdict into the feedback counters and every gossip
+/// round computes per-link budgets + the blended digest re-rank.
+/// Compare against `pipeline.serve 4edges` to read the loop's share.
+fn bench_gossip_feedback(report: &mut Report, drain_iters: usize) {
+    let mut cfg = SystemConfig {
+        num_edges: 4,
+        edge_capacity: 200,
+        warmup_steps: 30,
+        ..SystemConfig::default()
+    };
+    cfg.cluster.feedback = eaco_rag::cluster::feedback::FeedbackMode::HitRate;
+    let r = bench(
+        "cluster.gossip_feedback 4edges (120-step gated workload, hit-rate budgets)",
+        drain_iters,
+        || {
+            let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+            let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 120), cfg.seed);
+            std::hint::black_box(sys.serve_async(&wl, Driver::Gated));
+        },
+    );
+    report.push(&r);
+}
+
 fn main() {
     println!("\n=== §Perf hot-path benchmarks ===\n");
     let full = std::env::var("EACO_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
@@ -448,6 +477,7 @@ fn main() {
         bench_serve(&mut report, 1, 1);
         bench_chaos(&mut report, 1, 1);
         bench_pipeline(&mut report, 1);
+        bench_gossip_feedback(&mut report, 1);
         report.write();
         return;
     }
@@ -564,6 +594,9 @@ fn main() {
 
     // --- staged pipeline: the gated end-to-end path ---
     bench_pipeline(&mut report, 5);
+
+    // --- adaptive feedback: the same path with hit-rate budgets ---
+    bench_gossip_feedback(&mut report, 5);
 
     // --- batcher throughput ---
     {

@@ -317,6 +317,20 @@ mod tests {
     }
 
     #[test]
+    fn empty_window_availability_is_one_not_nan() {
+        // Zero admitted queries (warm-up-only window, or a scenario
+        // that sheds at the queue before the probe sees anything) must
+        // not yield 0/0 = NaN — NaN silently passes `>=` SLA checks.
+        // Nothing was refused, so the window is fully available.
+        let p = ChaosProbe::new(2);
+        let out = p.outcome("idle", 0, 0, 0);
+        assert!(out.availability().is_finite());
+        assert_eq!(out.availability(), 1.0);
+        // Shed-only windows still read as a hard zero, not NaN.
+        assert_eq!(p.outcome("all-shed", 0, 7, 0).availability(), 0.0);
+    }
+
+    #[test]
     fn outcome_digest_is_stable_and_sensitive() {
         let (_c, cl) = cluster(2);
         let mut p = ChaosProbe::new(2);

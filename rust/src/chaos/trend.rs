@@ -63,7 +63,13 @@ pub fn regression(entries: &[Json]) -> Option<String> {
     if let (Some(a), Some(b)) =
         (po.get("availability").as_f64(), lo.get("availability").as_f64())
     {
-        if b < a - 1e-9 {
+        // NaN compares false against everything, so a malformed entry
+        // (hand-edited file, or a probe bug reintroducing 0/0) would
+        // sail through the `<` check; treat it as a regression instead
+        // of a silent pass.
+        if a.is_nan() || b.is_nan() {
+            problems.push(format!("availability is not a number ({a} -> {b})"));
+        } else if b < a - 1e-9 {
             problems.push(format!("availability dropped {a:.4} -> {b:.4}"));
         }
     }
@@ -166,6 +172,32 @@ mod tests {
         let doc = append(&append("", &report(30, 3, 2400.0)).unwrap(), &base).unwrap();
         let parsed = parse(&doc).unwrap();
         assert_eq!(regression(parsed.as_arr().unwrap()), None);
+    }
+
+    #[test]
+    fn nan_availability_is_a_regression_not_a_silent_pass() {
+        use crate::util::json::{num, obj, s, Json};
+        // `ChaosOutcome::availability()` can no longer emit NaN (empty
+        // windows report 1.0), so build the entries by hand — the trend
+        // file is plain JSON anyone can append to.
+        let entry = |avail: Json| {
+            obj(vec![
+                ("scenario", s("split-brain")),
+                ("pass", Json::Bool(true)),
+                ("outcome", obj(vec![("availability", avail)])),
+            ])
+        };
+        let good = entry(num(0.95));
+        let bad = entry(num(f64::NAN));
+        // NaN on the latest side: flagged, never a quiet pass.
+        let msg = regression(&[good.clone(), bad.clone()]).expect("NaN must regress");
+        assert!(msg.contains("availability"), "got {msg:?}");
+        // NaN on the previous side too — a drop *from* NaN is equally
+        // uncomparable and must not look like an improvement.
+        let msg = regression(&[bad, good.clone()]).expect("NaN must regress");
+        assert!(msg.contains("not a number"), "got {msg:?}");
+        // Sanity: two well-formed equal entries still pass.
+        assert_eq!(regression(&[good.clone(), good]), None);
     }
 
     #[test]

@@ -1,0 +1,366 @@
+//! Closed-loop gossip budgets learned from gate-observed hit rates.
+//!
+//! The paper's "adaptive knowledge update" is a *loop*: retrieval
+//! outcomes should steer what the edges replicate next, not just a
+//! static hot-k digest. Everything the loop needs already flows through
+//! the staged pipeline — `TierChosen` says which tier served a query
+//! and whether it hit, `QueryDone` closes it out, and every gossip
+//! round knows how many digest entries each link offered vs actually
+//! transferred. This module folds those signals into exponentially-
+//! decayed counters (the same lazy-decay cell discipline as
+//! [`super::hotness`] — value + last-touched step, decay applied on
+//! read, no sweeps) and answers two questions for the gossiper:
+//!
+//! * **How much should link `s→r` advertise?** A per-link hot-k budget
+//!   in `[min_hot_k, gossip_hot_k]`, scaled by the link's observed
+//!   digest usefulness (transferred/offered) — but floored back up by
+//!   the fleet's edge-tier *miss pressure*, so a fleet that is missing
+//!   a lot keeps replicating aggressively while a warmed-up fleet stops
+//!   paying full digest overhead on links that transfer nothing.
+//!   Unobserved (cold) links get the full budget: no evidence, no cut.
+//! * **Which chunks go first?** The digest re-ranks by blending raw
+//!   hotness with each chunk's decayed *hit contribution* (how often it
+//!   appeared in the retrieved set of a query that hit), so chunks that
+//!   demonstrably close queries outrank chunks that are merely probed.
+//!
+//! With `[cluster] feedback = "none"` none of this state exists and the
+//! gossip path is bit-identical to the static digest. All counters are
+//! folded at arrival processing in strict workload order (the same
+//! discipline as every [`crate::pipeline::StageSink`]), so the loop
+//! rides `serve_workload` without perturbing worker-count invariance,
+//! and it consumes no simulation RNG.
+
+use std::collections::HashMap;
+
+use crate::corpus::ChunkId;
+
+/// Tier indices mirror `sim::TIER_*` (none/local/neighbor/cloud).
+pub const NUM_TIERS: usize = 4;
+/// The local + neighbor tiers whose misses signal replication pressure.
+const EDGE_TIERS: [usize; 2] = [1, 2];
+
+/// Which feedback law drives the per-link gossip budgets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeedbackMode {
+    /// No learned state; gossip digests are the static hot-k ranking
+    /// (bit-identical to the pre-feedback plane). The default.
+    None,
+    /// Gate-observed hit rates drive per-link budgets and digest
+    /// re-ranking as described in the module docs.
+    HitRate,
+}
+
+impl FeedbackMode {
+    pub fn parse(s: &str) -> Option<FeedbackMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => Some(FeedbackMode::None),
+            "hit-rate" | "hit_rate" => Some(FeedbackMode::HitRate),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FeedbackMode::None => "none",
+            FeedbackMode::HitRate => "hit-rate",
+        }
+    }
+}
+
+/// One lazy-decay counter: decayed on read, bumped in place. Same
+/// contract as the private cell in [`super::hotness`], including the
+/// out-of-order clamp — replayed events at older steps must add mass,
+/// never amplify it.
+#[derive(Clone, Copy, Debug, Default)]
+struct Cell {
+    value: f64,
+    last_step: usize,
+}
+
+impl Cell {
+    fn decayed(&self, decay_per_step: f64, step: usize) -> f64 {
+        if self.value == 0.0 {
+            return 0.0;
+        }
+        let dt = step.saturating_sub(self.last_step).min(100_000) as i32;
+        self.value * decay_per_step.powi(dt)
+    }
+
+    fn bump(&mut self, decay_per_step: f64, step: usize, weight: f64) {
+        self.value = self.decayed(decay_per_step, step) + weight;
+        self.last_step = step.max(self.last_step);
+    }
+}
+
+/// Per-link digest accounting: entries offered vs entries that actually
+/// transferred, both decayed so a link's ancient history fades.
+#[derive(Clone, Copy, Debug, Default)]
+struct LinkCell {
+    offered: Cell,
+    used: Cell,
+}
+
+/// The learned feedback state one [`super::EdgeCluster`] owns.
+///
+/// Counters accumulate via [`FeedbackState::observe_query`] (fed from
+/// the pipeline's observe point, in strict workload order) and
+/// [`FeedbackState::observe_link`] (fed by the gossiper after each
+/// link's transfer pass); the gossiper reads them back through
+/// [`FeedbackState::link_budget`] and [`FeedbackState::blended_score`].
+#[derive(Clone, Debug)]
+pub struct FeedbackState {
+    decay_per_step: f64,
+    pub half_life_steps: f64,
+    /// Budget floor: no link's digest drops below this many entries.
+    pub min_hot_k: usize,
+    tier_hits: [Cell; NUM_TIERS],
+    tier_misses: [Cell; NUM_TIERS],
+    /// `links[s][r]`: digest usefulness of the directed link s→r.
+    links: Vec<Vec<LinkCell>>,
+    /// Decayed count of appearances in a *hitting* query's retrieved
+    /// set, per chunk.
+    chunk_hits: HashMap<ChunkId, Cell>,
+    /// Total queries folded (observability).
+    pub observations: u64,
+}
+
+impl FeedbackState {
+    pub fn new(num_edges: usize, half_life_steps: f64, min_hot_k: usize) -> FeedbackState {
+        let hl = half_life_steps.max(1.0);
+        FeedbackState {
+            decay_per_step: 0.5f64.powf(1.0 / hl),
+            half_life_steps: hl,
+            min_hot_k: min_hot_k.max(1),
+            tier_hits: [Cell::default(); NUM_TIERS],
+            tier_misses: [Cell::default(); NUM_TIERS],
+            links: vec![vec![LinkCell::default(); num_edges]; num_edges],
+            chunk_hits: HashMap::new(),
+            observations: 0,
+        }
+    }
+
+    /// Fold one served query: which tier answered, whether retrieval
+    /// hit, and (on a hit) which chunks were in the retrieved set.
+    pub fn observe_query(&mut self, tier: usize, hit: bool, retrieved: &[ChunkId], step: usize) {
+        self.observations += 1;
+        let t = tier.min(NUM_TIERS - 1);
+        if hit {
+            self.tier_hits[t].bump(self.decay_per_step, step, 1.0);
+            for &c in retrieved {
+                self.chunk_hits
+                    .entry(c)
+                    .or_default()
+                    .bump(self.decay_per_step, step, 1.0);
+            }
+        } else {
+            self.tier_misses[t].bump(self.decay_per_step, step, 1.0);
+        }
+    }
+
+    /// Fold one gossip link's round outcome: `offered` digest entries
+    /// shipped, `transferred` of them actually pulled by the receiver.
+    pub fn observe_link(&mut self, s: usize, r: usize, offered: u64, transferred: u64, step: usize) {
+        let Some(cell) = self.links.get_mut(s).and_then(|row| row.get_mut(r)) else {
+            return;
+        };
+        if offered > 0 {
+            cell.offered.bump(self.decay_per_step, step, offered as f64);
+        }
+        if transferred > 0 {
+            cell.used.bump(self.decay_per_step, step, transferred as f64);
+        }
+    }
+
+    /// Churn hook: an edge died/was wiped — its link history is no
+    /// longer evidence about the revived incarnation.
+    pub fn forget_edge(&mut self, e: usize) {
+        for (s, row) in self.links.iter_mut().enumerate() {
+            if s == e {
+                for c in row.iter_mut() {
+                    *c = LinkCell::default();
+                }
+            } else if let Some(c) = row.get_mut(e) {
+                *c = LinkCell::default();
+            }
+        }
+    }
+
+    /// Decayed hit rate of one tier; `None` until the tier has data.
+    pub fn tier_hit_rate(&self, tier: usize, step: usize) -> Option<f64> {
+        let t = tier.min(NUM_TIERS - 1);
+        let h = self.tier_hits[t].decayed(self.decay_per_step, step);
+        let m = self.tier_misses[t].decayed(self.decay_per_step, step);
+        if h + m < 1e-9 {
+            None
+        } else {
+            Some(h / (h + m))
+        }
+    }
+
+    /// Fraction of recent edge-tier (local + neighbor) traffic that
+    /// *missed* — the fleet-wide replication-pressure signal. 1.0 when
+    /// there is no evidence yet: an unobserved fleet replicates at full
+    /// budget rather than guessing it is warm.
+    pub fn edge_miss_pressure(&self, step: usize) -> f64 {
+        let mut hits = 0.0;
+        let mut misses = 0.0;
+        for t in EDGE_TIERS {
+            hits += self.tier_hits[t].decayed(self.decay_per_step, step);
+            misses += self.tier_misses[t].decayed(self.decay_per_step, step);
+        }
+        if hits + misses < 1e-9 {
+            1.0
+        } else {
+            misses / (hits + misses)
+        }
+    }
+
+    /// The learned digest budget for link `s→r`, in
+    /// `[min_hot_k, hot_k]`:
+    ///
+    /// ```text
+    /// drive  = max(transferred/offered on s→r, edge miss pressure)
+    /// budget = min_hot_k + round(drive · (hot_k − min_hot_k))
+    /// ```
+    ///
+    /// Cold links (no offers recorded) get the full `hot_k`.
+    pub fn link_budget(&self, s: usize, r: usize, hot_k: usize, step: usize) -> usize {
+        let Some(cell) = self.links.get(s).and_then(|row| row.get(r)) else {
+            return hot_k;
+        };
+        let offered = cell.offered.decayed(self.decay_per_step, step);
+        if offered < 1e-9 {
+            return hot_k;
+        }
+        let used = cell.used.decayed(self.decay_per_step, step);
+        let usefulness = (used / offered).clamp(0.0, 1.0);
+        let drive = usefulness.max(self.edge_miss_pressure(step)).clamp(0.0, 1.0);
+        let lo = self.min_hot_k.min(hot_k).max(1);
+        lo + ((hot_k - lo) as f64 * drive).round() as usize
+    }
+
+    /// Digest ranking score: raw hotness plus the chunk's decayed hit
+    /// contribution, so proven query-closers outrank merely-probed
+    /// chunks. Both terms are decayed unit-bump counters, so they share
+    /// a scale and the sum stays deterministic.
+    pub fn blended_score(&self, cid: ChunkId, hotness: f64, step: usize) -> f64 {
+        let contrib = self
+            .chunk_hits
+            .get(&cid)
+            .map(|c| c.decayed(self.decay_per_step, step))
+            .unwrap_or(0.0);
+        hotness + contrib
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feedback_mode_parse_roundtrip() {
+        for m in [FeedbackMode::None, FeedbackMode::HitRate] {
+            assert_eq!(FeedbackMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(FeedbackMode::parse("off"), Some(FeedbackMode::None));
+        assert_eq!(FeedbackMode::parse("HIT_RATE"), Some(FeedbackMode::HitRate));
+        assert_eq!(FeedbackMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn cold_state_gives_full_budget_and_pure_hotness_rank() {
+        let fb = FeedbackState::new(4, 100.0, 8);
+        assert_eq!(fb.link_budget(0, 1, 64, 10), 64);
+        assert_eq!(fb.edge_miss_pressure(10), 1.0);
+        assert_eq!(fb.tier_hit_rate(1, 10), None);
+        assert_eq!(fb.blended_score(5, 3.25, 10), 3.25);
+    }
+
+    #[test]
+    fn useless_links_shrink_to_the_floor_once_the_fleet_is_warm() {
+        let mut fb = FeedbackState::new(2, 100.0, 8);
+        // Warm fleet: edge tier hits everything → miss pressure ~ 0.
+        for _ in 0..50 {
+            fb.observe_query(1, true, &[], 10);
+        }
+        // Link 0→1 keeps offering but nothing transfers.
+        for _ in 0..10 {
+            fb.observe_link(0, 1, 64, 0, 10);
+        }
+        assert_eq!(fb.link_budget(0, 1, 64, 10), 8, "useless link at the floor");
+        // A link that transfers everything keeps the full budget.
+        fb.observe_link(1, 0, 64, 64, 10);
+        assert_eq!(fb.link_budget(1, 0, 64, 10), 64);
+    }
+
+    #[test]
+    fn miss_pressure_floors_budgets_back_up() {
+        let mut fb = FeedbackState::new(2, 100.0, 8);
+        // Useless link, but the fleet is missing half its edge traffic.
+        for _ in 0..20 {
+            fb.observe_query(1, true, &[], 10);
+            fb.observe_query(2, false, &[], 10);
+        }
+        fb.observe_link(0, 1, 64, 0, 10);
+        let b = fb.link_budget(0, 1, 64, 10);
+        // drive = max(0, 0.5) → 8 + round(0.5 · 56) = 36.
+        assert_eq!(b, 36, "miss pressure must override link uselessness");
+        assert!((fb.edge_miss_pressure(10) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budgets_stay_within_bounds_and_are_deterministic() {
+        let mut fb = FeedbackState::new(3, 50.0, 8);
+        for i in 0..200usize {
+            fb.observe_query(1 + i % 2, i % 3 != 0, &[i % 7], i);
+            fb.observe_link(i % 3, (i + 1) % 3, (i % 64) as u64, (i % 9) as u64, i);
+        }
+        for s in 0..3 {
+            for r in 0..3 {
+                let b = fb.link_budget(s, r, 64, 200);
+                assert!((8..=64).contains(&b), "budget {b} out of [8, 64]");
+                assert_eq!(b, fb.link_budget(s, r, 64, 200), "budget must be pure");
+            }
+        }
+        // min_hot_k above hot_k degrades gracefully to hot_k.
+        let tight = FeedbackState::new(2, 50.0, 100);
+        assert_eq!(tight.link_budget(0, 1, 16, 0), 16);
+    }
+
+    #[test]
+    fn hit_contribution_reranks_over_raw_hotness() {
+        let mut fb = FeedbackState::new(2, 100.0, 8);
+        // Chunk 3 closes queries; chunk 9 is probed but never helps.
+        for _ in 0..5 {
+            fb.observe_query(1, true, &[3], 20);
+        }
+        assert!(fb.blended_score(3, 1.0, 20) > fb.blended_score(9, 1.0, 20));
+        // Decay applies: far in the future the contribution fades out.
+        assert!(fb.blended_score(3, 1.0, 5000) < 1.0 + 1e-6);
+        assert_eq!(fb.tier_hit_rate(1, 20), Some(1.0));
+    }
+
+    #[test]
+    fn forget_edge_clears_both_directions() {
+        let mut fb = FeedbackState::new(3, 100.0, 8);
+        for _ in 0..10 {
+            fb.observe_query(1, true, &[], 5);
+            fb.observe_link(0, 1, 64, 0, 5);
+            fb.observe_link(1, 2, 64, 0, 5);
+        }
+        assert!(fb.link_budget(0, 1, 64, 5) < 64);
+        fb.forget_edge(1);
+        // Links into and out of edge 1 are cold again (full budget).
+        assert_eq!(fb.link_budget(0, 1, 64, 5), 64);
+        assert_eq!(fb.link_budget(1, 2, 64, 5), 64);
+    }
+
+    #[test]
+    fn out_of_order_observations_never_inflate() {
+        let mut fb = FeedbackState::new(2, 50.0, 8);
+        fb.observe_query(1, true, &[4], 100);
+        fb.observe_query(1, true, &[4], 40); // replay at an older step
+        // Two unit bumps read as exactly 2, never amplified.
+        assert!((fb.blended_score(4, 0.0, 100) - 2.0).abs() < 1e-12);
+    }
+}

@@ -150,6 +150,29 @@ mod tests {
     }
 
     #[test]
+    fn out_of_order_bump_never_inflates() {
+        // Fault replay / out-of-order serve events can bump a cell at a
+        // step *older* than its last touch. A signed dt would turn the
+        // decay into amplification (0.5^(1/hl) raised to a negative
+        // power > 1); the clamp must keep total mass bounded by the
+        // number of bumps.
+        let mut h = HotnessTracker::new(1, 50.0);
+        h.record_chunk(3, 100);
+        h.record_chunk(3, 50); // older than last_step
+        let now = h.chunk_hotness(3, 100);
+        assert!(
+            (now - 2.0).abs() < 1e-12,
+            "two unit bumps must read as exactly 2.0, got {now}"
+        );
+        // Same invariant for topics, with a bigger replay gap.
+        h.record_topic(0, 1000);
+        h.record_topic(0, 0);
+        assert!(h.topic_hotness(0, 1000) <= 2.0 + 1e-12);
+        // And decay still applies forward from the newest touch.
+        assert!((h.chunk_hotness(3, 150) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn out_of_range_topic_ignored() {
         let mut h = HotnessTracker::new(2, 10.0);
         h.record_topic(99, 0);

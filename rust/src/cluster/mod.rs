@@ -13,6 +13,10 @@
 //!   paper-faithful FIFO, hotness-aware LRU) with versioned chunks.
 //! * [`replicate`] — round-based delta gossip of hot chunks between
 //!   neighbors, making the cloud one publisher among peers.
+//! * [`feedback`] — closed-loop gossip budgets: gate-observed hit rates
+//!   and per-link digest usefulness learn how much each link should
+//!   advertise (`[cluster] feedback = "hit-rate"`; the default `none`
+//!   keeps the static plane bit-identical).
 //! * [`EdgeCluster`] — owns the [`EdgeNode`]s and routes each query to
 //!   local-or-best-neighbor via compact per-edge keyword summaries
 //!   (integer fingerprint probes, pre-hashed once per query).
@@ -20,6 +24,7 @@
 //! Everything is deterministic under virtual time; the sim's
 //! `KnowledgeMode::Collaborative` drives it end-to-end.
 
+pub mod feedback;
 pub mod hotness;
 pub mod placement;
 pub mod replicate;
@@ -33,6 +38,7 @@ use crate::edge::EdgeNode;
 use crate::index::keyword_sig;
 use crate::netsim::NetSim;
 
+use feedback::{FeedbackMode, FeedbackState};
 use hotness::HotnessTracker;
 use placement::PlacementEngine;
 use replicate::{Gossiper, VersionAuthority};
@@ -87,6 +93,10 @@ pub struct EdgeCluster {
     pub placement: PlacementEngine,
     pub gossiper: Gossiper,
     pub authority: VersionAuthority,
+    /// Learned gossip-budget state (`Some` iff `[cluster] feedback`
+    /// is not `"none"`); fed by the pipeline's observe point and the
+    /// gossiper's per-link outcomes, read back before each round.
+    pub feedback: Option<FeedbackState>,
     /// Serving-route observability, maintained by the serving loop for
     /// queries actually dispatched edge-assisted (gate-context probes
     /// call [`Self::route`] too and must not inflate these).
@@ -145,6 +155,14 @@ impl EdgeCluster {
                 },
             ),
             authority: VersionAuthority::new(num_chunks),
+            feedback: match cfg.feedback {
+                FeedbackMode::None => None,
+                FeedbackMode::HitRate => Some(FeedbackState::new(
+                    num_edges,
+                    cfg.hotness_half_life,
+                    cfg.min_hot_k,
+                )),
+            },
             routed_local: 0,
             routed_neighbor: 0,
             sig_buf: Vec::new(),
@@ -279,6 +297,17 @@ impl EdgeCluster {
         }
     }
 
+    /// Close the adaptive-knowledge loop for one served query: which
+    /// tier answered, whether retrieval hit, and the retrieved set.
+    /// No-op unless `[cluster] feedback` enabled the learned plane, so
+    /// the default path carries no extra state. Called by the pipeline
+    /// at its observe point — strict workload order on every driver.
+    pub fn observe_outcome(&mut self, tier: usize, hit: bool, retrieved: &[ChunkId], step: usize) {
+        if let Some(fb) = self.feedback.as_mut() {
+            fb.observe_query(tier, hit, retrieved, step);
+        }
+    }
+
     /// Apply a cloud knowledge push through the placement engine: the
     /// authority versions the publication and the engine admits/evicts
     /// per policy; the next gossip round picks the change up via the
@@ -316,13 +345,14 @@ impl EdgeCluster {
     /// staying bit-identical to the in-line cadence.
     pub fn run_gossip_round(&mut self, corpus: &Corpus, step: usize) -> GossipRound {
         let before = self.gossiper.stats;
-        self.gossiper.run_round(
+        self.gossiper.run_round_with(
             &self.topology,
             &mut self.nodes,
             &mut self.placement,
             &self.hotness,
             corpus,
             step,
+            self.feedback.as_mut(),
         );
         if self.ann_enabled {
             self.gossiper
@@ -384,6 +414,9 @@ impl EdgeCluster {
         }
         self.placement.forget_edge(e);
         self.gossiper.forget_edge(e);
+        if let Some(fb) = self.feedback.as_mut() {
+            fb.forget_edge(e);
+        }
         if self.ann_enabled {
             for row in self.centroid_known.iter_mut() {
                 row[e] = None;
@@ -423,6 +456,9 @@ impl EdgeCluster {
             }
             self.placement.forget_edge(e);
             self.gossiper.forget_edge(e);
+            if let Some(fb) = self.feedback.as_mut() {
+                fb.forget_edge(e);
+            }
             if self.ann_enabled {
                 for row in self.centroid_known.iter_mut() {
                     row[e] = None;

@@ -29,6 +29,7 @@
 use crate::corpus::{ChunkId, Corpus};
 use crate::edge::EdgeNode;
 
+use super::feedback::FeedbackState;
 use super::hotness::HotnessTracker;
 use super::placement::PlacementEngine;
 use super::topology::Topology;
@@ -188,6 +189,32 @@ impl Gossiper {
         corpus: &Corpus,
         step: usize,
     ) {
+        self.run_round_with(topo, nodes, placement, hot, corpus, step, None);
+    }
+
+    /// [`Self::run_round`] with an optional learned-feedback plane.
+    ///
+    /// With `feedback = None` this is the static protocol, bit-for-bit:
+    /// one hotness-ranked hot-k digest per sender, one full-digest
+    /// fingerprint shared by every link. With `Some(fb)` the digest is
+    /// re-ranked by [`FeedbackState::blended_score`] and each link ships
+    /// only its [`FeedbackState::link_budget`]-long prefix — suppression
+    /// fingerprints, byte accounting, and the offer loop all run over
+    /// that prefix, and the link's offered/transferred outcome is folded
+    /// back into the state (closing the loop). Feedback reads consume no
+    /// RNG, so rounds stay schedulable anywhere before the step's
+    /// retrieval exactly like the static plane.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_round_with(
+        &mut self,
+        topo: &Topology,
+        nodes: &mut [EdgeNode],
+        placement: &mut PlacementEngine,
+        hot: &HotnessTracker,
+        corpus: &Corpus,
+        step: usize,
+        mut feedback: Option<&mut FeedbackState>,
+    ) {
         self.round += 1;
         self.stats.rounds += 1;
         self.next_step = step + self.cfg.interval_steps.max(1);
@@ -198,11 +225,16 @@ impl Gossiper {
                 continue;
             }
             // Sender digest, once per round: hottest `hot_k` residents
-            // (ties → older first, then id — deterministic).
+            // (ties → older first, then id — deterministic). Under
+            // feedback the rank blends in per-chunk hit contribution.
             self.digest.clear();
             for cid in nodes[s].resident_chunks() {
                 let h = hot.chunk_hotness(cid, step);
-                self.digest.push((cid, placement.version_of(s, cid), h));
+                let score = match feedback.as_deref() {
+                    Some(fb) => fb.blended_score(cid, h, step),
+                    None => h,
+                };
+                self.digest.push((cid, placement.version_of(s, cid), score));
             }
             self.digest.sort_by(|a, b| {
                 b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&b.0))
@@ -212,27 +244,35 @@ impl Gossiper {
                 self.stats.digests_suppressed += neighbors.len() as u64;
                 continue;
             }
-            let fingerprint = self
-                .digest
-                .iter()
-                .fold(0u64, |acc, &(cid, ver, _)| acc ^ entry_fingerprint(cid, ver));
 
             for &r in neighbors {
                 debug_assert_ne!(r, s);
+                // Per-link advertisement: the budget-long prefix of the
+                // ranked digest (the whole digest when feedback is off).
+                let budget = match feedback.as_deref() {
+                    Some(fb) => {
+                        fb.link_budget(s, r, self.cfg.hot_k, step).min(self.digest.len())
+                    }
+                    None => self.digest.len(),
+                };
+                let link_digest = &self.digest[..budget.max(1)];
+                let fingerprint = link_digest
+                    .iter()
+                    .fold(0u64, |acc, &(cid, ver, _)| acc ^ entry_fingerprint(cid, ver));
                 if self.seen[r][s] == fingerprint {
                     self.stats.digests_suppressed += 1;
                     continue;
                 }
                 self.seen[r][s] = fingerprint;
                 self.stats.digests_sent += 1;
-                self.stats.digest_bytes += DIGEST_ENTRY_BYTES * self.digest.len();
+                self.stats.digest_bytes += DIGEST_ENTRY_BYTES * link_digest.len();
 
                 let pin_until = self.round + self.cfg.pin_rounds;
                 let round = self.round;
                 let mut offered = 0u64;
                 let mut transferred = 0u64;
                 let mut bytes = 0usize;
-                for &(cid, ver, _) in &self.digest {
+                for &(cid, ver, _) in link_digest {
                     offered += 1;
                     let missing = !nodes[r].contains(cid);
                     if missing || placement.version_of(r, cid) < ver {
@@ -253,6 +293,9 @@ impl Gossiper {
                 self.stats.chunks_offered += offered;
                 self.stats.chunks_transferred += transferred;
                 self.stats.bytes_transferred += bytes;
+                if let Some(fb) = feedback.as_deref_mut() {
+                    fb.observe_link(s, r, offered, transferred, step);
+                }
             }
         }
         placement.expire_pins(self.round);

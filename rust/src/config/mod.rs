@@ -126,6 +126,15 @@ pub struct ClusterConfig {
     pub pin_rounds: usize,
     /// Half-life (steps) of the popularity counters.
     pub hotness_half_life: f64,
+    /// Learned per-link gossip budgets
+    /// ([`crate::cluster::feedback`]): `none` (default — the static
+    /// hot-k digest, bit-identical to the pre-feedback plane) or
+    /// `hit-rate` (gate-observed hit rates + per-link digest usefulness
+    /// scale each link's advertisement).
+    pub feedback: crate::cluster::feedback::FeedbackMode,
+    /// Floor of the learned per-link digest budget; only meaningful
+    /// when `feedback` is not `none`.
+    pub min_hot_k: usize,
 }
 
 impl Default for ClusterConfig {
@@ -137,6 +146,8 @@ impl Default for ClusterConfig {
             gossip_hot_k: 64,
             pin_rounds: 2,
             hotness_half_life: 200.0,
+            feedback: crate::cluster::feedback::FeedbackMode::None,
+            min_hot_k: 8,
         }
     }
 }
@@ -421,6 +432,17 @@ impl SystemConfig {
             "cluster.hotness_half_life" => {
                 self.cluster.hotness_half_life = val.parse().map_err(|_| bad(key, val))?;
             }
+            "cluster.feedback" => {
+                self.cluster.feedback = crate::cluster::feedback::FeedbackMode::parse(val)
+                    .ok_or_else(|| bad(key, val))?;
+            }
+            "cluster.min_hot_k" => {
+                let k: usize = val.parse().map_err(|_| bad(key, val))?;
+                if k == 0 {
+                    return Err(bad(key, val));
+                }
+                self.cluster.min_hot_k = k;
+            }
             "ann.nlist" => self.ann.nlist = val.parse().map_err(|_| bad(key, val))?,
             "ann.nprobe" => self.ann.nprobe = val.parse().map_err(|_| bad(key, val))?,
             "ann.exact_below" => {
@@ -589,6 +611,8 @@ mod tests {
             gossip_hot_k = 16
             pin_rounds = 4
             hotness_half_life = 90.5
+            feedback = "hit-rate"
+            min_hot_k = 12
             "#,
         )
         .unwrap();
@@ -598,12 +622,23 @@ mod tests {
         assert_eq!(cfg.cluster.gossip_hot_k, 16);
         assert_eq!(cfg.cluster.pin_rounds, 4);
         assert_eq!(cfg.cluster.hotness_half_life, 90.5);
+        assert_eq!(cfg.cluster.feedback, crate::cluster::feedback::FeedbackMode::HitRate);
+        assert_eq!(cfg.cluster.min_hot_k, 12);
         assert!(SystemConfig::from_toml("[cluster]\nplacement = \"nope\"").is_err());
-        // Untouched default.
+        assert!(SystemConfig::from_toml("[cluster]\nfeedback = \"nope\"").is_err());
+        // A zero budget floor would let a link advertise nothing and
+        // wedge the suppression fingerprints; reject it at parse time.
+        assert!(SystemConfig::from_toml("[cluster]\nmin_hot_k = 0").is_err());
+        // Untouched defaults: feedback stays off (bit-identity).
         assert_eq!(
             SystemConfig::default().cluster.placement,
             PlacementPolicy::HotnessLru
         );
+        assert_eq!(
+            SystemConfig::default().cluster.feedback,
+            crate::cluster::feedback::FeedbackMode::None
+        );
+        assert_eq!(SystemConfig::default().cluster.min_hot_k, 8);
     }
 
     #[test]
@@ -674,6 +709,23 @@ mod tests {
         assert!(SystemConfig::from_toml("[serve]\nwfq_weights = \"a,b,c\"").is_err());
         // Default keeps strict priority.
         assert_eq!(SystemConfig::default().serve.wfq_weights, None);
+    }
+
+    #[test]
+    fn wfq_weights_reject_non_finite_at_parse_time() {
+        // Rust's f64 parser happily accepts "inf"/"nan", so without the
+        // explicit finiteness guard these would survive parsing and
+        // only blow up (or worse, silently misbehave) at queue
+        // construction. They must be a config error, not a runtime one.
+        for bad in ["inf,2,1", "4,inf,1", "nan,2,1", "4,2,NaN", "-inf,2,1", "1e999,2,1"] {
+            assert!(
+                SystemConfig::from_toml(&format!("[serve]\nwfq_weights = \"{bad}\"")).is_err(),
+                "wfq_weights = {bad:?} must be rejected at parse time"
+            );
+        }
+        // The guard must not over-reject ordinary float weights.
+        let cfg = SystemConfig::from_toml("[serve]\nwfq_weights = \"2.5, 1.5, 0.5\"").unwrap();
+        assert_eq!(cfg.serve.wfq_weights, Some([2.5, 1.5, 0.5]));
     }
 
     #[test]

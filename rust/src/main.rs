@@ -25,7 +25,8 @@ use eaco_rag::coordinator::Coordinator;
 use eaco_rag::corpus::Profile;
 use eaco_rag::runtime::Manifest;
 use eaco_rag::serve::Driver;
-use eaco_rag::sim::{workload_for, KnowledgeMode, SimSystem};
+use eaco_rag::cluster::feedback::FeedbackMode;
+use eaco_rag::sim::{workload_for, KnowledgeMode, SimSystem, TIER_LOCAL, TIER_NEIGHBOR};
 use eaco_rag::util::cli::Args;
 use eaco_rag::workload::Workload;
 
@@ -191,6 +192,32 @@ fn simulate(argv: Vec<String>) -> i32 {
         stats.bytes_replicated as f64 / 1024.0,
     );
     println!("         {}", stats.ann_row());
+    // The closed adaptive-knowledge loop: gate-observed tier hit rates
+    // drive per-link gossip budgets and digest re-ranking. Printed as a
+    // bytes / staleness / edge-tier-hit A/B against the fixed-budget
+    // eaco-cluster row above (same workload, same seed).
+    let cluster_bytes = stats.bytes_replicated;
+    let cluster_stale = stale;
+    let edge_hit = |s: &eaco_rag::sim::RunStats| {
+        let q = s.tier_queries[TIER_LOCAL] + s.tier_queries[TIER_NEIGHBOR];
+        let h = s.tier_hits[TIER_LOCAL] + s.tier_hits[TIER_NEIGHBOR];
+        if q == 0 { 0.0 } else { h as f64 / q as f64 * 100.0 }
+    };
+    let cluster_edge_hit = edge_hit(&stats);
+    let mut cfg_f = cfg.clone();
+    cfg_f.cluster.feedback = FeedbackMode::HitRate;
+    let mut sys = SimSystem::new(cfg_f.clone(), KnowledgeMode::Collaborative);
+    let wl = Workload::generate(&sys.corpus, workload_for(&cfg_f, steps), cfg_f.seed);
+    let (stats, _) = sys.run_eaco(&wl);
+    println!("{:>12}: {}", "eaco-feedback", stats.row());
+    let (stale_f, resident_f) = sys.cluster.staleness();
+    println!(
+        "         feedback: gossip {:.1} KiB (fixed {:.1} KiB) | staleness {stale_f}/{resident_f} (fixed {cluster_stale}/{resident}) | edge-tier hit {:.1}% (fixed {:.1}%)",
+        stats.bytes_replicated as f64 / 1024.0,
+        cluster_bytes as f64 / 1024.0,
+        edge_hit(&stats),
+        cluster_edge_hit,
+    );
     // The async serving plane over the same cluster: gated queries with
     // background gossip on 4 workers. Tier mix / hits / bytes stay
     // bit-identical to the synchronous row — only the latency model

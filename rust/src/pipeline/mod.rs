@@ -29,8 +29,9 @@
 //!
 //! Stages 2–7 are [`exec_query`]; [`gated_step`] wraps them with stage
 //! 4. Everything a driver wants to know about the run arrives as typed
-//! [`StageEvent`]s on a [`StageSink`] — `RunStats`, `ServeMetrics`, and
-//! `ChaosProbe` are three sinks over the one event stream.
+//! [`StageEvent`]s on a [`StageSink`] — `RunStats`, `ServeMetrics`,
+//! `ChaosProbe`, and `FeedbackSink` are four sinks over the one event
+//! stream.
 //!
 //! # Bit-identity
 //!
@@ -47,7 +48,7 @@ pub mod tier;
 
 pub use gate::build_gate;
 pub use policy::KnowledgePolicy;
-pub use sink::{NullSink, StageEvent, StageSink, StatsSink};
+pub use sink::{FeedbackSink, NullSink, StageEvent, StageSink, StatsSink};
 pub use tier::{Retrieved, TierCtx};
 
 use crate::corpus::QaId;
@@ -122,6 +123,11 @@ pub fn exec_query(
     if sys.mode == KnowledgeMode::Collaborative {
         // Demand signals feed hotness-aware placement + gossip.
         sys.cluster.observe_query(qa.topic, &r.chunks, step);
+        // Outcome signals close the adaptive-knowledge loop: the
+        // gate-observed tier/hit verdict drives per-link gossip
+        // budgets when `[cluster] feedback = "hit-rate"`. A no-op
+        // under the default `feedback = "none"`.
+        sys.cluster.observe_outcome(r.tier, sys.last_hit, &r.chunks, step);
     }
 
     // --- generate ---

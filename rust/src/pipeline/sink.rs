@@ -4,10 +4,13 @@
 //! admission verdicts, tier choices, recall probes, gossip rounds,
 //! fault applications, completions — and observers implement
 //! [`StageSink`] to fold that stream into whatever surface they own.
-//! The three built-in sinks are [`StatsSink`] (the `RunStats`
+//! The four built-in sinks are [`StatsSink`] (the `RunStats`
 //! accumulator shared by every driver), `ServeMetrics` (queueing
-//! observability; impl in [`crate::serve::metrics`]), and `ChaosProbe`
-//! (recovery/staleness probes; impl in [`crate::chaos::probe`]).
+//! observability; impl in [`crate::serve::metrics`]), `ChaosProbe`
+//! (recovery/staleness probes; impl in [`crate::chaos::probe`]), and
+//! [`FeedbackSink`] (an external fold of the adaptive-knowledge
+//! feedback counters — the live loop uses the cluster-owned copy fed
+//! from [`crate::pipeline::exec_query`]).
 //!
 //! Sinks are pure folds: they never touch the simulator, consume no
 //! RNG, and receive events in strict workload order regardless of the
@@ -154,6 +157,61 @@ impl StageSink for StatsSink {
     }
 }
 
+/// Folds tier outcomes, completions, and gossip rounds into a
+/// [`FeedbackState`](crate::cluster::feedback::FeedbackState) — the
+/// sink embodiment of the adaptive-knowledge loop's observer half.
+///
+/// The *live* loop (gate-observed hit rates driving per-link gossip
+/// budgets) uses the `EdgeCluster`-owned state fed at a fixed point in
+/// `exec_query`, because sinks are pure folds that must never mutate
+/// the simulator. This sink builds the identical counters from the
+/// event stream alone, so harnesses (A/B demos, chaos reports, offline
+/// analysis) can inspect what the loop *would* learn on any run —
+/// including `feedback = "none"` runs — without touching cluster
+/// state. `TierChosen` carries no chunk ids, so the per-chunk hit
+/// contribution stays empty here; tier hit/miss pressure and link
+/// usefulness are byte-for-byte the same arithmetic.
+pub struct FeedbackSink {
+    pub state: crate::cluster::feedback::FeedbackState,
+    /// Terminal completions folded (all arms, exploration included).
+    pub queries: u64,
+    /// Gossip rounds observed on the stream.
+    pub gossip_rounds: u64,
+    /// Total gossip wire bytes observed on the stream.
+    pub gossip_bytes: usize,
+}
+
+impl FeedbackSink {
+    pub fn new(num_edges: usize, half_life_steps: f64, min_hot_k: usize) -> FeedbackSink {
+        FeedbackSink {
+            state: crate::cluster::feedback::FeedbackState::new(
+                num_edges,
+                half_life_steps,
+                min_hot_k,
+            ),
+            queries: 0,
+            gossip_rounds: 0,
+            gossip_bytes: 0,
+        }
+    }
+}
+
+impl StageSink for FeedbackSink {
+    fn emit(&mut self, ev: &StageEvent<'_>) {
+        match ev {
+            StageEvent::TierChosen { step, tier, hit, .. } => {
+                self.state.observe_query(*tier, *hit, &[], *step);
+            }
+            StageEvent::QueryDone { .. } => self.queries += 1,
+            StageEvent::GossipRound { wire_bytes, .. } => {
+                self.gossip_rounds += 1;
+                self.gossip_bytes += wire_bytes;
+            }
+            _ => {}
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,6 +286,41 @@ mod tests {
         assert_eq!(stats.queries, 1);
         assert_eq!(stats.arm_counts[1], 1);
         assert!((stats.accuracy - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn feedback_sink_folds_tier_and_gossip_events() {
+        use crate::sim::TIER_NEIGHBOR;
+        let o = outcome();
+        let mut sink = FeedbackSink::new(4, 50.0, 2);
+        // Two local hits, one neighbor miss, at the same step.
+        sink.emit(&StageEvent::TierChosen { step: 10, edge_id: 0, tier: TIER_LOCAL, hit: true });
+        sink.emit(&StageEvent::TierChosen { step: 10, edge_id: 1, tier: TIER_LOCAL, hit: true });
+        sink.emit(&StageEvent::TierChosen {
+            step: 10,
+            edge_id: 2,
+            tier: TIER_NEIGHBOR,
+            hit: false,
+        });
+        sink.emit(&StageEvent::GossipRound {
+            step: 10,
+            round: 0,
+            wire_bytes: 96,
+            version_lag: None,
+        });
+        sink.emit(&done(&o, true, false));
+        assert_eq!(sink.queries, 1);
+        assert_eq!(sink.gossip_rounds, 1);
+        assert_eq!(sink.gossip_bytes, 96);
+        let local = sink.state.tier_hit_rate(TIER_LOCAL, 10).expect("observed tier");
+        assert!((local - 1.0).abs() < 1e-12);
+        let neighbor = sink.state.tier_hit_rate(TIER_NEIGHBOR, 10).expect("observed tier");
+        assert!(neighbor.abs() < 1e-12);
+        // 1 miss out of 3 edge-tier observations.
+        assert!((sink.state.edge_miss_pressure(10) - 1.0 / 3.0).abs() < 1e-9);
+        // Non-feedback events are ignored by the fold.
+        sink.emit(&StageEvent::Admitted { seq: 9 });
+        assert_eq!(sink.queries, 1);
     }
 
     #[test]

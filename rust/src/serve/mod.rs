@@ -37,6 +37,14 @@
 //!    ([`metrics::ServeMetrics::retrieved_digest`]).
 //!
 //! All three are asserted in `tests/serve_determinism.rs`.
+//!
+//! The adaptive-knowledge feedback loop (`[cluster] feedback =
+//! "hit-rate"`) inherits this argument for free: outcome observations
+//! feed the cluster-owned [`crate::cluster::feedback::FeedbackState`]
+//! inside `exec_query` — i.e. at arrival processing, in strict
+//! workload order — so learned per-link gossip budgets are invariant
+//! across `serve.workers` settings exactly like every other
+//! simulator mutation.
 
 pub mod clock;
 pub mod executor;

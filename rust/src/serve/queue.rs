@@ -206,6 +206,16 @@ impl EdgeQueue {
         debug_assert!(req.is_some());
         self.served[lane] += 1;
         self.popped += 1;
+        // Re-baseline the WFQ virtual-time counters whenever the queue
+        // fully drains: `served` is otherwise monotone for the queue's
+        // lifetime, so a lane that sat idle through a long busy stretch
+        // would re-enter with a stale low `served/weight` ratio and
+        // monopolize pops until it "caught up" on history it never
+        // competed for. An empty queue has no backlog to be fair
+        // across, so the reset cannot change any contended ordering.
+        if self.is_empty() {
+            self.served = [0; NUM_PRIORITIES];
+        }
         req
     }
 }
@@ -323,6 +333,31 @@ mod tests {
         // weights then round-robin high→low, FIFO inside each lane.
         let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|r| r.seq).collect();
         assert_eq!(order, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn wfq_rebaselines_after_full_drain_so_idle_lane_cannot_monopolize() {
+        let mut q = EdgeQueue::new_weighted(0, Some([4.0, 2.0, 1.0]));
+        // Long busy stretch with the low lane idle: lanes 0/1 accumulate
+        // served history while lane 2's counter stays at zero.
+        for seq in 0..60 {
+            assert!(q.push(req(seq, (seq % 2) as u8)));
+        }
+        while q.pop().is_some() {}
+        assert!(q.is_empty());
+        // Fresh burst across all lanes. Without the drain re-baseline
+        // the idle lane re-enters with a stale 0 ratio and takes every
+        // pop until it catches up (here: the first 7 pops would all be
+        // lane 2); with it, the weights apply from a clean slate.
+        for seq in 0..21 {
+            assert!(q.push(req(seq, (seq % 3) as u8)));
+        }
+        let mut lane_counts = [0usize; 3];
+        for _ in 0..7 {
+            let r = q.pop().unwrap();
+            lane_counts[(r.priority as usize).min(2)] += 1;
+        }
+        assert_eq!(lane_counts, [4, 2, 1], "WFQ counters must re-baseline on drain");
     }
 
     #[test]

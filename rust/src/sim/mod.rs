@@ -620,6 +620,33 @@ mod tests {
     }
 
     #[test]
+    fn collaborative_hit_rate_feedback_deterministic_and_learning() {
+        let mut cfg = small_cfg(Profile::Wiki);
+        cfg.num_edges = 6;
+        cfg.cluster.feedback = crate::cluster::feedback::FeedbackMode::HitRate;
+        let run = || {
+            let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+            let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 500), cfg.seed);
+            let arm = Arm { retrieval: Retrieval::EdgeAssisted, gen: GenLoc::EdgeSlm };
+            let stats = sys.run_baseline(&wl, arm);
+            (stats, sys)
+        };
+        let (sa, sys_a) = run();
+        let (sb, sys_b) = run();
+        assert_eq!(sa.queries, sb.queries);
+        assert_eq!(sa.tier_queries, sb.tier_queries);
+        assert_eq!(sa.tier_hits, sb.tier_hits);
+        assert_eq!(sa.bytes_replicated, sb.bytes_replicated);
+        assert!((sa.accuracy - sb.accuracy).abs() < 1e-12);
+        let fb = sys_a.cluster.feedback.as_ref().expect("hit-rate mode owns feedback state");
+        assert_eq!(fb.observations, sa.queries as u64, "every query feeds the loop");
+        assert_eq!(fb.observations, sys_b.cluster.feedback.as_ref().unwrap().observations);
+        // The default mode carries no learned state at all.
+        let plain = SimSystem::new(small_cfg(Profile::Wiki), KnowledgeMode::Collaborative);
+        assert!(plain.cluster.feedback.is_none());
+    }
+
+    #[test]
     fn collaborative_gate_sees_neighbor_signal() {
         let cfg = small_cfg(Profile::Wiki);
         let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);

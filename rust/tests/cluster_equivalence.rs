@@ -183,6 +183,47 @@ fn collaborative_gated_run_reproducible() {
 }
 
 // ---------------------------------------------------------------------------
+// (d) `feedback = "none"` is bit-identical to the pre-feedback gossiper
+// ---------------------------------------------------------------------------
+
+#[test]
+fn feedback_none_is_bit_identical_to_default_gossip_path() {
+    // `run_round_with(..., None)` must be byte-for-byte the fixed-budget
+    // path: same digest ordering, same per-link fingerprints, same
+    // suppression, same transfer set, same wire accounting. Run the
+    // default config (feedback defaults to None) against a config that
+    // sets it explicitly, and compare stats plus every gossip counter.
+    let run = |feedback: eaco_rag::cluster::feedback::FeedbackMode| {
+        let mut cfg = collab_cfg();
+        cfg.cluster.feedback = feedback;
+        let arm = eaco_rag::gating::Arm {
+            retrieval: Retrieval::EdgeAssisted,
+            gen: GenLoc::EdgeSlm,
+        };
+        let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+        let wl = Workload::generate(&sys.corpus, workload_for(&cfg, 800), cfg.seed);
+        let stats = sys.run_baseline(&wl, arm);
+        (stats, sys)
+    };
+    let (sa, sys_a) = run(eaco_rag::cluster::feedback::FeedbackMode::None);
+    let (sb, _) = run(ClusterConfig::default().feedback); // the default IS None
+    assert_stats_identical(&sa, &sb);
+    assert!(sys_a.cluster.feedback.is_none(), "feedback = none must carry no state");
+
+    // And the learned arm's bookkeeping never leaks into the none arm:
+    // every wire/observability counter matches across the two runs.
+    let (_, sys_b2) = run(eaco_rag::cluster::feedback::FeedbackMode::None);
+    let (ga, gb) = (&sys_a.cluster.gossiper.stats, &sys_b2.cluster.gossiper.stats);
+    assert_eq!(ga.rounds, gb.rounds);
+    assert_eq!(ga.digests_sent, gb.digests_sent);
+    assert_eq!(ga.digests_suppressed, gb.digests_suppressed);
+    assert_eq!(ga.chunks_offered, gb.chunks_offered);
+    assert_eq!(ga.chunks_transferred, gb.chunks_transferred);
+    assert_eq!(ga.bytes_transferred, gb.bytes_transferred);
+    assert_eq!(ga.digest_bytes, gb.digest_bytes);
+}
+
+// ---------------------------------------------------------------------------
 // Legacy modes still route through summaries — and match the seed path
 // ---------------------------------------------------------------------------
 

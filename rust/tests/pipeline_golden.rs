@@ -145,6 +145,59 @@ fn golden_digests_across_all_four_drivers() {
     }
 }
 
+/// Golden digest for the hit-rate feedback arm: the learned-budget
+/// gossip path gets the same drift tripwire as the default path. Both
+/// synchronous drivers run under `[cluster] feedback = "hit-rate"` and
+/// their digests are pinned in `tests/golden/feedback_digests.txt`
+/// (self-seeding, exactly like the main file). A `run_eaco` ≡
+/// `serve_async(Gated)` equivalence is asserted directly too, so the
+/// worker-order argument covers the feedback fold even on the seeding
+/// run.
+#[test]
+fn golden_digests_for_hit_rate_feedback_arm() {
+    let mut cfg = cfg();
+    cfg.cluster.feedback = eaco_rag::cluster::feedback::FeedbackMode::HitRate;
+    const STEPS: usize = 400;
+
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+    let wl = Workload::generate(&sys.corpus, workload_for(&cfg, STEPS), cfg.seed);
+    let baseline = sys.run_baseline(&wl, edge_assist());
+    assert!(
+        sys.cluster.feedback.as_ref().map(|f| f.observations).unwrap_or(0) > 0,
+        "hit-rate run never fed the loop"
+    );
+
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+    let (eaco, _) = sys.run_eaco(&wl);
+
+    let mut sys = SimSystem::new(cfg.clone(), KnowledgeMode::Collaborative);
+    let (serve_gated, _) = sys.serve_async(&wl, Driver::Gated);
+    assert_eq!(
+        stats_digest(&eaco),
+        stats_digest(&serve_gated),
+        "run_eaco and serve_async(Gated) diverged under hit-rate feedback"
+    );
+
+    let lines = format!(
+        "feedback_baseline {:016x}\nfeedback_eaco {:016x}\n",
+        stats_digest(&baseline),
+        stats_digest(&eaco),
+    );
+    let path = golden_path().with_file_name("feedback_digests.txt");
+    match std::fs::read_to_string(&path) {
+        Ok(golden) => assert_eq!(
+            golden, lines,
+            "hit-rate feedback digests drifted from {} — if the change \
+             is intentional, delete the file to re-baseline",
+            path.display()
+        ),
+        Err(_) => {
+            std::fs::write(&path, &lines).expect("seed feedback digest file");
+            eprintln!("(seeded {} — future runs compare against it)", path.display());
+        }
+    }
+}
+
 /// Records the `seq` of every `QueryDone` the observer sees.
 #[derive(Default)]
 struct SeqSink {
